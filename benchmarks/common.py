@@ -1,0 +1,35 @@
+"""Benchmark harness utilities: timing, CSV emission, v5e roofline constants."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+# TPU v5e hardware constants (assignment §Roofline)
+PEAK_BF16_FLOPS = 197e12          # per chip
+PEAK_INT8_OPS = 394e12            # 2x bf16 (the Tensorizer fast path)
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW = 50e9                     # bytes/s per link (~per direction)
+CHIPS_PER_POD = 256
+
+
+def time_fn(fn: Callable, *args, iters: int = 10, warmup: int = 2) -> float:
+    """Median-of-iters wall time per call in seconds (host, CPU backend)."""
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    """The assignment's CSV contract: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.2f},{derived}")

@@ -1,0 +1,40 @@
+"""Paper Fig. 5: GEMM lowering comparison — FullyConnected-blocked vs
+conv2D-strided vs fp32 reference, across sizes. On the Edge TPU conv2D won
+25x; on TPU/XLA the matmul path wins (DESIGN.md §2 inversion) — the benchmark
+demonstrates the measurement that drives the selector either way."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import gemm
+from benchmarks.common import emit, time_fn
+
+SIZES = (256, 512, 1024)
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    for n in SIZES:
+        a = jnp.asarray(rng.uniform(0, 8, (n, n)).astype(np.float32))
+        b = jnp.asarray(rng.uniform(0, 8, (n, n)).astype(np.float32))
+        exact = np.asarray(a, np.float64) @ np.asarray(b, np.float64)
+
+        t_fp = time_fn(lambda: a @ b, iters=5)
+        t_fc = time_fn(lambda: gemm.gemm_fully_connected(a, b), iters=5)
+        t_cv = time_fn(lambda: gemm.gemm_conv2d(a, b), iters=5)
+
+        for name, t, out in (
+            ("fp32", t_fp, np.asarray(a @ b)),
+            ("fully_connected", t_fc, np.asarray(gemm.gemm_fully_connected(a, b))),
+            ("conv2d", t_cv, np.asarray(gemm.gemm_conv2d(a, b))),
+        ):
+            rmse = float(np.sqrt(np.mean((out - exact) ** 2))
+                         / (exact.max() - exact.min()) * 100)
+            emit(f"fig5/gemm_{n}_{name}", t * 1e6,
+                 f"speedup_vs_fp32={t_fp / t:.3f};rmse_pct={rmse:.3f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,23 @@
+"""Paper Fig. 6: the seven applications — quantized GPETPU pipeline vs fp
+reference. Wall-clock on this CPU container is NOT the paper's CPU-vs-EdgeTPU
+comparison; the derived column therefore reports the v5e roofline advantage of
+the int8 path (2x MXU throughput + 2x fewer HBM bytes on the weight stream),
+which is what the dry-run measures structurally."""
+
+from __future__ import annotations
+
+from repro.apps import ALL, run_app
+from benchmarks.common import emit, PEAK_BF16_FLOPS, PEAK_INT8_OPS
+
+
+def run() -> None:
+    for name in sorted(ALL):
+        r = run_app(name, n=96, quantized=True)
+        v5e_gain = PEAK_INT8_OPS / PEAK_BF16_FLOPS   # compute-bound bound: 2x
+        emit(f"fig6/{name}", r.t_gptpu_s * 1e6,
+             f"mape_pct={r.mape_pct:.3f};rmse_pct={r.rmse_pct:.3f};"
+             f"v5e_int8_compute_gain={v5e_gain:.1f}x")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,56 @@
+"""Fig. 8 extended: the paper's multi-accelerator GEMM scaling, re-expressed
+at pod scale (256 chips) as a 2D-sharded GSPMD GEMM with the Tensorizer W8A8
+path per shard. Runs in a subprocess (needs 512 forced host devices); reports
+per-chip roofline terms and the compute-efficiency vs the ideal 2MNK/P split."""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+from benchmarks.common import emit
+
+_WORKER = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import json, jax
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_production_mesh
+from repro.core.distributed_gemm import dryrun_distributed_gemm
+
+mesh = make_production_mesh()
+with shd.use_mesh(mesh):
+    for quantized in (False, True):
+        r = dryrun_distributed_gemm(16384, 16384, 16384, quantized=quantized)
+        r["quantized"] = quantized
+        print(json.dumps(r))
+"""
+
+
+def run() -> None:
+    root = Path(__file__).resolve().parents[1]
+    env = dict(os.environ, PYTHONPATH=str(root / "src"))
+    r = subprocess.run([sys.executable, "-c", _WORKER], capture_output=True,
+                       text=True, env=env, timeout=560)
+    if r.returncode != 0:
+        emit("fig8pod/error", 0.0, f"err={r.stderr.strip()[-140:]}")
+        return
+    for line in r.stdout.strip().splitlines():
+        row = json.loads(line)
+        peak = 394e12 if row["quantized"] else 197e12
+        t_comp = row["flops_dev"] / peak
+        t_mem = row["bytes_dev"] / 819e9
+        t_coll = row["collective_bytes_dev"] / 50e9
+        eff = row["ideal_flops_dev"] / max(row["flops_dev"], 1e-9)
+        tag = "int8" if row["quantized"] else "fp32"
+        emit(f"fig8pod/gemm16k_{tag}_256chips",
+             max(t_comp, t_mem, t_coll) * 1e6,
+             f"t_comp={t_comp:.4f};t_mem={t_mem:.4f};t_coll={t_coll:.4f};"
+             f"useful={eff:.2f}")
+
+
+if __name__ == "__main__":
+    run()

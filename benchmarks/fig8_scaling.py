@@ -1,0 +1,63 @@
+"""Paper Fig. 8: task-queue scaling over 1..8 accelerators. The OPQ runtime
+distributes independent GEMM tasks over N devices; scaling is measured in a
+subprocess with N forced host devices (this process keeps its single real
+device — the dry-run rule)."""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+from benchmarks.common import emit
+
+_WORKER = r"""
+import os, sys, json, time
+n = int(sys.argv[1])
+os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
+import numpy as np
+import jax
+from repro.core import instr as I
+from repro.core.opq import OPQ, Buffer
+
+rng = np.random.default_rng(0)
+TASKS, SIZE = 16, 192
+bufs = [(Buffer(rng.uniform(0, 8, (SIZE, SIZE)).astype(np.float32)),
+         Buffer(rng.uniform(0, 8, (SIZE, SIZE)).astype(np.float32)))
+        for _ in range(TASKS)]
+q = OPQ()
+# warm the compile cache once per device
+for a, b in bufs[:1]:
+    q.invoke_operator(I.fully_connected_quant, a, b)
+q.sync()
+t0 = time.perf_counter()
+for a, b in bufs:
+    q.invoke_operator(I.fully_connected_quant, a, b)
+q.sync()
+dt = time.perf_counter() - t0
+q.shutdown()
+print(json.dumps({"n": n, "seconds": dt, "lanes": len(q.lanes)}))
+"""
+
+
+def run() -> None:
+    root = Path(__file__).resolve().parents[1]
+    env = dict(os.environ, PYTHONPATH=str(root / "src"))
+    base = None
+    for n in (1, 2, 4, 8):
+        r = subprocess.run([sys.executable, "-c", _WORKER, str(n)],
+                           capture_output=True, text=True, env=env, timeout=480)
+        if r.returncode != 0:
+            emit(f"fig8/devices_{n}", 0.0, f"error={r.stderr.strip()[-120:]}")
+            continue
+        row = json.loads(r.stdout.strip().splitlines()[-1])
+        if base is None:
+            base = row["seconds"]
+        emit(f"fig8/devices_{n}", row["seconds"] * 1e6,
+             f"speedup_vs_1dev={base / row['seconds']:.2f};lanes={row['lanes']}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,45 @@
+# One function per paper table. Prints ``name,us_per_call,derived`` CSV.
+"""Benchmark harness entry: one module per paper table/figure + the roofline.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table1,fig5,...]
+"""
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset: table1,fig5,fig6,table4,fig7,fig8,roofline")
+    args = ap.parse_args()
+    from benchmarks import fig5_gemm, fig6_apps, fig7_overflow, fig8_scaling
+    from benchmarks import fig8_podscale, roofline, table1_ops, table4_accuracy
+
+    suites = {
+        "table1": table1_ops.run,
+        "fig5": fig5_gemm.run,
+        "fig6": fig6_apps.run,
+        "table4": table4_accuracy.run,
+        "fig7": fig7_overflow.run,
+        "fig8": fig8_scaling.run,
+        "fig8pod": fig8_podscale.run,
+        "roofline": roofline.run,
+    }
+    sel = [s for s in args.only.split(",") if s] or list(suites)
+    print("name,us_per_call,derived")
+    failed = []
+    for name in sel:
+        try:
+            suites[name]()
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"# FAILED suites: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,17 @@
+"""Quantized serving example: the paper's technique as the LM serving fast
+path — Tensorizer W8A8 weights (half the decode-bandwidth), batched decode.
+
+    PYTHONPATH=src python examples/serve_quantized.py
+"""
+
+import sys
+
+from repro.launch.serve import main as serve_main
+
+
+if __name__ == "__main__":
+    sys.exit(serve_main([
+        "--arch", "qwen3-14b", "--smoke",
+        "--quantize", "serve",
+        "--requests", "4", "--prompt-len", "16", "--gen", "12",
+    ]))

@@ -1,0 +1,16 @@
+"""repro — GPTPU/GPETPU (Hsu & Tseng, SC'21) reproduced as a production JAX/TPU framework.
+
+The package layers, bottom-up:
+
+  kernels/      Pallas TPU kernels (int8 MXU matmul, stencil) with jnp oracles
+  core/         the paper's contribution: Tensorizer (range-calibrated int8
+                quantization, Eqs. 4-8), the GPETPU instruction set, instruction
+                selection, the OPQ/IQ task-queue runtime, tpuGemm
+  models/       the 10 assigned LM architectures (dense / MoE / SSM / hybrid /
+                enc-dec / VLM backbones) with train_step / serve_step
+  data/ optim/ checkpoint/ ft/ distributed/   substrate
+  configs/      one config per assigned architecture + paper apps
+  launch/       production mesh, multi-pod dry-run, train / serve drivers
+"""
+
+__version__ = "1.0.0"

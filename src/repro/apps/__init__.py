@@ -1,0 +1,9 @@
+"""The paper's seven applications (GPETPU §7), each with a GPETPU
+(Tensorizer-quantized) implementation and an fp reference, reporting the
+paper's accuracy metrics (MAPE / RMSE, Table 4).
+
+Registry:   apps.ALL  — name -> run(n, quantized=...) -> AppResult
+"""
+
+from repro.apps.common import ALL, AppResult, mape, rmse_pct, run_app  # noqa: F401
+from repro.apps import backprop, blackscholes, gaussian, gemm_app, hotspot3d, lud, pagerank  # noqa: F401

@@ -1,0 +1,57 @@
+"""Backprop (paper §7.2.5): plain-vanilla feedforward NN training step —
+FullyConnected layers + activation + tpuGemm for the weight-delta outer
+products + ``add`` for the update, per the paper's instruction mapping."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.apps.common import register
+from repro.core import instr as I
+from repro.core.gemm import tpu_gemm
+
+HIDDEN = 64
+LR = 0.1
+
+
+def _sigmoid(x):
+    return 1.0 / (1.0 + np.exp(-x))
+
+
+@register("backprop")
+def run(n: int, quantized: bool = True):
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(n, 16)).astype(np.float32)
+    y = (X.sum(axis=1, keepdims=True) > 0).astype(np.float32)
+    W1 = rng.normal(size=(16, HIDDEN)).astype(np.float32) * 0.5
+    W2 = rng.normal(size=(HIDDEN, 1)).astype(np.float32) * 0.5
+
+    def train_step_gptpu(W1, W2):
+        fc = I.fully_connected_quant if quantized else I.fully_connected_fp
+        gemm = (lambda a, b: tpu_gemm(a, b)) if quantized else (lambda a, b: a @ b)
+        Xj = jnp.asarray(X)
+        h = 1.0 / (1.0 + jnp.exp(-fc(Xj, jnp.asarray(W1))))
+        o = 1.0 / (1.0 + jnp.exp(-fc(h, jnp.asarray(W2))))
+        d_o = (o - y) * o * (1 - o)
+        d_h = fc(d_o, jnp.asarray(W2).T) * h * (1 - h)
+        gW2 = gemm(jnp.asarray(h).T, d_o) / n
+        gW1 = gemm(Xj.T, d_h) / n
+        W2n = I.sub_fp(jnp.asarray(W2), LR * gW2)      # update via add/sub
+        W1n = I.sub_fp(jnp.asarray(W1), LR * gW1)
+        return np.asarray(W1n), np.asarray(W2n)
+
+    W1g, W2g = train_step_gptpu(W1, W2)
+    out = np.concatenate([W1g.ravel(), W2g.ravel()]).astype(np.float64)
+
+    def ref():
+        h = _sigmoid(X @ W1)
+        o = _sigmoid(h @ W2)
+        d_o = (o - y) * o * (1 - o)
+        d_h = (d_o @ W2.T) * h * (1 - h)
+        gW2 = h.T @ d_o / n
+        gW1 = X.T @ d_h / n
+        return np.concatenate([(W1 - LR * gW1).ravel(),
+                               (W2 - LR * gW2).ravel()]).astype(np.float64)
+
+    return out, ref

@@ -1,0 +1,22 @@
+"""GEMM (paper §7.1): the tpuGemm library call vs fp reference."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.apps.common import register
+from repro.core.gemm import tpu_gemm
+
+
+@register("gemm")
+def run(n: int, quantized: bool = True):
+    # positive-range data per the paper's GEMM evaluation (Fig. 7: "1024x1024
+    # matrices with positive integers"); zero-mean data makes MAPE a
+    # cancellation metric rather than an accuracy one (RMSE covers that case)
+    rng = np.random.default_rng(0)
+    a = rng.uniform(0.0, 16.0, (n, n)).astype(np.float32)
+    b = rng.uniform(0.0, 16.0, (n, n)).astype(np.float32)
+    lowering = None if quantized else "fp32"
+    out = tpu_gemm(jnp.asarray(a), jnp.asarray(b), lowering=lowering)
+    return np.asarray(out), lambda: a.astype(np.float64) @ b.astype(np.float64)

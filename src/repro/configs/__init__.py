@@ -1,0 +1,33 @@
+"""Config registry: one module per assigned architecture (+ paper apps)."""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import ArchConfig, SHAPES, ShapeCfg, shape_by_name  # noqa: F401
+
+ARCH_IDS: List[str] = [
+    "moonshot_v1_16b_a3b",
+    "deepseek_moe_16b",
+    "seamless_m4t_medium",
+    "qwen2_vl_2b",
+    "granite_20b",
+    "qwen3_14b",
+    "starcoder2_15b",
+    "tinyllama_1_1b",
+    "zamba2_7b",
+    "xlstm_125m",
+]
+
+_ALIAS = {i.replace("_", "-"): i for i in ARCH_IDS}
+
+
+def get_config(arch: str) -> ArchConfig:
+    arch = arch.replace("-", "_").replace(".", "_")
+    mod = importlib.import_module(f"repro.configs.{arch}")
+    return mod.CONFIG
+
+
+def all_configs() -> Dict[str, ArchConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}

@@ -1,0 +1,179 @@
+"""Architecture / run configuration.
+
+One ``ArchConfig`` per assigned architecture lives in ``configs/<id>.py`` with
+the exact published hyper-parameters; ``smoke()`` derives the reduced-family
+config used by CPU tests. ``SHAPES`` defines the assigned input-shape set.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCfg:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                      # "train" | "prefill" | "decode"
+
+
+# The assigned LM shape set (identical across the 10 archs).
+SHAPES: Tuple[ShapeCfg, ...] = (
+    ShapeCfg("train_4k", 4096, 256, "train"),
+    ShapeCfg("prefill_32k", 32768, 32, "prefill"),
+    ShapeCfg("decode_32k", 32768, 128, "decode"),
+    ShapeCfg("long_500k", 524288, 1, "decode"),
+)
+
+
+def shape_by_name(name: str) -> ShapeCfg:
+    for s in SHAPES:
+        if s.name == name:
+            return s
+    raise KeyError(name)
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                    # dense | moe | hybrid | ssm | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    # ---- MoE ----
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    topk: int = 0
+    capacity_factor: float = 1.25
+    # ---- SSM / hybrid ----
+    ssm_state: int = 0
+    ssm_headdim: int = 64
+    ssm_expand: int = 2
+    ssm_chunk: int = 256
+    attn_every: int = 0            # zamba2: shared attn block period (0 = off)
+    # ---- features ----
+    head_dim: Optional[int] = None
+    qk_norm: bool = False
+    rope_kind: str = "rope"        # rope | mrope | none
+    mrope_sections: Tuple[int, int, int] = (16, 24, 24)
+    act: str = "swiglu"            # swiglu | gelu
+    norm: str = "rmsnorm"          # rmsnorm | layernorm
+    tie_embeddings: bool = False
+    rope_theta: float = 10000.0
+    # ---- enc-dec ----
+    n_enc_layers: int = 0          # >0 => encoder-decoder
+    enc_len_ratio: int = 4         # enc frames = seq_len // ratio (audio stub)
+    # ---- frontends (stubs per assignment) ----
+    input_mode: str = "tokens"     # tokens | embeds (vlm/audio backbones)
+    # ---- runtime / training ----
+    dtype: str = "bfloat16"
+    remat: bool = True
+    attn_chunk: int = 1024         # switch to online-softmax above this seq len
+    quantize: str = "off"          # off | serve  (Tensorizer W8A8 serving path)
+    param_dtype: str = "float32"   # float32 (train master) | bfloat16 (serving)
+    kv_cache_dtype: str = "bfloat16"  # bfloat16 | int8 (Tensorizer per-token KV quant)
+    sub_quadratic: bool = False    # True => long_500k decode is runnable
+    learning_rate: float = 3e-4
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    # ---- dry-run cost accounting ----
+    # XLA's HloCostAnalysis counts a while-loop body ONCE regardless of trip
+    # count, so scan-over-layers undercounts FLOPs by ~L x. The dry-run
+    # compiles reduced-depth UNROLLED variants (scan_unroll=True) to measure
+    # the exact per-layer marginal cost and extrapolates (launch/dryrun.py).
+    scan_unroll: bool = False
+    # ---- distribution knobs (hillclimbed in §Perf) ----
+    shard_heads: bool = True       # TP over heads (False => replicate attn, TP only FFN)
+    attn_impl: str = "f32"         # f32 | bf16acc (flash internals in bf16, f32 stats)
+    norm_dtype: str = "float32"    # float32 | bfloat16 — norm math dtype; bf16 keeps
+                                   # the backward activation all-reduces in bf16 (§Perf A4)
+    attn_sp: bool = False          # shard prefill queries over 'model' (SP attention
+                                   # for archs whose head count doesn't divide the axis)
+    zero1: bool = False            # shard optimizer state over data axis
+    grad_allreduce_dtype: str = "bfloat16"
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim if self.head_dim is not None else self.d_model // self.n_heads
+
+    @property
+    def vocab_padded(self) -> int:
+        """Embedding-table rows, padded to a 16-multiple so the vocab dim
+        shards evenly on the model axis (seamless's 256206 -> 256208).
+        Padded logit columns are masked to -inf in the head."""
+        return ((self.vocab + 15) // 16) * 16
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.n_enc_layers > 0
+
+    def replace(self, **kw) -> "ArchConfig":
+        return dataclasses.replace(self, **kw)
+
+    def smoke(self) -> "ArchConfig":
+        """Reduced same-family config for CPU smoke tests: small widths, few
+        layers/experts, tiny vocab — same code paths."""
+        return self.replace(
+            n_layers=min(self.n_layers, 4 if self.attn_every else 2),
+            n_enc_layers=min(self.n_enc_layers, 2),
+            d_model=64,
+            n_heads=4,
+            n_kv=min(self.n_kv, 2) if self.n_kv < self.n_heads else 4,
+            d_ff=128 if self.d_ff else 0,
+            vocab=256,
+            head_dim=16,
+            n_experts=min(self.n_experts, 4),
+            topk=min(self.topk, 2),
+            ssm_headdim=16 if self.ssm_state else self.ssm_headdim,
+            ssm_state=min(self.ssm_state, 16) if self.ssm_state else 0,
+            ssm_chunk=8,
+            attn_every=2 if self.attn_every else 0,
+            attn_chunk=16,
+            mrope_sections=(2, 3, 3),   # sums to head_dim/2 = 8
+        )
+
+    # ------------------------------------------------------------------
+    # analytics used by the roofline report
+    # ------------------------------------------------------------------
+
+    def param_count(self) -> int:
+        """Approximate parameter count (embedding + stacked blocks)."""
+        D, H, KV, hd, F, V, L = (self.d_model, self.n_heads, self.n_kv,
+                                 self.hd, self.d_ff, self.vocab, self.n_layers)
+        attn = D * H * hd + 2 * D * KV * hd + H * hd * D
+        if self.act == "swiglu":
+            mlp = 3 * D * F
+        else:
+            mlp = 2 * D * F
+        if self.family == "moe":
+            mlp = (self.n_experts + self.n_shared_experts) * mlp + D * self.n_experts
+        if self.family in ("ssm",):
+            di = self.ssm_expand * D
+            blk = 2 * (D * di) + di * (D)  # rough: in/out projections
+            per_layer = blk
+        elif self.family == "hybrid":
+            di = self.ssm_expand * D
+            nh = di // self.ssm_headdim
+            per_layer = D * (2 * di + 2 * self.ssm_state + nh) + di * D
+        else:
+            per_layer = attn + mlp
+        total = L * per_layer + V * D * (1 if self.tie_embeddings else 2)
+        if self.is_encdec:
+            total += self.n_enc_layers * (attn + mlp)
+        if self.attn_every:
+            total += attn + 3 * D * self.d_ff  # one shared attn+mlp block
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """Active (per-token) params — MoE uses topk+shared instead of all."""
+        if self.family != "moe":
+            return self.param_count()
+        D, F, L = self.d_model, self.d_ff, self.n_layers
+        mlp_all = (self.n_experts + self.n_shared_experts) * 3 * D * F
+        mlp_act = (self.topk + self.n_shared_experts) * 3 * D * F
+        return int(self.param_count() - L * (mlp_all - mlp_act))

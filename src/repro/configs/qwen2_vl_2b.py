@@ -1,0 +1,18 @@
+"""qwen2-vl-2b — VLM transformer backbone with M-RoPE (arXiv:2409.12191).
+
+28L d_model=1536 12H (GQA kv=2) d_ff=8960 vocab=151936. Dynamic-resolution
+vision frontend is a STUB: input_specs provides precomputed patch embeddings
++ 3D (t,h,w) position ids. mrope_section=(16,24,24) on head_dim=128.
+long_500k: SKIPPED (full attention). 12 heads are NOT divisible by the 16-way
+model axis — heads stay replicated, TP shards d_ff (shard_heads=False;
+revisited in §Perf).
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2-vl-2b",
+    family="vlm",
+    n_layers=28, d_model=1536, n_heads=12, n_kv=2, d_ff=8960, vocab=151936,
+    head_dim=128, rope_kind="mrope", mrope_sections=(16, 24, 24),
+    act="swiglu", input_mode="embeds", shard_heads=False,
+)

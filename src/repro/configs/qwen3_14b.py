@@ -1,0 +1,14 @@
+"""qwen3-14b — dense GQA with qk_norm (hf:Qwen/Qwen3 family).
+
+40L d_model=5120 40H (GQA kv=8) d_ff=17408 vocab=151936, head_dim=128.
+40 heads are NOT divisible by the 16-way model axis — GSPMD pads; §Perf
+hillclimbs this cell to head_dim-sharded attention.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen3-14b",
+    family="dense",
+    n_layers=40, d_model=5120, n_heads=40, n_kv=8, d_ff=17408, vocab=151936,
+    head_dim=128, qk_norm=True, act="swiglu", rope_kind="rope",
+)

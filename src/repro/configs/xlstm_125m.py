@@ -1,0 +1,16 @@
+"""xlstm-125m — sLSTM + mLSTM blocks (arXiv:2405.04517).
+
+12L (6 alternating mLSTM/sLSTM pairs) d_model=768 4H d_ff=0 vocab=50304.
+mLSTM trains in chunked (SSD-equivalent) form; sLSTM is a sequential scan
+(inherently recurrent — see DESIGN.md). O(1) decode state =>
+long_500k RUNS for this arch. 4 heads: shard_heads=False (TP on projections).
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="xlstm-125m",
+    family="ssm",
+    n_layers=12, d_model=768, n_heads=4, n_kv=4, d_ff=0, vocab=50304,
+    ssm_chunk=256, act="gelu", rope_kind="none", shard_heads=False,
+    sub_quadratic=True,
+)

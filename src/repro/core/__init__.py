@@ -1,0 +1,6 @@
+"""GPETPU core: Tensorizer, instruction set, instruction selection, OPQ runtime, tpuGemm."""
+
+from repro.core import gemm, instr, instr_select, opq, tensorizer  # noqa: F401
+from repro.core.gemm import tpu_gemm  # noqa: F401
+from repro.core.opq import OPQ, Buffer  # noqa: F401
+from repro.core.tensorizer import QTensor, dequantize, qdot, quantize  # noqa: F401

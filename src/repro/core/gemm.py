@@ -1,0 +1,131 @@
+"""tpuGemm — the paper's flagship library routine (GPETPU §7.1).
+
+Two complete lowerings of C = A @ B are provided, mirroring the paper:
+
+  * ``fully_connected`` — iterate mat-vec products / tiled matmul (paper §7.1.1);
+    on the Edge TPU this was the *slow* path (FullyConnected has 1/25 the RPS of
+    conv2D); on a real TPU the MXU matmul is the native fast path.
+  * ``conv2d`` — the paper's key algorithmic contribution (§7.1.2): reshape each
+    row of A into a ceil(sqrt(K))^2 patch, each column of B into a kernel of the
+    same shape, and run a *strided* convolution whose stride equals the patch
+    size, producing exactly the same multiply-accumulate set as GEMM.
+
+``instr_select`` chooses the lowering from the measured instruction cost table
+(benchmarks/table1_ops.py), reproducing the paper's measure-then-rewrite
+methodology; on TPU the ordering inverts (DESIGN.md §2) and matmul wins.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tensorizer as tz
+
+Lowering = Literal["fully_connected", "conv2d", "fp32"]
+
+
+# ---------------------------------------------------------------------------
+# FullyConnected lowering: 128-tile blocked int8 matmul, int32 accumulation
+# ---------------------------------------------------------------------------
+
+def gemm_fully_connected(a: jax.Array, b: jax.Array, *, use_kernel: bool = False) -> jax.Array:
+    """Blocked W8A8 GEMM (the paper's §7.1.1 path, with the blocking algorithm
+    of §6.2.1 'similar to [Dongarra & Sorensen]'): tiles are quantized with
+    per-tile scales, partials accumulate in wide precision."""
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2, (a.shape, b.shape)
+    t = tz.MXU_TILE
+    at = tz.partition(a, t)                       # (Mb, Kb, t, t)
+    bt = tz.partition(b, t)                       # (Kb, Nb, t, t)
+    # per-tile symmetric scales — the Tensorizer's blocked calibration
+    sa = tz.amax_calibrate(at, axis=(-1, -2))     # (Mb, Kb, 1, 1)
+    sb = tz.amax_calibrate(bt, axis=(-1, -2))     # (Kb, Nb, 1, 1)
+    qa = jnp.clip(jnp.round(at / sa), -tz.QMAX, tz.QMAX).astype(jnp.int8)
+    qb = jnp.clip(jnp.round(bt / sb), -tz.QMAX, tz.QMAX).astype(jnp.int8)
+
+    if use_kernel:
+        from repro.kernels import ops as kernel_ops
+
+        out_tiles = kernel_ops.qgemm_tiles(qa, sa, qb, sb)   # (Mb, Nb, t, t) f32
+    else:
+        # Per-(i,k,j) tile partial sums in int32 (wide accumulation), dequantized
+        # with the pair of per-tile scales, then reduced over k — exactly the
+        # paper's blocked algorithm with host-side wide aggregation.
+        partial_ikj = jnp.einsum(
+            "ikab,kjbc->ikjac", qa.astype(jnp.int32), qb.astype(jnp.int32),
+        )  # (Mb, Kb, Nb, t, t)
+        scaled = partial_ikj.astype(jnp.float32) * (
+            sa[:, :, None, :, :] * jnp.swapaxes(sb, 0, 1)[None, :, :, :, :]
+        )
+        out_tiles = jnp.sum(scaled, axis=1)       # (Mb, Nb, t, t) f32
+    return tz.reassemble(out_tiles, M, N)
+
+
+# ---------------------------------------------------------------------------
+# conv2D lowering (paper §7.1.2, Figure 4)
+# ---------------------------------------------------------------------------
+
+def _patch_layout(a: jax.Array) -> tuple[jax.Array, int, int]:
+    """Reshape each row of A (M,K) into an s x s patch, stacked vertically:
+    returns (M*s, s) 'image', with K zero-padded to s*s (paper: the kernel
+    matrix 'contains exactly the same or similar amount of elements')."""
+    M, K = a.shape
+    s = math.isqrt(K - 1) + 1 if K > 0 else 1     # ceil(sqrt(K))
+    ap = jnp.pad(a, [(0, 0), (0, s * s - K)])
+    return ap.reshape(M * s, s), s, s
+
+
+def gemm_conv2d(a: jax.Array, b: jax.Array, *, quantized: bool = True) -> jax.Array:
+    """GEMM lowered onto strided conv2D: stride (s, s) walks the patch grid so
+    each output element is exactly the GEMM dot product (Eq. 9 with stride)."""
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2
+    img, sx, sy = _patch_layout(a)                              # (M*sx, sy)
+    # each column of B becomes one kernel, padded to the same patch shape
+    kern = jnp.pad(b, [(0, sx * sy - K), (0, 0)]).reshape(sx, sy, 1, N)
+    if quantized:
+        qi, qk = tz.quantize(img), tz.quantize(kern)
+        x4 = qi.q[None, :, :, None]
+        out = jax.lax.conv_general_dilated(
+            x4, qk.q, window_strides=(sx, sy), padding="VALID",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            preferred_element_type=jnp.int32,
+        )[0, :, 0, :].astype(jnp.float32) * (qi.scale * qk.scale)
+    else:
+        x4 = img[None, :, :, None].astype(jnp.float32)
+        out = jax.lax.conv_general_dilated(
+            x4, kern.astype(jnp.float32), window_strides=(sx, sy), padding="VALID",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )[0, :, 0, :]
+    return out                                                   # (M, N)
+
+
+# ---------------------------------------------------------------------------
+# public entry
+# ---------------------------------------------------------------------------
+
+def tpu_gemm(
+    a: jax.Array,
+    b: jax.Array,
+    lowering: Lowering | None = None,
+    *,
+    use_kernel: bool = False,
+) -> jax.Array:
+    """The library GEMM (paper's ``tpuGemm``). ``lowering=None`` consults
+    :mod:`repro.core.instr_select` (measured cost table)."""
+    if lowering is None:
+        from repro.core import instr_select
+
+        lowering = instr_select.best_gemm_lowering()
+    if lowering == "fp32":
+        return a.astype(jnp.float32) @ b.astype(jnp.float32)
+    if lowering == "conv2d":
+        return gemm_conv2d(a, b)
+    return gemm_fully_connected(a, b, use_kernel=use_kernel)

@@ -1,0 +1,201 @@
+"""The GPETPU instruction set (paper Table 1) as JAX operations.
+
+Each instruction exists in two lowerings:
+
+  * ``fp``      — reference/bf16 semantics (what the host would compute);
+  * ``quant``   — Tensorizer-calibrated int8 semantics (what the Edge TPU
+                  executes; on v5e this is the int8-MXU fast path).
+
+The OPQ runtime dispatches these; ``instr_select`` picks lowerings; the paper's
+applications (§7.2) are written against this set exactly as OpenCtpu programs
+call ``openctpu_invoke_operator``.
+"""
+
+from __future__ import annotations
+
+import enum
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tensorizer as tz
+
+
+class Instr(enum.Enum):
+    CONV2D = "conv2D"
+    FULLY_CONNECTED = "FullyConnected"
+    SUB = "sub"
+    ADD = "add"
+    MUL = "mul"
+    CROP = "crop"
+    EXT = "ext"
+    MEAN = "mean"
+    MAX = "max"
+    TANH = "tanh"
+    RELU = "ReLu"
+
+
+# --------------------------------------------------------------------------
+# fp lowerings (the semantics; Table 1 "Description" column)
+# --------------------------------------------------------------------------
+
+def conv2d_fp(x: jax.Array, kernel: jax.Array, stride=(1, 1), padding="SAME") -> jax.Array:
+    """2D convolution (cross-correlation, NN convention) of a matrix by a kernel."""
+    x4 = x[None, :, :, None].astype(jnp.float32)           # NHWC
+    k4 = kernel[:, :, None, None].astype(jnp.float32)      # HWIO
+    out = jax.lax.conv_general_dilated(
+        x4, k4, window_strides=stride, padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return out[0, :, :, 0]
+
+
+def fully_connected_fp(v: jax.Array, w: jax.Array) -> jax.Array:
+    """Input vector (or batch of vectors) multiplies a weight matrix."""
+    return v.astype(jnp.float32) @ w.astype(jnp.float32)
+
+
+def add_fp(a, b):
+    return a + b
+
+def sub_fp(a, b):
+    return a - b
+
+def mul_fp(a, b):
+    return a * b
+
+def mean_fp(a):
+    return jnp.mean(a)
+
+def max_fp(a):
+    return jnp.max(a)
+
+def tanh_fp(a):
+    return jnp.tanh(a)
+
+def relu_fp(a):
+    return jnp.maximum(a, 0.0)
+
+crop_fp = tz.crop
+ext_fp = tz.ext
+
+
+# --------------------------------------------------------------------------
+# Quantized lowerings (Tensorizer semantics)
+# --------------------------------------------------------------------------
+
+def _pairwise_quant(op: Callable, kind: tz.OpKind):
+    """Pairwise int8 op with *sampled* output-range scaling (paper Eq. 4).
+
+    Eqs. 6-7 are the worst-case default bounds; §6.2.2 says the Tensorizer
+    "estimates the range of output values" from sampled input ranges — the
+    tight bounds below are exactly that estimate and remain overflow-proof:
+        add/sub:  |out| <= amax_a + amax_b
+        mul:      |out| <= amax_a * amax_b
+    """
+    def f(a: jax.Array, b: jax.Array) -> jax.Array:
+        amax_a = jnp.maximum(jnp.max(jnp.abs(a)), 1e-12)
+        amax_b = jnp.maximum(jnp.max(jnp.abs(b)), 1e-12)
+        bound = amax_a * amax_b if kind == tz.OpKind.MUL else amax_a + amax_b
+        S = 1.0 / bound                                       # Eq. 4
+        out = op(tz.fake_quantize(a, snap_integer=True),
+                 tz.fake_quantize(b, snap_integer=True))
+        # integer fast path: integer inputs with an in-range output bound stay
+        # exact end-to-end (scale snapped to 1 — paper Table 4's 0.00% rows)
+        both_int = (jnp.all(jnp.round(a) == a) & jnp.all(jnp.round(b) == b)
+                    & (bound <= tz.QMAX))
+        q = jnp.clip(jnp.round(out * S * tz.QMAX), -tz.QMAX, tz.QMAX)
+        return jnp.where(both_int, out, q / (S * tz.QMAX))
+    return f
+
+
+add_quant = _pairwise_quant(add_fp, tz.OpKind.ADD_SUB)
+sub_quant = _pairwise_quant(sub_fp, tz.OpKind.ADD_SUB)
+mul_quant = _pairwise_quant(mul_fp, tz.OpKind.MUL)
+
+
+def fully_connected_quant(v: jax.Array, w: jax.Array) -> jax.Array:
+    return tz.qdot(v, w)
+
+
+def conv2d_quant(x: jax.Array, kernel: jax.Array, stride=(1, 1), padding="SAME") -> jax.Array:
+    qx, qk = tz.quantize(x), tz.quantize(kernel)
+    x4 = qx.q[None, :, :, None].astype(jnp.int8)
+    k4 = qk.q[:, :, None, None].astype(jnp.int8)
+    out = jax.lax.conv_general_dilated(
+        x4, k4, window_strides=stride, padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=jnp.int32,
+    )
+    return out[0, :, :, 0].astype(jnp.float32) * (qx.scale * qk.scale)
+
+
+def _elementwise_quant(op: Callable):
+    def f(a: jax.Array) -> jax.Array:
+        return op(tz.fake_quantize(a))
+    return f
+
+
+tanh_quant = _elementwise_quant(tanh_fp)
+relu_quant = _elementwise_quant(relu_fp)
+
+
+def mean_quant(a: jax.Array) -> jax.Array:
+    """Matrix-wise op: 64x64 sub-matrix instructions + host-side aggregation
+    (paper §6.2.1: CPU aggregates because a second accelerator round-trip costs
+    more than the 4096x-reduced data)."""
+    t = tz.MATRIXWISE_TILE
+    tiles = tz.partition(a, t)  # zero-padding is accounted for by true-count
+    per_tile = jnp.sum(tz.fake_quantize(tiles), axis=(-1, -2))
+    return jnp.sum(per_tile) / a.size
+
+
+def max_quant(a: jax.Array) -> jax.Array:
+    t = tz.MATRIXWISE_TILE
+    neg = jnp.min(a) - 1.0
+    ap = jnp.pad(a, [(0, tz.round_up(a.shape[0], t) - a.shape[0]),
+                     (0, tz.round_up(a.shape[1], t) - a.shape[1])],
+                 constant_values=neg)
+    tiles = tz.partition(ap, t)
+    per_tile = jnp.max(tz.fake_quantize(tiles), axis=(-1, -2))
+    return jnp.max(per_tile)
+
+
+# --------------------------------------------------------------------------
+# Dispatch tables
+# --------------------------------------------------------------------------
+
+FP: Dict[Instr, Callable] = {
+    Instr.CONV2D: conv2d_fp,
+    Instr.FULLY_CONNECTED: fully_connected_fp,
+    Instr.ADD: add_fp,
+    Instr.SUB: sub_fp,
+    Instr.MUL: mul_fp,
+    Instr.CROP: crop_fp,
+    Instr.EXT: ext_fp,
+    Instr.MEAN: mean_fp,
+    Instr.MAX: max_fp,
+    Instr.TANH: tanh_fp,
+    Instr.RELU: relu_fp,
+}
+
+QUANT: Dict[Instr, Callable] = {
+    Instr.CONV2D: conv2d_quant,
+    Instr.FULLY_CONNECTED: fully_connected_quant,
+    Instr.ADD: add_quant,
+    Instr.SUB: sub_quant,
+    Instr.MUL: mul_quant,
+    Instr.CROP: crop_fp,   # shape ops are exact in either lowering
+    Instr.EXT: ext_fp,
+    Instr.MEAN: mean_quant,
+    Instr.MAX: max_quant,
+    Instr.TANH: tanh_quant,
+    Instr.RELU: relu_quant,
+}
+
+
+def invoke(instr: Instr, *args, quantized: bool = True, **kw):
+    """``openctpu_invoke_operator`` — execute one accelerator instruction."""
+    table = QUANT if quantized else FP
+    return table[instr](*args, **kw)

@@ -1,0 +1,320 @@
+"""Tensorizer — the paper's core contribution (GPETPU §6.2), adapted to TPU v5e.
+
+The Edge TPU forces *all* computation through an int8 128x128 systolic array, so
+GPETPU's Tensorizer does three jobs:
+
+  1. derive a *range-calibrated* scaling factor per operator (paper Eqs. 4-8) so
+     that quantized computation never overflows and stays within ~1% MAPE;
+  2. partition arbitrary-shape operations into instructions at the hardware's
+     optimal tile shape (128x128 int8);
+  3. accumulate partial results in *wider* precision than the accelerator's 8-bit
+     datapath (on the Edge TPU: host CPU registers; here: int32 inside the MXU /
+     fp32 in VMEM).
+
+On TPU v5e the same machinery is a 2x-throughput / 2x-bandwidth *optimization*
+(int8 MXU = 394 TOPS vs 197 TFLOP/s bf16; int8 weights = half the HBM bytes),
+selectable per-op, rather than a functional requirement. See DESIGN.md §2.
+
+Conventions
+-----------
+``QTensor.scale`` is the *dequantization* multiplier: ``x_hat = q * scale``.
+The paper's scaling factor ``S`` (Eqs. 4-8) is a *quantization* multiplier with
+values mapped into [-1, 1] (``q = round(x * S * 127)``), i.e. ``scale = 1/(S*127)``.
+``paper_scale_for`` returns S verbatim so the reproduction is auditable;
+``scale_from_paper_S`` converts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from functools import partial
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+QMAX = 127.0          # symmetric int8; -128 is excluded (paper uses +-127 range)
+MXU_TILE = 128        # Edge TPU *and* TPU v5e MXU are 128x128 systolic arrays
+MATRIXWISE_TILE = 64  # paper: mean/max favor 64x64 sub-matrices
+
+
+class OpKind(enum.Enum):
+    """Operator classes with distinct scaling rules (paper §6.2.2)."""
+
+    MATMUL = "matmul"          # conv2D / FullyConnected       (Eq. 5)
+    ADD_SUB = "add_sub"        # pair-wise add / sub           (Eq. 6)
+    MUL = "mul"                # pair-wise mul                 (Eq. 7)
+    ELEMENTWISE = "elementwise"  # tanh / relu / crop / ext / ...  (Eq. 8)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QTensor:
+    """A symmetric-int8 quantized tensor: ``x_hat = q.astype(f32) * scale``.
+
+    ``scale`` is a scalar (per-tensor) or broadcastable array (per-channel /
+    per-tile). ``meta_shape`` records the pre-padding logical shape so that the
+    Tensorizer's ``ext`` padding (paper §3.3) can be undone by ``crop``.
+    """
+
+    q: jax.Array
+    scale: jax.Array
+    meta_shape: Tuple[int, ...] = ()
+
+    def tree_flatten(self):
+        return (self.q, self.scale), (self.meta_shape,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        q, scale = children
+        return cls(q=q, scale=scale, meta_shape=aux[0])
+
+    @property
+    def shape(self):
+        return self.q.shape
+
+    def dequantize(self) -> jax.Array:
+        return self.q.astype(jnp.float32) * self.scale
+
+
+# ---------------------------------------------------------------------------
+# Paper scaling rules (Eqs. 4-8), verbatim.
+# ---------------------------------------------------------------------------
+
+def paper_scale_for(
+    op: OpKind,
+    lo: jax.Array,
+    hi: jax.Array,
+    n: Optional[int] = None,
+) -> jax.Array:
+    """Return the paper's scaling factor S for an operator given input range.
+
+    ``lo``/``hi`` are the (sampled) min / max of the input dataset; ``n`` is the
+    contraction dimension for MATMUL (paper Eq. 5 uses NxN inputs; we use the
+    actual contraction length, which is the quantity that bounds the output).
+
+    The rules guarantee ``|output| * S <= 1`` so the scaled output cannot
+    overflow the accelerator's representable range (paper: "GPETPU prevents the
+    case of overflow").
+    """
+    r = jnp.abs(hi - lo)
+    r = jnp.maximum(r, 1e-12)  # guard degenerate all-equal datasets
+    if op == OpKind.MATMUL:
+        if n is None:
+            raise ValueError("MATMUL scaling (Eq. 5) requires the contraction length n")
+        return 1.0 / (r * r * n)                      # Eq. 5
+    if op == OpKind.ADD_SUB:
+        return 1.0 / (2.0 * r)                        # Eq. 6
+    if op == OpKind.MUL:
+        return 1.0 / (r * r)                          # Eq. 7
+    return 1.0 / r                                    # Eq. 8 (elementwise & others)
+
+
+def scale_from_paper_S(S: jax.Array) -> jax.Array:
+    """Convert the paper's quantization multiplier S into a QTensor dequant scale."""
+    return 1.0 / (S * QMAX)
+
+
+# ---------------------------------------------------------------------------
+# Calibration + quantize / dequantize
+# ---------------------------------------------------------------------------
+
+def amax_calibrate(
+    x: jax.Array,
+    axis: Optional[Sequence[int]] = None,
+    keepdims: bool = True,
+) -> jax.Array:
+    """Absolute-max range calibration (the runtime part of Tensorizer §6.2.2).
+
+    Per-tensor when ``axis is None``; per-channel / per-tile otherwise. This is
+    a single O(bytes) reduction — the TPU analogue of the paper's 1.8 ms model
+    writer: cheap enough to run per-buffer at dispatch time.
+    """
+    amax = jnp.max(jnp.abs(x)) if axis is None else jnp.max(jnp.abs(x), axis=axis, keepdims=keepdims)
+    return jnp.maximum(amax, 1e-12) / QMAX
+
+
+def quantize(
+    x: jax.Array,
+    scale: Optional[jax.Array] = None,
+    axis: Optional[Sequence[int]] = None,
+    snap_integer: bool = False,
+) -> QTensor:
+    """Symmetric int8 quantization. ``scale`` defaults to amax calibration.
+
+    ``snap_integer``: when the data is already integer-valued with amax <= 127,
+    snap the scale to 1 so quantization is EXACT — this mirrors the Edge TPU
+    compiler's behavior on integer datasets and is how the paper's Gaussian /
+    LUD rows measure 0.00% error (Table 4).
+    """
+    x = x.astype(jnp.float32)
+    if scale is None:
+        scale = amax_calibrate(x, axis=axis)
+        if snap_integer:
+            is_int = jnp.all(jnp.round(x) == x) & (jnp.max(jnp.abs(x)) <= QMAX)
+            scale = jnp.where(is_int, jnp.ones_like(scale), scale)
+    q = jnp.clip(jnp.round(x / scale), -QMAX, QMAX).astype(jnp.int8)
+    return QTensor(q=q, scale=scale, meta_shape=tuple(x.shape))
+
+
+def dequantize(qt: QTensor) -> jax.Array:
+    return qt.dequantize()
+
+
+def fake_quantize(x: jax.Array, axis: Optional[Sequence[int]] = None,
+                  snap_integer: bool = False) -> jax.Array:
+    """quantize->dequantize roundtrip; the QAT / error-model building block."""
+    return dequantize(quantize(x, axis=axis, snap_integer=snap_integer))
+
+
+# ---------------------------------------------------------------------------
+# Wide-accumulation quantized contractions (the production path)
+# ---------------------------------------------------------------------------
+
+def qdot(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    per_channel: bool = True,
+    use_kernel: Optional[bool] = None,
+) -> jax.Array:
+    """W8A8 matmul with int32 accumulation and fused dequant: ``a @ b`` in int8.
+
+    ``a``: (..., M, K) activations, quantized per-tensor (amax).
+    ``b``: (K, N) weights, quantized per-output-channel when ``per_channel``.
+
+    int32 accumulation cannot overflow for K <= 2^31 / 127^2 ~= 133k — checked.
+    This mirrors the paper's "aggregate on wider CPU registers" (§6.2.1) with
+    the aggregation kept *inside* the MXU (DESIGN.md §2).
+
+    ``use_kernel=True`` routes through the Pallas qgemm kernel (TPU target);
+    default (None) uses the XLA int8 dot, which maps to the same MXU path.
+    """
+    K = a.shape[-1]
+    if K > (2**31) // (127 * 127):
+        raise ValueError(f"contraction dim {K} would overflow int32 accumulation")
+    qa = quantize(a)
+    qb = quantize(b, axis=(0,)) if per_channel else quantize(b)
+    if use_kernel:
+        from repro.kernels import ops as kernel_ops  # local import: kernels layer optional
+
+        acc = kernel_ops.qgemm_i32(qa.q, qb.q)
+    else:
+        acc = jax.lax.dot_general(
+            qa.q, qb.q,
+            dimension_numbers=(((a.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+    sb = qb.scale.reshape(-1) if per_channel else qb.scale  # (N,): rank-safe
+    return acc.astype(jnp.float32) * qa.scale * sb
+
+
+def qdot_paper(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    requantize_output: bool = False,
+) -> jax.Array:
+    """Paper-faithful GEMM quantization (Eq. 5 + §6.2.1 wide aggregation).
+
+    Inputs are quantized against their sampled range (amax); accumulation is
+    wide (int32 — the Edge TPU's host-CPU aggregation analogue), and Eq. 5's
+    output-range factor ``S`` *bounds* the accumulated magnitude, guaranteeing
+    the pipeline can never overflow — the property benchmarked against FBGEMM
+    in paper Fig. 7 (see benchmarks/fig7_overflow.py). Output requantization
+    to int8 against ``S`` happens only when the result feeds another on-device
+    instruction (``requantize_output=True``), which is where chained-op error
+    comes from.
+    """
+    lo = jnp.minimum(jnp.min(a), jnp.min(b))
+    hi = jnp.maximum(jnp.max(a), jnp.max(b))
+    K = a.shape[-1]
+    S = paper_scale_for(OpKind.MATMUL, lo, hi, n=K)
+    qa, qb = quantize(a), quantize(b, axis=(0,))
+    acc = jax.lax.dot_general(
+        qa.q, qb.q,
+        dimension_numbers=(((a.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    out = acc.astype(jnp.float32) * (qa.scale * qb.scale)
+    if requantize_output:
+        q_out = jnp.clip(jnp.round(out * S * QMAX), -QMAX, QMAX)
+        return q_out / (S * QMAX)
+    return out
+
+
+def qdot_naive_int8(a: jax.Array, b: jax.Array, input_range: float = 127.0) -> jax.Array:
+    """The FBGEMM-style strawman of paper Fig. 7: dtype-range int8, no output
+    calibration — saturates/overflows as value magnitudes grow. Used only by
+    benchmarks to reproduce the paper's RMSE blow-up."""
+    qa = jnp.clip(jnp.round(a), -QMAX, QMAX).astype(jnp.int8)
+    qb = jnp.clip(jnp.round(b), -QMAX, QMAX).astype(jnp.int8)
+    acc = jax.lax.dot_general(
+        qa, qb,
+        dimension_numbers=(((a.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    # emulate a 16-bit requantized output pipeline (no range awareness)
+    return jnp.clip(acc, -(2**15), 2**15 - 1).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Tile partitioning (paper §6.2.1 "mapping operators into instructions")
+# ---------------------------------------------------------------------------
+
+def round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def ext(x: jax.Array, row_mult: int = MXU_TILE, col_mult: int = MXU_TILE) -> jax.Array:
+    """Pad a matrix to tile-aligned dimensionality (the paper's ``ext`` instruction)."""
+    r, c = x.shape[-2], x.shape[-1]
+    pad = [(0, 0)] * (x.ndim - 2) + [(0, round_up(r, row_mult) - r), (0, round_up(c, col_mult) - c)]
+    return jnp.pad(x, pad)
+
+
+def crop(x: jax.Array, rows: int, cols: int) -> jax.Array:
+    """Remove padding, returning the logical sub-matrix (the paper's ``crop``)."""
+    return x[..., :rows, :cols]
+
+
+def partition(x: jax.Array, tile: int = MXU_TILE) -> jax.Array:
+    """(R, C) -> (R/t, C/t, t, t) grid of MXU tiles (pads first)."""
+    xp = ext(x, tile, tile)
+    R, C = xp.shape[-2], xp.shape[-1]
+    g = xp.reshape(*xp.shape[:-2], R // tile, tile, C // tile, tile)
+    return jnp.swapaxes(g, -3, -2)
+
+def reassemble(tiles: jax.Array, rows: int, cols: int) -> jax.Array:
+    """Inverse of :func:`partition` followed by :func:`crop`."""
+    g = jnp.swapaxes(tiles, -3, -2)
+    t = g.shape[-1]
+    x = g.reshape(*g.shape[:-4], g.shape[-4] * t, g.shape[-2] * t)
+    return crop(x, rows, cols)
+
+
+# ---------------------------------------------------------------------------
+# Serving-time weight quantization (first-class framework integration)
+# ---------------------------------------------------------------------------
+
+def quantize_params(params, predicate=None):
+    """Quantize every >=2D floating-point leaf of a param pytree to QTensor.
+
+    This is the W8A8 serving path: weights live in HBM as int8 (half the
+    memory-roofline bytes of bf16 — the measured §Perf win), activations are
+    quantized per-dispatch by qdot. ``predicate(path, leaf) -> bool`` can
+    exclude sensitive leaves (norm scales, SSM recurrence params...).
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        quantizable = (
+            hasattr(leaf, "ndim") and leaf.ndim >= 2
+            and jnp.issubdtype(leaf.dtype, jnp.floating)
+            and (predicate is None or predicate(path, leaf))
+        )
+        # per-output-channel scales: reduce over the contraction dim (-2),
+        # keeping any leading stacked-layer / expert axes (scan-compatible)
+        out.append(quantize(leaf, axis=(-2,)) if quantizable else leaf)
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,1 @@
+from repro.data.pipeline import SyntheticLM, TokenFileDataset, make_dataset  # noqa: F401

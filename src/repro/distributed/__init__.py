@@ -1,0 +1,11 @@
+"""Distribution layer: mesh context, sharding rules, collective helpers."""
+
+from repro.distributed.sharding import (  # noqa: F401
+    batch_axes,
+    batch_spec,
+    current_mesh,
+    data_parallel_size,
+    model_axis,
+    set_mesh,
+    with_sharding,
+)

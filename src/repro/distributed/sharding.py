@@ -1,0 +1,111 @@
+"""Sharding rules: logical roles -> mesh axes, for any of the three meshes.
+
+Meshes (launch/mesh.py):
+  smoke       (1,)            ("data",)                     CPU tests
+  single-pod  (16, 16)        ("data", "model")             256 chips
+  multi-pod   (2, 16, 16)     ("pod", "data", "model")      512 chips
+
+Roles:
+  batch      -> ("pod","data")  hierarchical DP (intra-pod ICI reduce-scatter,
+                                inter-pod DCI all-reduce — GSPMD derives it)
+  model-dim  -> "model"         TP: attention heads / d_ff / vocab / experts (EP)
+  sequence   -> "data"          SP for long-context KV caches (decode cells)
+
+The mesh is carried in a module-level context so model code never takes a mesh
+parameter; tests and launchers call ``set_mesh``/``use_mesh``.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_MESH: Optional[Mesh] = None
+
+
+def set_mesh(mesh: Optional[Mesh]) -> None:
+    global _MESH
+    _MESH = mesh
+
+
+def current_mesh() -> Mesh:
+    if _MESH is None:
+        raise RuntimeError("no mesh set — call distributed.set_mesh(...) or use_mesh(...)")
+    return _MESH
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh):
+    global _MESH
+    prev = _MESH
+    _MESH = mesh
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        _MESH = prev
+
+
+def axis_names() -> Tuple[str, ...]:
+    return tuple(current_mesh().axis_names)
+
+
+def batch_axes() -> Tuple[str, ...]:
+    """Axes the batch dimension shards over (pod+data when present)."""
+    return tuple(a for a in ("pod", "data") if a in axis_names())
+
+
+def model_axis() -> Optional[str]:
+    return "model" if "model" in axis_names() else None
+
+
+def seq_axis() -> Optional[str]:
+    """Axis used for sequence sharding of long KV caches (SP)."""
+    return "data" if "data" in axis_names() else None
+
+
+def data_parallel_size() -> int:
+    m = current_mesh()
+    n = 1
+    for a in batch_axes():
+        n *= m.shape[a]
+    return n
+
+
+def model_parallel_size() -> int:
+    m = current_mesh()
+    a = model_axis()
+    return m.shape[a] if a else 1
+
+
+def batch_spec(*trailing) -> P:
+    """P((pod,data), *trailing) — the activation batch sharding."""
+    ax = batch_axes()
+    lead = ax if len(ax) > 1 else (ax[0] if ax else None)
+    return P(lead, *trailing)
+
+
+def with_sharding(x, spec: P):
+    """``lax.with_sharding_constraint`` against the current mesh (no-op when
+    the spec refers to axes the mesh doesn't have)."""
+    mesh = current_mesh()
+    names = set(mesh.axis_names)
+
+    def scrub(entry):
+        if entry is None:
+            return None
+        if isinstance(entry, (tuple, list)):
+            kept = tuple(e for e in entry if e in names)
+            return kept if kept else None
+        return entry if entry in names else None
+
+    spec = P(*(scrub(e) for e in spec))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def shard(x, spec: P):
+    """device_put with a NamedSharding on the current mesh."""
+    return jax.device_put(x, NamedSharding(current_mesh(), spec))

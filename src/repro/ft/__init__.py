@@ -1,0 +1,1 @@
+from repro.ft.monitor import HeartbeatMonitor, plan_elastic_mesh  # noqa: F401

@@ -1,0 +1,104 @@
+"""Fault tolerance: failure detection, elastic re-mesh planning, restart policy.
+
+At 1000+ nodes the failure model is: a host stops heartbeating (hardware,
+preemption) or straggles (thermal, network). The control loop is:
+
+  1. ``HeartbeatMonitor`` detects missing/late heartbeats (tests inject them);
+  2. ``plan_elastic_mesh`` computes the largest valid (data, model) mesh from
+     the surviving hosts — model-parallel degree is preserved (params must
+     still fit), the data axis shrinks to the surviving multiple;
+  3. the driver (launch/train.py) rebuilds the mesh, re-shards from the last
+     checkpoint (checkpoint/store.py loads onto any mesh), restores the data
+     iterator state, and resumes; the global batch is kept constant by raising
+     per-host accumulation (``grad_accum``) when the data axis shrank.
+
+Straggler mitigation for *collective* training (distinct from the OPQ
+backup-task policy, which covers independent tasks): the monitor tracks
+per-host step latencies and flags hosts whose EMA exceeds
+``straggler_factor`` x median, so the driver can evict them at the next
+checkpoint boundary rather than letting one slow host gate every all-reduce.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclasses.dataclass
+class HostState:
+    last_beat: float
+    step_ema_s: float = 0.0
+    beats: int = 0
+
+
+class HeartbeatMonitor:
+    def __init__(self, hosts: List[str], *, timeout_s: float = 60.0,
+                 straggler_factor: float = 3.0, clock=time.monotonic):
+        self._clock = clock
+        self.timeout_s = timeout_s
+        self.straggler_factor = straggler_factor
+        now = self._clock()
+        self.hosts: Dict[str, HostState] = {h: HostState(last_beat=now) for h in hosts}
+
+    def beat(self, host: str, step_latency_s: Optional[float] = None) -> None:
+        st = self.hosts[host]
+        st.last_beat = self._clock()
+        st.beats += 1
+        if step_latency_s is not None:
+            st.step_ema_s = (0.8 * st.step_ema_s + 0.2 * step_latency_s
+                             if st.beats > 1 else step_latency_s)
+
+    def dead_hosts(self) -> List[str]:
+        now = self._clock()
+        return [h for h, st in self.hosts.items()
+                if now - st.last_beat > self.timeout_s]
+
+    def stragglers(self) -> List[str]:
+        lat = sorted(st.step_ema_s for st in self.hosts.values() if st.step_ema_s > 0)
+        if not lat:
+            return []
+        median = lat[len(lat) // 2]
+        return [h for h, st in self.hosts.items()
+                if st.step_ema_s > self.straggler_factor * max(median, 1e-9)]
+
+    def healthy_hosts(self) -> List[str]:
+        bad = set(self.dead_hosts()) | set(self.stragglers())
+        return [h for h in self.hosts if h not in bad]
+
+
+def plan_elastic_mesh(
+    n_surviving_hosts: int,
+    chips_per_host: int,
+    model_parallel: int,
+    *,
+    old_data_parallel: int,
+    global_batch: int,
+) -> Dict:
+    """Largest valid mesh from the survivors + the accumulation factor that
+    keeps the global batch constant.
+
+    Model-parallel degree is fixed (a model shard must fit in HBM exactly as
+    before); the data axis becomes the largest divisor-friendly size.
+    """
+    chips = n_surviving_hosts * chips_per_host
+    if chips < model_parallel:
+        raise RuntimeError(
+            f"not enough chips ({chips}) for model_parallel={model_parallel}")
+    new_dp = chips // model_parallel
+    # keep global batch: per-replica microbatch must divide it
+    while new_dp > 0 and global_batch % new_dp != 0:
+        new_dp -= 1
+    if new_dp == 0:
+        raise RuntimeError("no valid data-parallel size for the global batch")
+    grad_accum = max(1, old_data_parallel // new_dp)
+    return {
+        "mesh_shape": (new_dp, model_parallel),
+        "axis_names": ("data", "model"),
+        "chips_used": new_dp * model_parallel,
+        "chips_idle": chips - new_dp * model_parallel,
+        "grad_accum": grad_accum,
+        "note": "reload latest checkpoint with checkpoint.load_checkpoint("
+                "shardings=<new mesh specs>); restore data iterator state",
+    }

@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+  qgemm.py       W8A8 int8 MXU matmul (128-tile BlockSpecs, int32 accum, fused dequant)
+  stencil3x3.py  HotSpot3D 3x3 weighted stencil (row-blocked VPU kernel)
+  qdot_serve.py  int8-weight GEMV for the memory-bound decode path
+  ops.py         jit'd public wrappers (auto interpret=True off-TPU)
+  ref.py         pure-jnp oracles — the correctness contracts for tests
+"""

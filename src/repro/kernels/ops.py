@@ -1,0 +1,56 @@
+"""Public jit'd wrappers over the Pallas kernels.
+
+On the CPU container kernels execute in ``interpret=True`` mode (the kernel
+body runs as traced jnp on CPU — bit-accurate semantics, no Mosaic); on a TPU
+backend they compile to MXU/VPU code. ``_interpret()`` picks automatically;
+callers can force either via the ``interpret`` kwarg.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import qdot_serve, qgemm, stencil3x3
+from repro.kernels import ref  # noqa: F401  (re-exported for tests/benchmarks)
+
+
+def _interpret(override: Optional[bool]) -> bool:
+    if override is not None:
+        return override
+    return jax.default_backend() != "tpu"
+
+
+def qgemm_f32(a_q, b_q, sb, *, interpret: Optional[bool] = None, **kw):
+    """(M,K)i8 @ (K,N)i8 -> (M,N)f32 with per-channel dequant."""
+    return qgemm.qgemm(a_q, b_q, sb, interpret=_interpret(interpret), **kw)
+
+
+def qgemm_tiles(a_q, sa, b_q, sb, *, interpret: Optional[bool] = None):
+    """Tile-grid layout entry used by core.gemm: (Mb,Kb,t,t) grids + per-tile scales."""
+    t = a_q.shape[-1]
+    Mb, Kb = a_q.shape[0], a_q.shape[1]
+    Nb = b_q.shape[1]
+    a2 = a_q.swapaxes(1, 2).reshape(Mb * t, Kb * t)
+    b2 = b_q.swapaxes(1, 2).reshape(Kb * t, Nb * t)
+    out = qgemm.qgemm_tile_scales(
+        a2, b2, sa.reshape(Mb, Kb), sb.reshape(Kb, Nb),
+        interpret=_interpret(interpret),
+    )
+    return out.reshape(Mb, t, Nb, t).swapaxes(1, 2)     # (Mb, Nb, t, t)
+
+
+def qgemm_i32(a_q, b_q, *, interpret: Optional[bool] = None):
+    """Raw int32 accumulation (scale=1), used by tensorizer.qdot(use_kernel=True)."""
+    ones = jnp.ones((b_q.shape[1],), jnp.float32)
+    return qgemm.qgemm(a_q, b_q, ones, interpret=_interpret(interpret))
+
+
+def stencil(x, w, *, interpret: Optional[bool] = None, **kw):
+    return stencil3x3.stencil3x3(x, w, interpret=_interpret(interpret), **kw)
+
+
+def qgemv(x, w_q, scale, *, interpret: Optional[bool] = None, **kw):
+    return qdot_serve.qgemv(x, w_q, scale, interpret=_interpret(interpret), **kw)

@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contracts).
+
+Each oracle implements the kernel's exact mathematical semantics with no
+tiling, so tests can ``assert_allclose(kernel(interpret=True), ref)`` across
+shape/dtype sweeps.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def qgemm_ref(a_q: jax.Array, b_q: jax.Array, sb: jax.Array) -> jax.Array:
+    """int8 x int8 -> int32 accumulate, per-output-channel dequant."""
+    acc = jax.lax.dot_general(
+        a_q, b_q, dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    return acc.astype(jnp.float32) * sb.reshape(1, -1)
+
+
+def qgemm_tile_scales_ref(
+    a_q: jax.Array, b_q: jax.Array, sa: jax.Array, sb: jax.Array, t: int = 128
+) -> jax.Array:
+    """Blocked dequant: partial(i,k,j) * sa[i,k] * sb[k,j], summed over k."""
+    M, K = a_q.shape
+    _, N = b_q.shape
+    at = a_q.reshape(M // t, t, K // t, t).swapaxes(1, 2).astype(jnp.int32)
+    bt = b_q.reshape(K // t, t, N // t, t).swapaxes(1, 2).astype(jnp.int32)
+    partial = jnp.einsum("ikab,kjbc->ikjac", at, bt).astype(jnp.float32)
+    scaled = partial * sa[:, :, None, None, None] * sb[None, :, :, None, None]
+    out_tiles = scaled.sum(axis=1)                      # (Mb, Nb, t, t)
+    return out_tiles.swapaxes(1, 2).reshape(M, N)
+
+
+def stencil3x3_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Zero-padded 3x3 cross-correlation (NN convention, stride 1)."""
+    xp = jnp.pad(x, 1).astype(jnp.float32)
+    H, W = x.shape
+    out = jnp.zeros((H, W), jnp.float32)
+    for p in range(3):
+        for q in range(3):
+            out = out + w[p, q] * xp[p:p + H, q:q + W]
+    return out
+
+
+def qgemv_ref(x: jax.Array, w_q: jax.Array, scale: jax.Array) -> jax.Array:
+    return (x.astype(jnp.float32) @ w_q.astype(jnp.float32)) * scale.reshape(1, -1)

@@ -1,0 +1,5 @@
+"""Model zoo: the 10 assigned architectures as one composable LM stack."""
+
+from repro.models import attention, layers, model, moe, serve, ssm, steps, xlstm  # noqa: F401
+from repro.models.model import forward, init_model, param_specs  # noqa: F401
+from repro.models.steps import make_decode_step, make_prefill_step, make_train_step  # noqa: F401

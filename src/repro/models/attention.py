@@ -1,0 +1,309 @@
+"""Attention: GQA/MQA/MHA with RoPE / M-RoPE / qk_norm, three execution paths.
+
+  * plain      — materialized scores; used below ``cfg.attn_chunk`` seq len
+  * chunked    — online-softmax scan over KV chunks (flash-style, O(S·C) memory
+                 instead of O(S^2)); the train_4k / prefill_32k path
+  * decode     — single-query attention against a (possibly sequence-sharded)
+                 KV cache; softmax reductions over the sharded seq dim are
+                 GSPMD-partitioned (SP for the 32k/500k decode cells)
+
+Sharding: q/k/v heads constrained to the ``model`` axis when
+``cfg.shard_heads`` (TP); KV caches shard (batch->data, heads->model) and for
+long-context cells additionally sequence->data.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.distributed import sharding as shd
+from repro.models import layers as L
+
+NEG_INF = -1e30
+
+
+def init_attn(key, cfg: ArchConfig, d: int) -> Dict:
+    ks = jax.random.split(key, 5)
+    H, KV, hd = cfg.n_heads, cfg.n_kv, cfg.hd
+    p = {
+        "wq": L.dense_init(ks[0], (d, H * hd)),
+        "wk": L.dense_init(ks[1], (d, KV * hd)),
+        "wv": L.dense_init(ks[2], (d, KV * hd)),
+        "wo": L.dense_init(ks[3], (H * hd, d)),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((cfg.hd,), jnp.float32)
+        p["k_norm"] = jnp.ones((cfg.hd,), jnp.float32)
+    return p
+
+
+def attn_specs(cfg: ArchConfig) -> Dict:
+    # Param sharding is decoupled from activation head-sharding: the flat
+    # projection columns (H*hd) divide the model axis even when the head
+    # count doesn't (qwen3: 40 heads but 5120 columns), so weights always
+    # shard; only the activation layout (_heads_spec / attn_sp) is gated.
+    m = "model"
+    p = {"wq": P(None, m), "wk": P(None, m), "wv": P(None, m), "wo": P(m, None)}
+    if cfg.qk_norm:
+        p["q_norm"] = P(None)
+        p["k_norm"] = P(None)
+    return p
+
+
+def _divisible_model(n: int) -> bool:
+    try:
+        return n % shd.model_parallel_size() == 0
+    except RuntimeError:
+        return True
+
+
+def _heads_spec(cfg: ArchConfig, n_heads: Optional[int] = None) -> P:
+    """Head-axis sharding, only when the head count divides the model axis —
+    uneven head sharding triggers GSPMD involuntary full rematerialization
+    (replicate-then-reshard), observed in the dry-run. Non-divisible archs
+    (qwen3 40H, qwen2-vl 12H, xlstm 4H) replicate heads (see §Perf)."""
+    n = cfg.n_heads if n_heads is None else n_heads
+    m = "model" if (cfg.shard_heads and _divisible_model(n)) else None
+    return shd.batch_spec(None, m, None)
+
+
+def _project_qkv(
+    p: Dict, x: jax.Array, cfg: ArchConfig,
+    positions: Optional[jax.Array], positions3: Optional[jax.Array],
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    B, S, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv, cfg.hd
+    q = L.pdot(x, p["wq"], cfg).reshape(B, S, H, hd)
+    k = L.pdot(x, p["wk"], cfg).reshape(B, S, KV, hd)
+    v = L.pdot(x, p["wv"], cfg).reshape(B, S, KV, hd)
+    if cfg.qk_norm:
+        q = L.rms_head_norm(q, p["q_norm"])
+        k = L.rms_head_norm(k, p["k_norm"])
+    if cfg.rope_kind == "mrope":
+        assert positions3 is not None, "mrope requires (3,B,S) positions"
+        q = L.apply_mrope(q, positions3, cfg.rope_theta, cfg.mrope_sections)
+        k = L.apply_mrope(k, positions3, cfg.rope_theta, cfg.mrope_sections)
+    elif cfg.rope_kind == "rope":
+        assert positions is not None
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+    q = shd.with_sharding(q, _heads_spec(cfg))
+    k = shd.with_sharding(k, _heads_spec(cfg, cfg.n_kv))
+    v = shd.with_sharding(v, _heads_spec(cfg, cfg.n_kv))
+    return q, k, v
+
+
+def _expand_kv(k: jax.Array, n_heads: int) -> jax.Array:
+    """GQA: repeat kv heads to match q heads (B, S, KV, hd) -> (B, S, H, hd)."""
+    B, S, KV, hd = k.shape
+    rep = n_heads // KV
+    return jnp.repeat(k, rep, axis=2) if rep > 1 else k
+
+
+def _plain_attention(q, k, v, causal: bool, q_offset: int = 0) -> jax.Array:
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * (hd ** -0.5)
+    if causal:
+        qpos = jnp.arange(Sq)[:, None] + q_offset
+        kpos = jnp.arange(Sk)[None, :]
+        scores = jnp.where(kpos <= qpos, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", w.astype(v.dtype), v)
+
+
+def _chunked_attention(q, k, v, causal: bool, chunk: int, unroll: bool = False,
+                       impl: str = "f32") -> jax.Array:
+    """Online-softmax scan over KV chunks (flash-style).
+
+    impl="f32": all internals f32 (the conservative baseline).
+    impl="bf16acc": q/k/v and the probability matrix stay bf16; only the
+    softmax statistics (m, l) and the output accumulator are f32 — the TPU
+    flash-attention recipe. Halves the bytes of the two big streams (scores
+    inputs and p), measured in §Perf.
+    """
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    bf16 = impl == "bf16acc"
+    n_chunks = -(-Sk // chunk)
+    pad = n_chunks * chunk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(B, n_chunks, chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    if bf16:
+        qf = (q.astype(jnp.float32) * (hd ** -0.5)).astype(jnp.bfloat16)
+    else:
+        qf = q.astype(jnp.float32) * (hd ** -0.5)
+    qpos = jnp.arange(Sq)[:, None]
+
+    def step(carry, inputs):
+        m, l, o = carry                       # (B,H,Sq,1), (B,H,Sq,1), (B,Sq,H,hd)
+        ci, (kb, vb) = inputs
+        kb_c = kb if bf16 else kb.astype(jnp.float32)
+        # bf16 inputs with f32 accumulation (MXU-native mixed precision)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, kb_c,
+                       preferred_element_type=jnp.float32)
+        kpos = ci * chunk + jnp.arange(chunk)[None, :]
+        mask = (kpos < Sk) if not causal else ((kpos <= qpos) & (kpos < Sk))
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1, keepdims=True)
+        pv = (p.astype(jnp.bfloat16) if bf16 else p)
+        vb_c = vb if bf16 else vb.astype(jnp.float32)
+        o_new = o * corr.squeeze(-1).transpose(0, 2, 1)[..., None] + jnp.einsum(
+            "bhqk,bkhd->bqhd", pv, vb_c,
+            preferred_element_type=jnp.float32,
+        )
+        return (m_new, l_new, o_new), None
+
+    m0 = jnp.full((B, H, Sq, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq, 1), jnp.float32)
+    o0 = jnp.zeros((B, Sq, H, hd), jnp.float32)
+    (m, l, o), _ = jax.lax.scan(
+        step, (m0, l0, o0), (jnp.arange(n_chunks), (kc, vc)),
+        unroll=True if unroll else 1,   # exact-cost mode for the dry-run
+    )
+    o = o / jnp.maximum(l.squeeze(-1).transpose(0, 2, 1)[..., None], 1e-30)
+    return o.astype(q.dtype)
+
+
+def attention(
+    p: Dict,
+    x: jax.Array,
+    cfg: ArchConfig,
+    *,
+    positions: Optional[jax.Array] = None,
+    positions3: Optional[jax.Array] = None,
+    causal: bool = True,
+    kv: Optional[Tuple[jax.Array, jax.Array]] = None,   # cross-attention K/V source
+) -> jax.Array:
+    """Full-sequence attention (train / prefill). ``kv`` overrides K/V for
+    cross-attention (enc-dec); cross-attention is non-causal."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(p, x, cfg, positions, positions3)
+    if kv is not None:
+        k, v = kv
+        causal = False
+    k = _expand_kv(k, cfg.n_heads)
+    v = _expand_kv(v, cfg.n_heads)
+    if cfg.attn_sp and S > cfg.attn_chunk:
+        # SP attention: shard *queries* over 'model' (for archs whose head
+        # count doesn't divide the axis — qwen2-vl 12H, qwen3 40H); K/V stay
+        # replicated over model, every device computes all heads for S/16
+        # query rows. Even work split where head sharding can't be.
+        q = shd.with_sharding(q, shd.batch_spec("model", None, None))
+    if max(S, k.shape[1]) > cfg.attn_chunk:
+        o = _chunked_attention(q, k, v, causal, cfg.attn_chunk,
+                               unroll=cfg.scan_unroll, impl=cfg.attn_impl)
+    else:
+        o = _plain_attention(q, k, v, causal)
+    if cfg.attn_sp and S > cfg.attn_chunk:
+        o = shd.with_sharding(o, shd.batch_spec("model", None, None))
+    o = shd.with_sharding(o, _heads_spec(cfg))
+    out = L.pdot(o.reshape(B, S, cfg.n_heads * cfg.hd), p["wo"], cfg)
+    return out
+
+
+def project_kv_for_cross(p: Dict, enc_out: jax.Array, cfg: ArchConfig):
+    """Pre-compute cross-attention K/V from encoder output (cached at prefill)."""
+    B, S, _ = enc_out.shape
+    k = L.pdot(enc_out, p["wk"], cfg).reshape(B, S, cfg.n_kv, cfg.hd)
+    v = L.pdot(enc_out, p["wv"], cfg).reshape(B, S, cfg.n_kv, cfg.hd)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# KV cache + decode
+# ---------------------------------------------------------------------------
+
+def cache_spec(cfg: ArchConfig, seq_shard: bool) -> P:
+    """Cache (B, S, KV, hd): batch->data axes, seq->data when SP (long ctx,
+    batch too small to shard), heads->model when divisible."""
+    names = ()
+    try:
+        names = shd.axis_names()
+    except RuntimeError:
+        pass
+    model = "model" if ("model" in names and cfg.shard_heads and _divisible_model(cfg.n_kv)) else None
+    if seq_shard:
+        return P(None, "data", model, None)
+    b = shd.batch_axes()
+    lead = b if len(b) > 1 else (b[0] if b else None)
+    return P(lead, None, model, None)
+
+
+def init_cache(cfg: ArchConfig, n_layers: int, batch: int, seq: int, dtype) -> Dict:
+    return {
+        "k": jnp.zeros((n_layers, batch, seq, cfg.n_kv, cfg.hd), dtype),
+        "v": jnp.zeros((n_layers, batch, seq, cfg.n_kv, cfg.hd), dtype),
+        "index": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_attention(
+    p: Dict,
+    x: jax.Array,                 # (B, 1, D) current token
+    cache_k: jax.Array,           # (B, S, KV, hd)
+    cache_v: jax.Array,
+    index: jax.Array,             # () int32 — number of valid cache entries
+    cfg: ArchConfig,
+    *,
+    positions: Optional[jax.Array] = None,
+    positions3: Optional[jax.Array] = None,
+    update_cache: bool = True,
+    cache_scales: Optional[Tuple[jax.Array, jax.Array]] = None,  # (B,S,KV) x2
+) -> Tuple[jax.Array, ...]:
+    """One-token attention against the cache. Returns (out, new_k, new_v
+    [, new_k_scale, new_v_scale]).
+
+    The softmax reduction runs over the cache's (possibly sharded) seq dim —
+    GSPMD partitions the max/sum (the SP decode path for 32k/500k cells).
+
+    ``cache_scales`` enables the Tensorizer int8 KV cache: entries are stored
+    int8 with a *per-token, per-head* scale (exact per-position calibration —
+    no cross-step rescaling), halving the dominant decode-bandwidth stream.
+    """
+    B, _, _ = x.shape
+    S = cache_k.shape[1]
+    q, k_new, v_new = _project_qkv(p, x, cfg, positions, positions3)
+    int8_cache = cache_scales is not None
+    if int8_cache:
+        ks, vs = cache_scales
+        k_sc = jnp.max(jnp.abs(k_new.astype(jnp.float32)), axis=-1) / 127.0 + 1e-12
+        v_sc = jnp.max(jnp.abs(v_new.astype(jnp.float32)), axis=-1) / 127.0 + 1e-12
+        k_q = jnp.clip(jnp.round(k_new.astype(jnp.float32) / k_sc[..., None]), -127, 127).astype(jnp.int8)
+        v_q = jnp.clip(jnp.round(v_new.astype(jnp.float32) / v_sc[..., None]), -127, 127).astype(jnp.int8)
+        if update_cache:
+            cache_k = jax.lax.dynamic_update_slice(cache_k, k_q, (0, index, 0, 0))
+            cache_v = jax.lax.dynamic_update_slice(cache_v, v_q, (0, index, 0, 0))
+            ks = jax.lax.dynamic_update_slice(ks, k_sc, (0, index, 0))
+            vs = jax.lax.dynamic_update_slice(vs, v_sc, (0, index, 0))
+        k_full = cache_k.astype(jnp.float32) * ks[..., None]
+        v_full = cache_v.astype(jnp.float32) * vs[..., None]
+        k = _expand_kv(k_full.astype(x.dtype), cfg.n_heads)
+        v = _expand_kv(v_full.astype(x.dtype), cfg.n_heads)
+    else:
+        if update_cache:
+            cache_k = jax.lax.dynamic_update_slice(cache_k, k_new.astype(cache_k.dtype), (0, index, 0, 0))
+            cache_v = jax.lax.dynamic_update_slice(cache_v, v_new.astype(cache_v.dtype), (0, index, 0, 0))
+        k = _expand_kv(cache_k, cfg.n_heads)
+        v = _expand_kv(cache_v, cfg.n_heads)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * (cfg.hd ** -0.5)
+    valid = jnp.arange(S)[None, None, None, :] <= index       # causal: <= current
+    s = jnp.where(valid, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", w, v.astype(jnp.float32)).astype(x.dtype)
+    out = L.pdot(o.reshape(B, 1, cfg.n_heads * cfg.hd), p["wo"], cfg)
+    if int8_cache:
+        return out, cache_k, cache_v, ks, vs
+    return out, cache_k, cache_v

@@ -1,0 +1,250 @@
+"""Serving path: cache construction, prefill, and single-token decode for all
+families. Decode is the memory-roofline-bound cell set (32k/500k); caches are
+sharded per attention.cache_spec — (batch->data, kv-heads->model), plus
+sequence->data (SP) for the 500k single-batch cell.
+
+Cache pytrees by family:
+  dense/moe/vlm  {"k": (L,B,S,KV,hd), "v": ..., "index": ()}
+  encdec         self cache + precomputed cross K/V (Ld,B,Se,KV,hd)
+  hybrid         mamba (conv,ssm) states per layer + attn cache per application
+  ssm            mLSTM (C,n,m) + sLSTM (c,n,h,m) states per pair
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.distributed import sharding as shd
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import model as M
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models import xlstm as XL
+
+
+def _seq_shard(cfg: ArchConfig, batch: int) -> bool:
+    """Shard the cache seq dim over 'data' when the batch can't cover it
+    (the long_500k single-request cell)."""
+    try:
+        return batch < shd.data_parallel_size()
+    except RuntimeError:
+        return False
+
+
+def init_cache(cfg: ArchConfig, batch: int, seq: int) -> Dict:
+    int8_kv = cfg.kv_cache_dtype == "int8" and cfg.family in ("dense", "moe", "vlm")
+    dt = jnp.int8 if int8_kv else L.cdtype(cfg)
+    seq_shard = _seq_shard(cfg, batch)
+    spec = A.cache_spec(cfg, seq_shard)
+
+    def kv(n_layers, s):
+        k = shd.with_sharding(jnp.zeros((n_layers, batch, s, cfg.n_kv, cfg.hd), dt), P(None, *spec))
+        v = shd.with_sharding(jnp.zeros((n_layers, batch, s, cfg.n_kv, cfg.hd), dt), P(None, *spec))
+        return k, v
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        k, v = kv(cfg.n_layers, seq)
+        cache = {"k": k, "v": v, "index": jnp.zeros((), jnp.int32)}
+        if int8_kv:
+            # Tensorizer int8 KV cache: per-token / per-head dequant scales
+            sspec = P(None, *list(spec)[:-1])
+            ones = jnp.full((cfg.n_layers, batch, seq, cfg.n_kv), 1e-12, jnp.float32)
+            cache["k_scale"] = shd.with_sharding(ones, sspec)
+            cache["v_scale"] = shd.with_sharding(ones, sspec)
+        return cache
+    if cfg.family == "encdec":
+        k, v = kv(cfg.n_layers, seq)
+        se = max(1, seq // cfg.enc_len_ratio)
+        ck, cv = kv(cfg.n_layers, se)
+        return {"k": k, "v": v, "cross_k": ck, "cross_v": cv,
+                "index": jnp.zeros((), jnp.int32)}
+    if cfg.family == "hybrid":
+        n_groups = cfg.n_layers // cfg.attn_every
+        rem = cfg.n_layers - n_groups * cfg.attn_every
+        di = SSM.d_inner(cfg)
+        H, Pd, N = SSM.n_ssm_heads(cfg), cfg.ssm_headdim, cfg.ssm_state
+        k, v = kv(n_groups, seq)        # one attn cache per shared-block application
+        mk = lambda nl: {
+            "conv": jnp.zeros((nl, batch, SSM.CONV_W - 1, di + 2 * N), dt),
+            "ssm": jnp.zeros((nl, batch, H, Pd, N), jnp.float32),
+        }
+        return {"k": k, "v": v, "groups": mk(n_groups * cfg.attn_every),
+                "tail": mk(rem) if rem else None,
+                "index": jnp.zeros((), jnp.int32)}
+    if cfg.family == "ssm":
+        n_pairs = cfg.n_layers // 2
+        H, hd = XL._heads(cfg)
+        D = cfg.d_model
+        return {
+            "mlstm_C": jnp.zeros((n_pairs, batch, H, hd, hd), jnp.float32),
+            "mlstm_n": jnp.zeros((n_pairs, batch, H, hd), jnp.float32),
+            "mlstm_m": jnp.full((n_pairs, batch, H), XL.M_INIT, jnp.float32),
+            "slstm_c": jnp.zeros((n_pairs, batch, D), jnp.float32),
+            "slstm_n": jnp.full((n_pairs, batch, D), 1e-6, jnp.float32),
+            "slstm_h": jnp.zeros((n_pairs, batch, D), jnp.float32),
+            "slstm_m": jnp.full((n_pairs, batch, D), -1e30, jnp.float32),
+            "index": jnp.zeros((), jnp.int32),
+        }
+    raise ValueError(cfg.family)
+
+
+# ===========================================================================
+# decode: one token against the cache
+# ===========================================================================
+
+def decode(params: Dict, cfg: ArchConfig, cache: Dict, batch: Dict) -> Tuple[jax.Array, Dict]:
+    """batch: {"tokens": (B,1)} (+ positions3 for mrope). Returns (logits, cache)."""
+    tokens = batch["tokens"]
+    B = tokens.shape[0]
+    index = cache["index"]
+    positions = jnp.broadcast_to(index[None, None], (B, 1)).astype(jnp.int32)
+    positions3 = batch.get("positions3")
+    if cfg.rope_kind == "mrope" and positions3 is None:
+        positions3 = jnp.broadcast_to(index[None, None, None], (3, B, 1)).astype(jnp.int32)
+
+    x = params["embed"][tokens].astype(L.cdtype(cfg))
+    x = shd.with_sharding(x, shd.batch_spec(None, None))
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        int8_kv = "k_scale" in cache
+
+        def body(carry, inp):
+            x = carry
+            if int8_kv:
+                lp, ck, cv, cks, cvs = inp
+                h = L.apply_norm(lp["ln1"], x, cfg)
+                o, ck, cv, cks, cvs = A.decode_attention(
+                    lp["attn"], h, ck, cv, index, cfg,
+                    positions=positions, positions3=positions3,
+                    cache_scales=(cks, cvs))
+            else:
+                lp, ck, cv = inp
+                h = L.apply_norm(lp["ln1"], x, cfg)
+                o, ck, cv = A.decode_attention(
+                    lp["attn"], h, ck, cv, index, cfg,
+                    positions=positions, positions3=positions3)
+            x = x + o
+            h = L.apply_norm(lp["ln2"], x, cfg)
+            if cfg.family == "moe":
+                y, _ = MOE.apply_moe(lp["moe"], h, cfg)
+            else:
+                y = L.apply_mlp(lp["mlp"], h, cfg)
+            out_caches = (ck, cv, cks, cvs) if int8_kv else (ck, cv)
+            return x + y, out_caches
+
+        xs = ((params["layers"], cache["k"], cache["v"], cache["k_scale"], cache["v_scale"])
+              if int8_kv else (params["layers"], cache["k"], cache["v"]))
+        x, new_caches = jax.lax.scan(body, x, xs,
+                                     unroll=True if cfg.scan_unroll else 1)
+        if int8_kv:
+            k_new, v_new, ks_new, vs_new = new_caches
+            cache = dict(cache, k=k_new, v=v_new, k_scale=ks_new,
+                         v_scale=vs_new, index=index + 1)
+        else:
+            k_new, v_new = new_caches
+            cache = dict(cache, k=k_new, v=v_new, index=index + 1)
+        return M._logits(params, cfg, x), cache
+
+    if cfg.family == "encdec":
+        def body(carry, inp):
+            x = carry
+            lp, ck, cv, xk, xv = inp
+            h = L.apply_norm(lp["ln1"], x, cfg)
+            o, ck, cv = A.decode_attention(lp["self_attn"], h, ck, cv, index, cfg,
+                                           positions=positions)
+            x = x + o
+            h = L.apply_norm(lp["ln_x"], x, cfg)
+            o, _, _ = A.decode_attention(
+                lp["cross_attn"], h, xk, xv, xk.shape[1] - 1, cfg,
+                positions=positions, update_cache=False)
+            x = x + o
+            h = L.apply_norm(lp["ln2"], x, cfg)
+            return x + L.apply_mlp(lp["mlp"], h, cfg), (ck, cv)
+        x, (k_new, v_new) = jax.lax.scan(
+            body, x, (params["decoder"], cache["k"], cache["v"],
+                      cache["cross_k"], cache["cross_v"]),
+            unroll=True if cfg.scan_unroll else 1)
+        cache = dict(cache, k=k_new, v=v_new, index=index + 1)
+        return M._logits(params, cfg, x), cache
+
+    if cfg.family == "hybrid":
+        hp = params["hybrid"]
+
+        def mamba_body(x, inp):
+            lp, conv_s, ssm_s = inp
+            h = L.apply_norm(lp["ln"], x, cfg)
+            y, (conv_s, ssm_s) = SSM.apply_mamba2(
+                lp["mamba"], h, cfg, conv_state=conv_s, ssm_state=ssm_s, decode=True)
+            return x + y, (conv_s, ssm_s)
+
+        n_groups = cfg.n_layers // cfg.attn_every
+        g_conv = cache["groups"]["conv"].reshape(
+            n_groups, cfg.attn_every, *cache["groups"]["conv"].shape[1:])
+        g_ssm = cache["groups"]["ssm"].reshape(
+            n_groups, cfg.attn_every, *cache["groups"]["ssm"].shape[1:])
+
+        def group_body(x, inp):
+            gp, lora, ck, cv, conv_s, ssm_s = inp
+            h = L.apply_norm(hp["shared"]["ln1"], x, cfg)
+            attn_p = dict(hp["shared"]["attn"])
+            wq = attn_p["wq"]
+            if hasattr(wq, "dequantize"):      # Tensorizer-quantized shared block
+                wq = wq.dequantize()
+            attn_p["wq"] = wq + (lora["qA"] @ lora["qB"])
+            o, ck, cv = A.decode_attention(attn_p, h, ck, cv, index, cfg,
+                                           positions=positions)
+            x = x + o
+            h = L.apply_norm(hp["shared"]["ln2"], x, cfg)
+            x = x + L.apply_mlp(hp["shared"]["mlp"], h, cfg)
+            x, (conv_s, ssm_s) = jax.lax.scan(mamba_body, x, (gp, conv_s, ssm_s),
+                                              unroll=True if cfg.scan_unroll else 1)
+            return x, (ck, cv, conv_s, ssm_s)
+
+        x, (k_new, v_new, gc, gs) = jax.lax.scan(
+            group_body, x,
+            (hp["groups"], hp["lora"], cache["k"], cache["v"], g_conv, g_ssm),
+            unroll=True if cfg.scan_unroll else 1)
+        new_cache = dict(cache, k=k_new, v=v_new, index=index + 1)
+        new_cache["groups"] = {
+            "conv": gc.reshape(-1, *gc.shape[2:]),
+            "ssm": gs.reshape(-1, *gs.shape[2:]),
+        }
+        if cache.get("tail") is not None:
+            x, (tc, ts) = jax.lax.scan(
+                mamba_body, x, (hp["tail"], cache["tail"]["conv"], cache["tail"]["ssm"]),
+                unroll=True if cfg.scan_unroll else 1)
+            new_cache["tail"] = {"conv": tc, "ssm": ts}
+        return M._logits(params, cfg, x), new_cache
+
+    if cfg.family == "ssm":
+        xp = params["xlstm"]["pairs"]
+
+        def body(carry, inp):
+            x = carry
+            lp, C, n, m, sc, sn, sh, sm = inp
+            h = L.apply_norm(lp["ln_m"], x, cfg)
+            y, (C, n, m) = XL.apply_mlstm(lp["mlstm"], h, cfg, state=(C, n, m), decode=True)
+            x = x + y
+            h = L.apply_norm(lp["ln_s"], x, cfg)
+            y, (sc, sn, sh, sm) = XL.apply_slstm(lp["slstm"], h, cfg,
+                                                 state=(sc, sn, sh, sm), decode=True)
+            return x + y, (C, n, m, sc, sn, sh, sm)
+
+        x, states = jax.lax.scan(
+            body, x, (xp, cache["mlstm_C"], cache["mlstm_n"], cache["mlstm_m"],
+                      cache["slstm_c"], cache["slstm_n"], cache["slstm_h"],
+                      cache["slstm_m"]),
+            unroll=True if cfg.scan_unroll else 1)
+        C, n, m, sc, sn, sh, sm = states
+        cache = dict(cache, mlstm_C=C, mlstm_n=n, mlstm_m=m,
+                     slstm_c=sc, slstm_n=sn, slstm_h=sh, slstm_m=sm,
+                     index=index + 1)
+        return M._logits(params, cfg, x), cache
+
+    raise ValueError(cfg.family)

@@ -1,0 +1,190 @@
+"""Mamba2 (SSD) blocks + the generic chunked linear recurrence.
+
+TPU adaptation (DESIGN.md §2): the recurrence
+    h_t = a_t * h_{t-1} + X_t (x) B_t           (scalar decay per head)
+    y_t = C_t . h_t
+is computed in *chunked* form — intra-chunk terms become masked matmuls on the
+MXU (a (Q x Q) decay-masked Gram matrix per head), inter-chunk state is a
+short ``lax.scan`` over T/Q chunks. This is the memory-feasible training form
+(O(T·P + T/Q·P·N) residuals instead of O(T·P·N)) and is reused verbatim by the
+chunked mLSTM (models/xlstm.py), which is the *same* algebra with decay
+f-gates and (k, q, i·v) as (B, C, X).
+
+Numerics: decays enter as log-space cumulative sums; all exponents are
+differences bounded above by 0, so ``exp`` never overflows.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.distributed import sharding as shd
+from repro.models import layers as L
+
+CONV_W = 4  # mamba2 causal depthwise conv width
+
+
+def _segsum(l: jax.Array) -> jax.Array:
+    """l: (..., Q) log-decays -> (..., Q, Q) with out[t,s] = sum_{r=s+1..t} l_r
+    for s <= t, -inf otherwise (the decay matrix exponent)."""
+    Q = l.shape[-1]
+    cs = jnp.cumsum(l, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]            # L_t - L_s
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def chunked_linear_recurrence(
+    log_a: jax.Array,     # (B, T, H)      per-step log decay (<= 0 for stability)
+    Bm: jax.Array,        # (B, T, H, N)   input-side vectors
+    Cm: jax.Array,        # (B, T, H, N)   output-side vectors
+    X: jax.Array,         # (B, T, H, P)   values
+    chunk: int,
+    h0: jax.Array | None = None,          # (B, H, P, N) initial state
+) -> Tuple[jax.Array, jax.Array]:
+    """Return (Y, h_final): Y[t] = C_t . h_t with h_t = a_t h_{t-1} + X_t (x) B_t."""
+    Bsz, T, H = log_a.shape
+    N, Pd = Bm.shape[-1], X.shape[-1]
+    assert T % chunk == 0, (T, chunk)
+    nc, Q = T // chunk, chunk
+    la = log_a.reshape(Bsz, nc, Q, H).astype(jnp.float32)
+    Bc = Bm.reshape(Bsz, nc, Q, H, N).astype(jnp.float32)
+    Cc = Cm.reshape(Bsz, nc, Q, H, N).astype(jnp.float32)
+    Xc = X.reshape(Bsz, nc, Q, H, Pd).astype(jnp.float32)
+
+    lah = jnp.moveaxis(la, -1, 2)                          # (B, nc, H, Q)
+    seg = _segsum(lah)                                     # (B, nc, H, Q, Q)
+    decay_M = jnp.exp(seg)                                 # masked decay matrix
+    # intra-chunk: Y_inner[t] = sum_s M[t,s] (C_t.B_s) X_s
+    G = jnp.einsum("bnqhi,bnshi->bnhqs", Cc, Bc)           # Gram (C_t . B_s)
+    Y_inner = jnp.einsum("bnhqs,bnhqs,bnshp->bnqhp", G, decay_M, Xc)
+
+    # chunk-final states: S_n = sum_s exp(L_end - L_s) X_s (x) B_s
+    Lend = jnp.sum(lah, axis=-1, keepdims=True)            # (B, nc, H, 1)
+    Lcum = jnp.cumsum(lah, axis=-1)                        # L_s (inclusive)
+    decay_out = jnp.exp(Lend - Lcum)                       # (B, nc, H, Q)
+    S_chunk = jnp.einsum("bnhq,bnqhp,bnqhi->bnhpi", decay_out, Xc, Bc)
+
+    # inter-chunk scan: h_{n} = exp(Lend_n) h_{n-1} + S_n
+    a_chunk = jnp.exp(Lend.squeeze(-1))                    # (B, nc, H)
+
+    def step(h, inp):
+        a_n, S_n = inp                                     # (B,H), (B,H,P,N)
+        h_new = a_n[..., None, None] * h + S_n
+        return h_new, h                                    # emit state *entering* chunk n
+
+    h_init = jnp.zeros((Bsz, H, Pd, N), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+    h_last, h_in = jax.lax.scan(
+        step, h_init,
+        (jnp.moveaxis(a_chunk, 1, 0), jnp.moveaxis(S_chunk, 1, 0)),
+    )
+    h_in = jnp.moveaxis(h_in, 0, 1)                        # (B, nc, H, P, N)
+
+    # inter-chunk contribution: C_t . (exp(L_t) h_in)
+    decay_in = jnp.exp(Lcum)                               # (B, nc, H, Q)
+    Y_inter = jnp.einsum("bnqhi,bnhq,bnhpi->bnqhp", Cc, decay_in, h_in)
+
+    Y = (Y_inner + Y_inter).reshape(Bsz, T, H, Pd)
+    return Y, h_last
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+def d_inner(cfg: ArchConfig) -> int:
+    return cfg.ssm_expand * cfg.d_model
+
+
+def n_ssm_heads(cfg: ArchConfig) -> int:
+    return d_inner(cfg) // cfg.ssm_headdim
+
+
+def init_mamba2(key, cfg: ArchConfig) -> Dict:
+    D, N = cfg.d_model, cfg.ssm_state
+    di, H = d_inner(cfg), n_ssm_heads(cfg)
+    conv_ch = di + 2 * N                       # x, B, C go through the conv
+    ks = jax.random.split(key, 8)
+    return {
+        "wz": L.dense_init(ks[0], (D, di)),
+        "wxbc": L.dense_init(ks[1], (D, conv_ch)),
+        "wdt": L.dense_init(ks[2], (D, H)),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "conv_w": jax.random.normal(ks[3], (CONV_W, conv_ch), jnp.float32) * 0.2,
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, float(H), H).astype(jnp.float32)),
+        "Dskip": jnp.ones((H,), jnp.float32),
+        "norm": jnp.ones((di,), jnp.float32),
+        "wo": L.dense_init(ks[4], (di, D)),
+    }
+
+
+def mamba2_specs(cfg: ArchConfig) -> Dict:
+    return {
+        "wz": P(None, "model"), "wxbc": P(None, None), "wdt": P(None, "model"),
+        "dt_bias": P("model"), "conv_w": P(None, None), "conv_b": P(None),
+        "A_log": P("model"), "Dskip": P("model"), "norm": P("model"),
+        "wo": P("model", None),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: jax.Array | None = None) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv width CONV_W as shifted adds (channel-sharded
+    friendly). x: (B, T, C). Returns (y, new_state) with state = last W-1 x's."""
+    B, T, C = x.shape
+    if state is None:
+        state = jnp.zeros((B, CONV_W - 1, C), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)               # (B, T+W-1, C)
+    y = sum(xp[:, i:i + T, :] * w[i] for i in range(CONV_W)) + b
+    return y.astype(x.dtype), xp[:, -(CONV_W - 1):, :]
+
+
+def apply_mamba2(
+    p: Dict, x: jax.Array, cfg: ArchConfig,
+    conv_state=None, ssm_state=None, decode: bool = False,
+):
+    """x: (B, T, D). Train/prefill: decode=False (chunked SSD). Decode: T == 1,
+    states threaded. Returns (y, (conv_state, ssm_state))."""
+    B, T, D = x.shape
+    di, H, N, Pd = d_inner(cfg), n_ssm_heads(cfg), cfg.ssm_state, cfg.ssm_headdim
+    z = L.pdot(x, p["wz"], cfg)
+    xbc = L.pdot(x, p["wxbc"], cfg)
+    dt = jax.nn.softplus(
+        L.pdot(x, p["wdt"], cfg).astype(jnp.float32) + p["dt_bias"]
+    )                                                       # (B, T, H)
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xbc = jax.nn.silu(xbc)
+    xs = xbc[..., :di].reshape(B, T, H, Pd)
+    Bm = xbc[..., di:di + N][:, :, None, :] * jnp.ones((1, 1, H, 1), xbc.dtype)
+    Cm = xbc[..., di + N:][:, :, None, :] * jnp.ones((1, 1, H, 1), xbc.dtype)
+
+    A = -jnp.exp(p["A_log"])                                # (H,) negative
+    log_a = dt * A                                          # (B, T, H)
+    X = xs.astype(jnp.float32) * dt[..., None]
+
+    if decode:
+        assert T == 1
+        h0 = ssm_state if ssm_state is not None else jnp.zeros((B, H, Pd, N), jnp.float32)
+        a = jnp.exp(log_a[:, 0])                            # (B, H)
+        h = a[..., None, None] * h0 + jnp.einsum(
+            "bhp,bhn->bhpn", X[:, 0], Bm[:, 0].astype(jnp.float32))
+        y = jnp.einsum("bhn,bhpn->bhp", Cm[:, 0].astype(jnp.float32), h)[:, None]
+        ssm_state = h
+    else:
+        chunk = min(cfg.ssm_chunk, T)
+        y, ssm_state = chunked_linear_recurrence(log_a, Bm, Cm, X, chunk, h0=ssm_state)
+
+    y = y + xs.astype(jnp.float32) * p["Dskip"][None, None, :, None]
+    y = y.reshape(B, T, di).astype(x.dtype)
+    # gated RMSNorm (mamba2's norm before out-proj)
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-6) * p["norm"]).astype(x.dtype)
+    out = L.pdot(y, p["wo"], cfg)
+    return out, (conv_state, ssm_state)

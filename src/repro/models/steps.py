@@ -1,0 +1,256 @@
+"""Step functions lowered by the dry-run / executed by train.py & serve.py.
+
+  make_train_step(cfg)   — fwd + CE loss + bwd + grad-clip + AdamW update
+                           (the full production step incl. optimizer collectives)
+  make_prefill_step(cfg) — full-sequence forward returning last-token logits
+  make_decode_step(cfg)  — one-token decode against the KV/state cache
+  input_specs(cfg,shape) — ShapeDtypeStruct stand-ins + shardings per cell
+                           (the assignment's no-allocation dry-run inputs)
+
+Distributed-optimization tricks wired in here (recorded in §Perf):
+  * gradient all-reduce in bf16 (cfg.grad_allreduce_dtype)
+  * ZeRO-1 optimizer-state sharding over data (cfg.zero1)
+  * donated params/opt-state buffers (see launch/dryrun.py, train.py)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeCfg
+from repro.distributed import sharding as shd
+from repro.models import layers as L
+from repro.models import model as M
+from repro.models import serve as SV
+from repro.optim import adamw_init, adamw_update, clip_by_global_norm, cosine_schedule
+
+AUX_WEIGHT = 0.01
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Token-mean CE; logsumexp in f32 over the (model-sharded) vocab dim."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+def loss_fn(params, cfg: ArchConfig, batch: Dict) -> Tuple[jax.Array, Dict]:
+    logits, aux = M.forward(params, cfg, batch)
+    ce = cross_entropy(logits[:, :-1], batch["labels"][:, 1:])
+    loss = ce + AUX_WEIGHT * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+def _cast_grads(grads, dtype_str: str):
+    dt = jnp.dtype(dtype_str)
+    # DP gradient reduction in bf16 halves the collective bytes (§Perf);
+    # master math stays f32 inside AdamW.
+    return jax.tree.map(lambda g: g.astype(dt), grads)
+
+
+def make_train_step(cfg: ArchConfig) -> Callable:
+    def train_step(params, opt_state, batch, step):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch), has_aux=True)(params)
+        grads = _cast_grads(grads, cfg.grad_allreduce_dtype)
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+        lr = cosine_schedule(step, peak=cfg.learning_rate)
+        params, opt_state = adamw_update(
+            params, grads, opt_state, lr, weight_decay=cfg.weight_decay)
+        metrics = dict(metrics, loss=loss, gnorm=gnorm, lr=lr)
+        return params, opt_state, metrics
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig) -> Callable:
+    def prefill_step(params, batch):
+        logits, _ = M.forward(params, cfg, batch)
+        return logits[:, -1, :]            # next-token distribution
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig) -> Callable:
+    def decode_step(params, cache, batch):
+        logits, cache = SV.decode(params, cfg, cache, batch)
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1)
+        return next_tok, cache
+    return decode_step
+
+
+# ===========================================================================
+# dry-run input specs (ShapeDtypeStruct — never allocated)
+# ===========================================================================
+
+def _fit(shape, spec: P) -> P:
+    """Drop sharding on dims the axis sizes don't divide (e.g. batch=1 cells)."""
+    mesh = shd.current_mesh()
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, e in zip(shape, entries):
+        axes = e if isinstance(e, (tuple, list)) else (e,) if e else ()
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        out.append(e if (size and dim % size == 0) else None)
+    return P(*out)
+
+
+def _sds(shape, dtype, spec: P):
+    mesh = shd.current_mesh()
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, _fit(shape, spec)))
+
+
+def _scrub(spec: P) -> P:
+    names = set(shd.axis_names())
+
+    def f(entry):
+        if entry is None:
+            return None
+        if isinstance(entry, (tuple, list)):
+            kept = tuple(e for e in entry if e in names)
+            return kept if kept else None
+        return entry if entry in names else None
+
+    return P(*(f(e) for e in spec))
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeCfg) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Model inputs for a cell, sharded: batch->(pod,data)."""
+    B, S = shape.global_batch, shape.seq_len
+    b = shd.batch_axes()
+    lead = b if len(b) > 1 else (b[0] if b else None)
+    tok = lambda shp: _sds(shp, jnp.int32, _scrub(P(lead, *([None] * (len(shp) - 1)))))
+    out: Dict[str, Any] = {}
+    if shape.kind == "decode":
+        out["tokens"] = tok((B, 1))
+        if cfg.rope_kind == "mrope":
+            out["positions3"] = _sds((3, B, 1), jnp.int32, _scrub(P(None, lead, None)))
+        return out
+    # train / prefill
+    if cfg.input_mode == "embeds":          # vlm / audio-frontend stubs
+        emb_spec = _scrub(P(lead, None, None))
+        out["embeds"] = _sds((B, S, cfg.d_model), jnp.dtype(cfg.dtype), emb_spec)
+        if cfg.is_encdec:
+            # encoder frames + decoder tokens (seamless)
+            se = max(1, S // cfg.enc_len_ratio)
+            out["embeds"] = _sds((B, se, cfg.d_model), jnp.dtype(cfg.dtype), emb_spec)
+            out["tokens"] = tok((B, S))
+        if cfg.rope_kind == "mrope":
+            out["positions3"] = _sds((3, B, S), jnp.int32, _scrub(P(None, lead, None)))
+    else:
+        out["tokens"] = tok((B, S))
+    if shape.kind == "train":
+        out["labels"] = tok((B, S))
+    return out
+
+
+def cache_specs(cfg: ArchConfig, shape: ShapeCfg) -> Dict:
+    """ShapeDtypeStructs matching serve.init_cache's shapes + shardings."""
+    cache = jax.eval_shape(
+        lambda: SV.init_cache(cfg, shape.global_batch, shape.seq_len))
+    # re-attach shardings (eval_shape drops them): rebuild via init_cache spec logic
+    mesh = shd.current_mesh()
+    seq_shard = shape.global_batch < shd.data_parallel_size()
+    from repro.models.attention import cache_spec
+    kv_spec = P(None, *cache_spec(cfg, seq_shard))
+
+    def attach(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else ""
+        if name in ("k", "v", "cross_k", "cross_v"):
+            return jax.ShapeDtypeStruct(
+                leaf.shape, leaf.dtype,
+                sharding=NamedSharding(mesh, _fit(leaf.shape, _scrub(kv_spec))))
+        b = shd.batch_axes()
+        lead = b if len(b) > 1 else (b[0] if b else None)
+        if leaf.ndim >= 2:
+            spec = _fit(leaf.shape, _scrub(P(None, lead, *([None] * (leaf.ndim - 2)))))
+        else:
+            spec = P()
+        return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype,
+                                    sharding=NamedSharding(mesh, spec))
+
+    return jax.tree_util.tree_map_with_path(attach, cache)
+
+
+def param_sds(cfg: ArchConfig) -> Dict:
+    """ShapeDtypeStructs for params with their production shardings.
+
+    With ``cfg.quantize == "serve"`` the tree mirrors
+    ``tensorizer.quantize_params``: projection weights become QTensor stand-ins
+    (int8 q + per-channel scale) so the dry-run lowers the true W8A8 program —
+    half the weight bytes on the memory roofline term (§Perf cell B).
+    """
+    mesh = shd.current_mesh()
+    specs = M.param_specs(cfg)
+    if cfg.quantize == "serve":
+        from repro.core import tensorizer as tz
+        from repro.launch.serve import _quant_predicate
+
+        shapes = jax.eval_shape(
+            lambda k: tz.quantize_params(M.init_model(cfg, k), predicate=_quant_predicate),
+            jax.random.PRNGKey(0))
+
+        def attach_q(leaf, spec):
+            if isinstance(leaf, tz.QTensor):
+                sspec = P(*[e if d > 1 else None
+                            for d, e in zip(leaf.scale.shape,
+                                            list(spec) + [None] * (len(leaf.scale.shape) - len(spec)))])
+                return tz.QTensor(
+                    q=jax.ShapeDtypeStruct(leaf.q.shape, leaf.q.dtype,
+                                           sharding=NamedSharding(mesh, _fit(leaf.q.shape, _scrub(spec)))),
+                    scale=jax.ShapeDtypeStruct(leaf.scale.shape, leaf.scale.dtype,
+                                               sharding=NamedSharding(mesh, _fit(leaf.scale.shape, _scrub(sspec)))),
+                    meta_shape=leaf.meta_shape,
+                )
+            return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype,
+                                        sharding=NamedSharding(mesh, _fit(leaf.shape, _scrub(spec))))
+
+        return jax.tree.map(
+            attach_q, shapes, specs,
+            is_leaf=lambda x: isinstance(x, (jax.ShapeDtypeStruct, tz.QTensor)))
+
+    shapes = jax.eval_shape(lambda k: M.init_model(cfg, k), jax.random.PRNGKey(0))
+
+    def attach(leaf, spec):
+        return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype,
+                                    sharding=NamedSharding(mesh, _fit(leaf.shape, _scrub(spec))))
+
+    return jax.tree.map(attach, shapes, specs,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def opt_sds(cfg: ArchConfig, params_sds) -> Any:
+    """Optimizer-state stand-ins; ZeRO-1 shards them over data when cfg.zero1."""
+    mesh = shd.current_mesh()
+    state = jax.eval_shape(adamw_init, params_sds)
+
+    def attach(leaf, ref):
+        if leaf.ndim == 0:
+            return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype,
+                                        sharding=NamedSharding(mesh, P()))
+        spec = ref.sharding.spec if hasattr(ref, "sharding") and ref.sharding else P()
+        if cfg.zero1:
+            # shard the largest unsharded dim over data
+            entries = list(spec) + [None] * (leaf.ndim - len(spec))
+            if "data" not in jax.tree.leaves(entries):
+                for i, e in enumerate(entries):
+                    if e is None and leaf.shape[i] % mesh.shape["data"] == 0 and leaf.shape[i] > 1:
+                        entries[i] = "data"
+                        break
+            spec = P(*entries)
+        return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype,
+                                    sharding=NamedSharding(mesh, spec))
+
+    mu = jax.tree.map(attach, state.mu, params_sds,
+                      is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    nu = jax.tree.map(attach, state.nu, params_sds,
+                      is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    step = jax.ShapeDtypeStruct((), jnp.int32, sharding=NamedSharding(mesh, P()))
+    from repro.optim import AdamWState
+    return AdamWState(step=step, mu=mu, nu=nu)

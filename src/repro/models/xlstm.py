@@ -1,0 +1,218 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory with
+recurrent gating), per Beck et al. 2024 (arXiv:2405.04517).
+
+TPU adaptation (DESIGN.md §2, §Arch-applicability):
+
+  * mLSTM — the matrix-memory recurrence C_t = f~_t C_{t-1} + i~_t v_t k_t^T
+    is the *same algebra* as Mamba2's SSD (scalar decay per head, outer-product
+    increment), so training reuses ``ssm.chunked_linear_recurrence`` with
+    (B, C, X) := (k, q, i~ * v) — MXU matmuls instead of a T-step scan. The
+    exponential-gating stabilizer m_t has the closed form
+        m_t = F_t + cummax_s(log i_s - F_s),   F_t = cumsum(log f)
+    (max-plus scan), so no sequential pass is needed for it either.
+  * sLSTM — genuinely sequential (h_{t-1} feeds the gates through recurrent
+    block-diagonal R); implemented as a ``lax.scan`` over time with per-head
+    block recurrence. Carries are (B, D)-sized scalars — cheap residuals.
+    This matches the xLSTM paper's own characterization (sLSTM is not
+    parallelizable; it trades throughput for its memory-mixing ability).
+
+Block layout for xlstm-125m: even layers mLSTM, odd layers sLSTM (1:1), both
+pre-norm residual with internal up/down projections (d_ff = 0 in the config —
+there is no separate FFN).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.distributed import sharding as shd
+from repro.models import layers as L
+from repro.models.ssm import chunked_linear_recurrence
+
+
+# Stabilizer "no history" sentinel. NOT -inf/-1e30: the chunked form runs the
+# decays through cumsum, and -1e30 + x == -1e30 in f32 (absorption) would
+# destroy every subsequent decay term. exp(-60) ~ 1e-26 is exactly zero
+# relative to any real term, while -60 + x stays fully precise.
+M_INIT = -60.0
+
+
+def _heads(cfg: ArchConfig) -> Tuple[int, int]:
+    H = cfg.n_heads
+    return H, cfg.d_model // H          # (heads, head dim) — e.g. 4 x 192
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg: ArchConfig) -> Dict:
+    D = cfg.d_model
+    H, hd = _heads(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "wq": L.dense_init(ks[0], (D, H * hd)),
+        "wk": L.dense_init(ks[1], (D, H * hd)),
+        "wv": L.dense_init(ks[2], (D, H * hd)),
+        "wi": L.dense_init(ks[3], (D, H)),     # input gate (per head)
+        "wf": L.dense_init(ks[4], (D, H)),     # forget gate (per head)
+        "b_i": jnp.zeros((H,), jnp.float32),
+        "b_f": jnp.full((H,), 3.0, jnp.float32),   # bias toward remembering
+        "wo_gate": L.dense_init(ks[5], (D, H * hd)),
+        "wo": L.dense_init(ks[6], (H * hd, D)),
+    }
+
+
+def mlstm_specs(cfg: ArchConfig) -> Dict:
+    m = "model" if cfg.shard_heads else None
+    return {
+        "wq": P(None, m), "wk": P(None, m), "wv": P(None, m),
+        "wi": P(None, m), "wf": P(None, m), "b_i": P(m), "b_f": P(m),
+        "wo_gate": P(None, m), "wo": P(m, None),
+    }
+
+
+def _stabilizer(log_f: jax.Array, log_i: jax.Array) -> jax.Array:
+    """m_t = max(log f_t + m_{t-1}, log i_t), m_0 = M_INIT, via the max-plus
+    closed form m_t = F_t + max(cummax_s(li_s - F_s), M_INIT - F_0 + lf_0...).
+    The M_INIT branch can only win at t=0 (decays are negative), where it
+    equals max(li_0, lf_0 + M_INIT) — folded in via the initial cummax term."""
+    F = jnp.cumsum(log_f, axis=1)                       # (B, T, H)
+    base = jax.lax.cummax(log_i - F, axis=1)
+    init = (M_INIT + log_f[:, :1] - F[:, :1])           # lf_0 + M_INIT - F_0
+    return F + jnp.maximum(base, init)
+
+
+def apply_mlstm(p: Dict, x: jax.Array, cfg: ArchConfig,
+                state=None, decode: bool = False):
+    """x: (B, T, D). state = (C, n, m) for decode. Returns (y, state)."""
+    B, T, D = x.shape
+    H, hd = _heads(cfg)
+    q = L.pdot(x, p["wq"], cfg).reshape(B, T, H, hd)
+    k = L.pdot(x, p["wk"], cfg).reshape(B, T, H, hd) * (hd ** -0.5)
+    v = L.pdot(x, p["wv"], cfg).reshape(B, T, H, hd)
+    log_i = (L.pdot(x, p["wi"], cfg).astype(jnp.float32) + p["b_i"])      # (B,T,H)
+    log_f = jax.nn.log_sigmoid(
+        L.pdot(x, p["wf"], cfg).astype(jnp.float32) + p["b_f"])
+
+    if decode:
+        assert T == 1
+        C0, n0, m0 = state if state is not None else (
+            jnp.zeros((B, H, hd, hd), jnp.float32),
+            jnp.zeros((B, H, hd), jnp.float32),
+            jnp.full((B, H), M_INIT, jnp.float32),
+        )
+        li, lf = log_i[:, 0], log_f[:, 0]                                  # (B,H)
+        m = jnp.maximum(lf + m0, li)
+        f_t = jnp.exp(lf + m0 - m)
+        i_t = jnp.exp(li - m)
+        kf, vf, qf = (t[:, 0].astype(jnp.float32) for t in (k, v, q))
+        C = f_t[..., None, None] * C0 + i_t[..., None, None] * jnp.einsum(
+            "bhp,bhn->bhpn", vf, kf)
+        n = f_t[..., None] * n0 + i_t[..., None] * kf
+        num = jnp.einsum("bhpn,bhn->bhp", C, qf)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhn,bhn->bh", n, qf)), jnp.exp(-m))
+        h = (num / den[..., None])[:, None]                                # (B,1,H,hd)
+        new_state = (C, n, m)
+    else:
+        m = _stabilizer(log_f, log_i)                                      # (B,T,H)
+        m_prev = jnp.concatenate([jnp.full((B, 1, H), M_INIT, jnp.float32),
+                                  m[:, :-1]], axis=1)
+        log_fs = log_f + m_prev - m                  # stabilized decay (<= 0)
+        i_s = jnp.exp(log_i - m)                     # stabilized input gate
+        kf = k.astype(jnp.float32)
+        qf = q.astype(jnp.float32)
+        Xv = v.astype(jnp.float32) * i_s[..., None]
+        chunk = min(cfg.ssm_chunk, T)
+        if T % chunk:
+            chunk = T                                # smoke shapes: single chunk
+        num, C_last = chunked_linear_recurrence(log_fs, kf, qf, Xv, chunk)
+        ones = jnp.ones((B, T, H, 1), jnp.float32)
+        den_raw, n_last_pn = chunked_linear_recurrence(
+            log_fs, kf, qf, i_s[..., None] * ones, chunk)
+        den = jnp.maximum(jnp.abs(den_raw.squeeze(-1)), jnp.exp(-m))       # (B,T,H)
+        h = num / den[..., None]
+        new_state = (C_last, n_last_pn.squeeze(-2), m[:, -1])
+    h = h * jax.nn.sigmoid(L.pdot(x, p["wo_gate"], cfg)
+                           .reshape(B, T, H, hd).astype(jnp.float32))
+    out = L.pdot(h.reshape(B, T, H * hd).astype(x.dtype), p["wo"], cfg)
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg: ArchConfig) -> Dict:
+    D = cfg.d_model
+    H, hd = _heads(cfg)
+    ks = jax.random.split(key, 10)
+    gates = {}
+    for gi, g in enumerate(("z", "i", "f", "o")):
+        gates[f"w{g}"] = L.dense_init(ks[gi], (D, D))
+        gates[f"r{g}"] = jax.random.normal(ks[4 + gi], (H, hd, hd), jnp.float32) * (hd ** -0.5)
+        gates[f"b{g}"] = (jnp.full((D,), 1.0, jnp.float32) if g == "f"
+                          else jnp.zeros((D,), jnp.float32))
+    gates["wup"] = L.dense_init(ks[8], (D, 2 * D))
+    gates["wdown"] = L.dense_init(ks[9], (D, D))
+    return gates
+
+
+def slstm_specs(cfg: ArchConfig) -> Dict:
+    p = {}
+    for g in ("z", "i", "f", "o"):
+        p[f"w{g}"] = P(None, None)
+        p[f"r{g}"] = P(None, None, None)
+        p[f"b{g}"] = P(None)
+    p["wup"] = P(None, "model")
+    p["wdown"] = P(None, None)
+    return p
+
+
+def apply_slstm(p: Dict, x: jax.Array, cfg: ArchConfig,
+                state=None, decode: bool = False):
+    """Sequential scan over T. state = (c, n, h, m), each (B, D)."""
+    B, T, D = x.shape
+    H, hd = _heads(cfg)
+    xz = L.pdot(x, p["wz"], cfg).astype(jnp.float32) + p["bz"]
+    xi = L.pdot(x, p["wi"], cfg).astype(jnp.float32) + p["bi"]
+    xf = L.pdot(x, p["wf"], cfg).astype(jnp.float32) + p["bf"]
+    xo = L.pdot(x, p["wo"], cfg).astype(jnp.float32) + p["bo"]
+
+    if state is None:
+        zeros = jnp.zeros((B, D), jnp.float32)
+        state = (zeros, zeros + 1e-6, zeros, jnp.full((B, D), -1e30, jnp.float32))
+
+    def rmul(r, h):                                      # block-diag recurrence
+        hh = h.reshape(B, H, hd)
+        return jnp.einsum("bhp,hpn->bhn", hh, r).reshape(B, D)
+
+    def step(carry, inp):
+        c, n, h, m = carry
+        xz_t, xi_t, xf_t, xo_t = inp
+        z = jnp.tanh(xz_t + rmul(p["rz"], h))
+        li = xi_t + rmul(p["ri"], h)
+        lf = jax.nn.log_sigmoid(xf_t + rmul(p["rf"], h))
+        o = jax.nn.sigmoid(xo_t + rmul(p["ro"], h))
+        m_new = jnp.maximum(lf + m, li)
+        i_s = jnp.exp(li - m_new)
+        f_s = jnp.exp(lf + m - m_new)
+        c_new = f_s * c + i_s * z
+        n_new = f_s * n + i_s
+        h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+        return (c_new, n_new, h_new, m_new), h_new
+
+    seq = (jnp.moveaxis(xz, 1, 0), jnp.moveaxis(xi, 1, 0),
+           jnp.moveaxis(xf, 1, 0), jnp.moveaxis(xo, 1, 0))
+    new_state, hs = jax.lax.scan(step, state, seq)
+    h_seq = jnp.moveaxis(hs, 0, 1).astype(x.dtype)       # (B, T, D)
+    # GeGLU-ish up/down projection (the sLSTM block's internal FFN)
+    up = L.pdot(h_seq, p["wup"], cfg)
+    a, b = jnp.split(up, 2, axis=-1)
+    out = L.pdot(jax.nn.gelu(a) * b, p["wdown"], cfg)
+    return out, new_state

@@ -1,0 +1,55 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+int8 range-calibrated gradient quantization — the Tensorizer applied to the
+DP gradient all-reduce (4x fewer wire bytes than f32, 2x fewer than bf16) —
+with per-leaf error feedback (residual carried to the next step) so the
+compression bias vanishes in expectation (Karimireddy et al., 2019).
+
+Usage in a train step:
+    g_q, ef = compress_grads(grads, ef)      # before the (simulated) reduce
+    ... all-reduce g_q.q (int8 payload) ...
+    grads = decompress_grads(g_q)
+
+The dry-run measures the effect as a collective-bytes reduction when enabled
+(cfg flag threaded by the launcher); tests verify the error-feedback
+convergence property.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tensorizer as tz
+
+
+def init_error_feedback(grads) -> Any:
+    return jax.tree.map(lambda g: jnp.zeros_like(g, dtype=jnp.float32), grads)
+
+
+def compress_grads(grads, error_feedback=None) -> Tuple[Any, Any]:
+    """Quantize each gradient leaf to int8 (per-tensor amax scale), carrying
+    the quantization residual into ``error_feedback`` for the next step."""
+    if error_feedback is None:
+        error_feedback = init_error_feedback(grads)
+
+    def one(g, ef):
+        corrected = g.astype(jnp.float32) + ef
+        qt = tz.quantize(corrected)
+        new_ef = corrected - qt.dequantize()
+        return qt, new_ef
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(error_feedback)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    q_tree = treedef.unflatten([o[0] for o in out])
+    ef_tree = treedef.unflatten([o[1] for o in out])
+    return q_tree, ef_tree
+
+
+def decompress_grads(q_tree):
+    return jax.tree.map(
+        lambda q: q.dequantize(),
+        q_tree, is_leaf=lambda x: isinstance(x, tz.QTensor))

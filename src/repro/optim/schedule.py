@@ -1,0 +1,14 @@
+"""LR schedules (pure functions of the step counter, scan/jit friendly)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, *, peak: float, warmup: int = 100, total: int = 10000,
+                    floor_ratio: float = 0.1):
+    t = step.astype(jnp.float32)
+    warm = peak * t / jnp.maximum(1.0, float(warmup))
+    prog = jnp.clip((t - warmup) / jnp.maximum(1.0, float(total - warmup)), 0.0, 1.0)
+    cos = peak * (floor_ratio + (1 - floor_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(t < warmup, warm, cos)

@@ -1,0 +1,22 @@
+import jax
+import pytest
+
+from repro.distributed import sharding as shd
+
+# NOTE: no XLA_FLAGS here on purpose — tests run on the real single CPU
+# device; only launch/dryrun.py forces 512 host devices (assignment step 0).
+
+
+@pytest.fixture(scope="session")
+def mesh():
+    m = jax.make_mesh((1,), ("data",))
+    shd.set_mesh(m)
+    with m:
+        yield m
+
+
+@pytest.fixture(autouse=True)
+def _mesh_ctx(mesh):
+    # every test runs inside the 1-device mesh context
+    shd.set_mesh(mesh)
+    yield

@@ -1,0 +1,32 @@
+"""Paper Table 4 reproduction: all seven applications under the quantized
+GPETPU pipeline keep MAPE at the ~1% level (paper: avg 0.33%, max 0.89%)."""
+
+import pytest
+
+from repro.apps import ALL, run_app
+
+# per-app MAPE ceilings (%): paper Table 4 + small slack for our data choices
+LIMITS = {
+    "gemm": 1.0,
+    "pagerank": 1.0,
+    "hotspot3d": 1.0,
+    "lud": 0.5,
+    "gaussian": 0.01,        # exact (integer-snap path, paper: 0.00%)
+    "backprop": 0.5,
+    "blackscholes": 2.0,     # deep-OTM tail; RMSE limit below is the tight one
+}
+
+RMSE_LIMITS = {name: 1.0 for name in LIMITS}
+
+
+@pytest.mark.parametrize("name", sorted(LIMITS))
+def test_app_accuracy(name):
+    r = run_app(name, n=64, quantized=True)
+    assert r.mape_pct <= LIMITS[name], f"{name} MAPE {r.mape_pct:.3f}%"
+    assert r.rmse_pct <= RMSE_LIMITS[name], f"{name} RMSE {r.rmse_pct:.3f}%"
+
+
+def test_fp_paths_are_exact():
+    for name in ("gemm", "pagerank", "gaussian"):
+        r = run_app(name, n=48, quantized=False)
+        assert r.mape_pct < 0.05, f"{name} fp path MAPE {r.mape_pct:.3f}%"

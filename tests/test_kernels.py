@@ -1,0 +1,68 @@
+"""Per-kernel correctness: Pallas (interpret=True) vs pure-jnp oracle across
+shape sweeps (the assignment's kernel contract)."""
+
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+
+
+@pytest.mark.parametrize("M,K,N,bk", [
+    (128, 512, 128, 512),
+    (256, 512, 256, 256),
+    (128, 1024, 384, 512),
+])
+def test_qgemm_matches_ref(M, K, N, bk):
+    aq = RNG.integers(-127, 128, (M, K)).astype(np.int8)
+    bq = RNG.integers(-127, 128, (K, N)).astype(np.int8)
+    sb = RNG.uniform(1e-3, 1e-2, (N,)).astype(np.float32)
+    out = np.asarray(ops.qgemm_f32(aq, bq, sb, bk=bk))
+    expect = np.asarray(ref.qgemm_ref(aq, bq, sb))
+    np.testing.assert_allclose(out, expect, rtol=1e-6, atol=1e-6)
+
+
+def test_qgemm_int32_exact():
+    """int8 x int8 -> int32 accumulation must be bit-exact (no fp rounding)."""
+    aq = RNG.integers(-127, 128, (128, 512)).astype(np.int8)
+    bq = RNG.integers(-127, 128, (512, 128)).astype(np.int8)
+    ones = np.ones((128,), np.float32)
+    out = np.asarray(ops.qgemm_f32(aq, bq, ones))
+    expect = aq.astype(np.int64) @ bq.astype(np.int64)
+    assert np.array_equal(out.astype(np.int64), expect)
+
+
+@pytest.mark.parametrize("Mb,Kb,Nb", [(1, 2, 1), (2, 4, 2)])
+def test_qgemm_tile_scales(Mb, Kb, Nb):
+    t = 128
+    M, K, N = Mb * t, Kb * t, Nb * t
+    aq = RNG.integers(-127, 128, (M, K)).astype(np.int8)
+    bq = RNG.integers(-127, 128, (K, N)).astype(np.int8)
+    sa = RNG.uniform(1e-3, 1e-2, (Mb, Kb)).astype(np.float32)
+    sb = RNG.uniform(1e-3, 1e-2, (Kb, Nb)).astype(np.float32)
+    out = np.asarray(ops.qgemm_tiles(
+        aq.reshape(Mb, t, Kb, t).swapaxes(1, 2), sa,
+        bq.reshape(Kb, t, Nb, t).swapaxes(1, 2), sb))
+    expect = np.asarray(ref.qgemm_tile_scales_ref(aq, bq, sa, sb))
+    expect = expect.reshape(Mb, t, Nb, t).swapaxes(1, 2)
+    np.testing.assert_allclose(out, expect, rtol=2e-3, atol=1e-4)
+
+
+@pytest.mark.parametrize("H,W,bm", [(64, 128, 64), (100, 300, 64), (257, 129, 128)])
+def test_stencil_matches_ref(H, W, bm):
+    x = RNG.normal(size=(H, W)).astype(np.float32)
+    w = RNG.normal(size=(3, 3)).astype(np.float32)
+    out = np.asarray(ops.stencil(x, w, bm=bm))
+    expect = np.asarray(ref.stencil3x3_ref(x, w))
+    np.testing.assert_allclose(out, expect, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("B,K,N", [(1, 256, 256), (8, 384, 512)])
+def test_qgemv_matches_ref(B, K, N):
+    x = RNG.normal(size=(B, K)).astype(np.float32)
+    wq = RNG.integers(-127, 128, (K, N)).astype(np.int8)
+    s = RNG.uniform(1e-3, 1e-2, (N,)).astype(np.float32)
+    out = np.asarray(ops.qgemv(x, wq, s))
+    expect = np.asarray(ref.qgemv_ref(x, wq, s))
+    np.testing.assert_allclose(out, expect, rtol=2e-4, atol=1e-4)

@@ -1,0 +1,95 @@
+"""OPQ runtime: OpenCtpu semantics, affinity/FCFS scheduling, straggler
+backup re-issue (paper §6.1)."""
+
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import instr as I
+from repro.core.opq import OPQ, Buffer, Instruction, _StragglerTimeout
+
+RNG = np.random.default_rng(3)
+
+
+def _mat(n=16):
+    return Buffer(RNG.normal(size=(n, n)).astype(np.float32))
+
+
+def test_enqueue_sync_wait():
+    q = OPQ()
+    a, b = _mat(), _mat()
+    tid = q.enqueue(lambda invoke, x, y: invoke(I.add_fp, x, y), a, b)
+    res = q.wait(tid)
+    np.testing.assert_allclose(np.asarray(res[0]), a.data + b.data, rtol=1e-6)
+    q.shutdown()
+
+
+def test_tasks_run_out_of_order_but_serialize_within_task():
+    """Operators within a task serialize; tasks are independent (paper §5)."""
+    q = OPQ()
+    order = []
+
+    def kernel(invoke, x, y):
+        invoke(lambda u, v: order.append("op1") or u + v, x, y)
+        invoke(lambda u, v: order.append("op2") or u - v, x, y)
+
+    tid = q.enqueue(kernel, _mat(), _mat())
+    q.wait(tid)
+    assert order == ["op1", "op2"]
+    q.shutdown()
+
+
+def test_affinity_scheduling():
+    """Instructions sharing a resident buffer go to the same device."""
+    q = OPQ()
+    a, b = _mat(), _mat()
+    q.invoke_operator(I.add_fp, a, b)
+    q.sync()
+    # second op on the same buffers must hit the affinity path
+    q.invoke_operator(I.mul_fp, a, b)
+    q.sync()
+    assert q.stats["affinity_hits"] >= 1
+    q.shutdown()
+
+
+def test_multi_task_parallel_results():
+    q = OPQ()
+    bufs = [_mat() for _ in range(8)]
+    tids = [q.enqueue(lambda invoke, x, y: invoke(I.sub_fp, x, y), bufs[i], bufs[i + 1])
+            for i in range(0, 8, 2)]
+    res = q.sync()
+    assert sorted(res) == sorted(tids)
+    for i, tid in enumerate(tids):
+        np.testing.assert_allclose(
+            np.asarray(res[tid][0]), bufs[2 * i].data - bufs[2 * i + 1].data, rtol=1e-6)
+    q.shutdown()
+
+
+def test_straggler_backup_reissue():
+    """An injected straggling executor triggers the backup-task policy."""
+    calls = {"n": 0}
+
+    def flaky_executor(ins: Instruction, device):
+        calls["n"] += 1
+        if calls["n"] == 1:                       # first attempt straggles
+            raise _StragglerTimeout()
+        return OPQ._default_executor(ins, device)
+
+    q = OPQ(executor=flaky_executor)
+    a, b = _mat(), _mat()
+    fut = q.invoke_operator(I.add_fp, a, b)
+    out = fut.result()
+    np.testing.assert_allclose(np.asarray(out), a.data + b.data, rtol=1e-6)
+    assert q.stats["backups_issued"] == 1
+    assert calls["n"] == 2                        # original + backup
+    q.shutdown()
+
+
+def test_fcfs_least_loaded():
+    """Without affinity, picks the least-loaded lane (trivial with 1 device,
+    but the policy function must still return a lane)."""
+    q = OPQ()
+    lane, aff = q._pick_lane(Instruction(0, I.add_fp, (_mat(), _mat())))
+    assert lane in q.lanes and aff is False
+    q.shutdown()

@@ -1,0 +1,123 @@
+"""Property-based tests (hypothesis) on the Tensorizer's invariants:
+quantization error bounds, overflow-proof scaling (Eqs. 4-8), tiling
+round-trips, integer-snap exactness."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core import tensorizer as tz
+
+settings.register_profile("repro", max_examples=25, deadline=None)
+settings.load_profile("repro")
+
+floats = st.floats(min_value=-1e4, max_value=1e4, allow_nan=False, width=32)
+
+
+def arrays(min_side=1, max_side=24, dims=2):
+    return hnp.arrays(np.float32,
+                      hnp.array_shapes(min_dims=dims, max_dims=dims,
+                                       min_side=min_side, max_side=max_side),
+                      elements=floats)
+
+
+@given(arrays())
+def test_quantize_error_bound(x):
+    """|dequant(quant(x)) - x| <= scale/2 element-wise (symmetric rounding)."""
+    qt = tz.quantize(jnp.asarray(x))
+    err = np.abs(np.asarray(qt.dequantize()) - x)
+    bound = float(qt.scale) / 2 + 1e-6
+    assert err.max() <= bound
+
+
+@given(arrays())
+def test_paper_scales_prevent_overflow(x):
+    """Eqs. 5-8: |output| * S <= 1 for the worst-case output of each class."""
+    lo, hi = float(x.min()), float(x.max())
+    r = abs(hi - lo)
+    n = x.shape[-1]
+    for kind, worst in [
+        (tz.OpKind.MATMUL, r * r * n),      # n products of magnitude <= r^2
+        (tz.OpKind.ADD_SUB, 2 * r),
+        (tz.OpKind.MUL, r * r),
+        (tz.OpKind.ELEMENTWISE, r),
+    ]:
+        S = float(tz.paper_scale_for(kind, jnp.float32(lo), jnp.float32(hi),
+                                     n=n if kind == tz.OpKind.MATMUL else None))
+        assert worst * S <= 1.0 + 1e-5
+
+
+@given(arrays(min_side=2))
+def test_partition_reassemble_roundtrip(x):
+    tiles = tz.partition(jnp.asarray(x), tile=8)
+    back = np.asarray(tz.reassemble(tiles, x.shape[0], x.shape[1]))
+    np.testing.assert_array_equal(back, x)
+
+
+@given(arrays(min_side=2))
+def test_ext_crop_roundtrip(x):
+    padded = tz.ext(jnp.asarray(x), 16, 16)
+    assert padded.shape[0] % 16 == 0 and padded.shape[1] % 16 == 0
+    back = np.asarray(tz.crop(padded, x.shape[0], x.shape[1]))
+    np.testing.assert_array_equal(back, x)
+
+
+@given(st.integers(min_value=1, max_value=30), st.integers(min_value=1, max_value=30))
+def test_round_up(a, m):
+    r = tz.round_up(a, m)
+    assert r >= a and r % m == 0 and r - a < m
+
+
+@given(hnp.arrays(np.int32,
+                  hnp.array_shapes(min_dims=2, max_dims=2, min_side=2, max_side=16),
+                  elements=st.integers(min_value=-127, max_value=127)))
+def test_integer_snap_is_exact(xi):
+    """Integer data within +-127 quantizes EXACTLY with snap_integer (the
+    mechanism behind the paper's 0.00% Gaussian/LUD rows)."""
+    x = xi.astype(np.float32)
+    out = np.asarray(tz.fake_quantize(jnp.asarray(x), snap_integer=True))
+    np.testing.assert_array_equal(out, x)
+
+
+@given(st.integers(min_value=1, max_value=8),
+       st.integers(min_value=1, max_value=8),
+       st.integers(min_value=1, max_value=8))
+def test_qdot_error_bound(m, k, n):
+    """W8A8 relative error stays within the analytic bound:
+    err <= (amax_a/254) * sum|b| + (amax_b/254) * sum|a| per output elem."""
+    rng = np.random.default_rng(m * 64 + k * 8 + n)
+    a = rng.uniform(-4, 4, (m * 8, k * 8)).astype(np.float32)
+    b = rng.uniform(-4, 4, (k * 8, n * 8)).astype(np.float32)
+    out = np.asarray(tz.qdot(jnp.asarray(a), jnp.asarray(b)))
+    exact = a.astype(np.float64) @ b.astype(np.float64)
+    da = np.abs(a).max() / 254.0
+    db = np.abs(b).max(axis=0) / 254.0   # per-channel weight scales
+    bound = (da * np.abs(b).sum(axis=0)[None, :]
+             + np.abs(a).sum(axis=1)[:, None] * db[None, :]
+             + da * db * a.shape[1] + 1e-4)
+    assert (np.abs(out - exact) <= bound).all()
+
+
+def test_qdot_paper_no_overflow_large_values():
+    """The FBGEMM failure mode (paper Fig. 7): large-magnitude inputs must not
+    saturate — output-range-aware scaling keeps relative error ~1%."""
+    rng = np.random.default_rng(0)
+    for vmax in (2, 32, 128, 1024):
+        a = rng.uniform(0, vmax, (64, 64)).astype(np.float32)
+        b = rng.uniform(0, vmax, (64, 64)).astype(np.float32)
+        out = np.asarray(tz.qdot_paper(jnp.asarray(a), jnp.asarray(b)))
+        exact = a.astype(np.float64) @ b.astype(np.float64)
+        rmse = np.sqrt(np.mean((out - exact) ** 2)) / (exact.max() - exact.min())
+        assert rmse < 0.01, (vmax, rmse)
+
+
+def test_quantize_params_scan_compatible():
+    """Stacked-layer weights keep their leading axis in the scale (so lax.scan
+    over quantized params still slices layer-by-layer)."""
+    p = {"w": jnp.ones((4, 8, 16)), "norm": jnp.ones((4, 8))}
+    q = tz.quantize_params(p, predicate=lambda path, leaf: leaf.ndim == 3)
+    assert isinstance(q["w"], tz.QTensor)
+    assert q["w"].q.shape == (4, 8, 16) and q["w"].scale.shape == (4, 1, 16)
+    assert not isinstance(q["norm"], tz.QTensor)
