@@ -1,5 +1,8 @@
 """Quantized serving example: the paper's technique as the LM serving fast
-path — Tensorizer W8A8 weights (half the decode-bandwidth), batched decode.
+path — Tensorizer W8A8 weights (half the decode-bandwidth) flowing through the
+continuous-batching engine (serving/engine.py): requests arrive staggered,
+join the in-flight decode batch mid-stream, and retire independently while
+the OPQ runtime keeps the quantized weights device-resident (affinity).
 
     PYTHONPATH=src python examples/serve_quantized.py
 """
@@ -14,4 +17,5 @@ if __name__ == "__main__":
         "--arch", "qwen3-14b", "--smoke",
         "--quantize", "serve",
         "--requests", "4", "--prompt-len", "16", "--gen", "12",
+        "--slots", "2", "--stagger-steps", "3",   # arrivals join mid-flight
     ]))

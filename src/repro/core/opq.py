@@ -52,6 +52,16 @@ class Buffer:
     def resident_devices(self) -> List[int]:
         return list(self._on_device)
 
+    @classmethod
+    def resident(cls, data: Any, device, name: str = "") -> "Buffer":
+        """Wrap a pytree already living on ``device`` (no transfer): the buffer
+        is born resident, so the affinity policy can pin follow-up work to the
+        device that holds it. The serving engine uses this for params and the
+        in-flight KV cache (serving/engine.py)."""
+        buf = cls(data, name)
+        buf._on_device[device.id] = data
+        return buf
+
 
 @dataclasses.dataclass
 class Instruction:
@@ -99,6 +109,7 @@ class OPQ:
         self._executor = executor or self._default_executor
         self._task_counter = itertools.count()
         self._task_futures: Dict[int, List[Future]] = defaultdict(list)
+        self._task_prev: Dict[int, Future] = {}   # chains in-task serialization
         self._pool = ThreadPoolExecutor(max_workers=max(2, len(self.devices)))
         self._lock = threading.Lock()
         self.stats = {"issued": 0, "backups_issued": 0, "affinity_hits": 0}
@@ -117,15 +128,24 @@ class OPQ:
 
         def invoke(fn: Callable, *bufs: Buffer, flags: str = flags) -> Future:
             ins = Instruction(task_id, fn, tuple(bufs), flags, next(seq))
-            return self._schedule(ins)
+            return self._schedule(ins, chain=True)
 
         kernel(invoke, *buffers)
+        # the kernel body has enqueued every instruction — drop the chain tail
+        self._task_prev.pop(task_id, None)
         return task_id
 
-    def invoke_operator(self, fn: Callable, *buffers: Buffer, flags: str = "") -> Future:
-        """Single-operator task (``openctpu_invoke_operator`` outside a kernel)."""
+    def invoke_operator(self, fn: Callable, *buffers: Buffer, flags: str = "",
+                        track: bool = True) -> Future:
+        """Single-operator task (``openctpu_invoke_operator`` outside a kernel).
+
+        ``track=False`` skips the task-futures registry: the caller owns the
+        returned Future and the result is not retained for ``sync()``. Long-
+        running callers (the serving engine: one instruction per decode step,
+        forever) must use this or the registry grows without bound."""
         task_id = next(self._task_counter)
-        return self._schedule(Instruction(task_id, fn, tuple(buffers), flags))
+        return self._schedule(Instruction(task_id, fn, tuple(buffers), flags),
+                              track=track)
 
     def wait(self, task_id: int):
         """``openctpu_wait``: block until every instruction of a task finished."""
@@ -153,15 +173,32 @@ class OPQ:
         # FCFS onto the least-loaded lane otherwise.
         return min(self.lanes, key=lambda l: l.pending), False
 
-    def _schedule(self, ins: Instruction) -> Future:
+    def _schedule(self, ins: Instruction, track: bool = True,
+                  chain: bool = False) -> Future:
         lane, affinity = self._pick_lane(ins)
         with self._lock:
             self.stats["issued"] += 1
             if affinity:
                 self.stats["affinity_hits"] += 1
             lane.pending += 1
-        fut: Future = self._pool.submit(self._run_with_backup, ins, lane)
-        self._task_futures[ins.task_id].append(fut)
+        # Operators within a task serialize (paper §5): kernel-enqueued
+        # instructions (``chain=True``) wait on their task's previous one.
+        # Safe with a FIFO pool: a waiter's dependency is always earlier in
+        # the queue, so it can never starve. invoke_operator tasks are
+        # single-instruction and skip the chain registry entirely (no growth).
+        prev = self._task_prev.get(ins.task_id) if chain else None
+        if prev is None:
+            fut: Future = self._pool.submit(self._run_with_backup, ins, lane)
+        else:
+            def chained(prev=prev, ins=ins, lane=lane):
+                prev.exception()   # wait for predecessor; its failure doesn't
+                                   # cancel successors (futures stay per-op)
+                return self._run_with_backup(ins, lane)
+            fut = self._pool.submit(chained)
+        if chain:
+            self._task_prev[ins.task_id] = fut
+        if track:
+            self._task_futures[ins.task_id].append(fut)
         return fut
 
     def _run_with_backup(self, ins: Instruction, lane: _Lane):

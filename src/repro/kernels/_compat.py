@@ -1,0 +1,10 @@
+"""Version shims for the pallas TPU API surface used by the kernels.
+
+jax 0.4.x names the compiler-params dataclass ``TPUCompilerParams``;
+jax >= 0.6 renamed it ``CompilerParams``. Import from here so the next
+rename is a one-file fix.
+"""
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams

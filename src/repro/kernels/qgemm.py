@@ -29,6 +29,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams as _CompilerParams
+
 # MXU-aligned defaults. bk=512 amortizes the accumulator epilogue; VMEM use:
 # bm*bk + bk*bn (int8) + bm*bn*4 (int32 acc) = 128*512*2 + 128*128*4 ≈ 196 KiB.
 BM, BN, BK = 128, 128, 512
@@ -84,7 +86,7 @@ def qgemm(
         out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],  # int32 accumulator tile
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
     )(a_q, b_q, sb.reshape(1, N))
@@ -139,7 +141,7 @@ def qgemm_tile_scales(
         out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
         scratch_shapes=[pltpu.VMEM((t, t), jnp.float32)],  # f32 accumulator tile
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
     )(a_q, b_q, sa, sb)

@@ -1,4 +1,5 @@
-"""Serving driver: batched prefill + decode with the Tensorizer W8A8 path.
+"""Serving CLI: a thin driver over the continuous-batching engine
+(serving/engine.py) with the Tensorizer W8A8 fast path.
 
     PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b --smoke \
         --quantize serve --requests 4 --prompt-len 32 --gen 16
@@ -8,28 +9,27 @@ every >=2D weight is Tensorizer-quantized to int8 (per-output-channel scales,
 int32 accumulation, fused dequant) — half the HBM bytes per decode step, which
 is exactly the dominant roofline term of the decode cells (§Perf).
 
-Batching model: requests accumulate into a fixed decode batch (continuous
-batching lite); prefill runs per padded-length bucket; decode is one jit'd
-step for the whole batch.
+Batching model: requests flow through the Engine's bounded queue into a
+slot-based in-flight decode batch (continuous batching — joins and retires per
+step, no full-batch barrier); prefill runs per padded-length bucket; all
+device work is dispatched through the OPQ runtime. ``--stagger-steps N``
+offsets arrivals by N engine steps to exercise mid-flight joins.
 """
 
 from __future__ import annotations
 
 import argparse
 import sys
-import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
 from repro.core import tensorizer as tz
 from repro.distributed import sharding as shd
 from repro.launch.mesh import make_smoke_mesh
-from repro.models import init_model, steps as ST
-from repro.models import serve as SV
-from repro.models import model as M
+from repro.models import init_model
+from repro.serving.engine import Engine, EngineConfig
 
 
 def _quant_predicate(path, leaf):
@@ -55,13 +55,26 @@ def main(argv=None) -> int:
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4,
+                    help="in-flight decode batch width (engine slots)")
+    ap.add_argument("--max-queue", type=int, default=64)
+    ap.add_argument("--stagger-steps", type=int, default=0,
+                    help="engine steps between request arrivals (0 = all at once)")
     ap.add_argument("--model-parallel", type=int, default=1)
     args = ap.parse_args(argv)
+    for name in ("requests", "prompt_len", "gen", "slots", "max_queue"):
+        if getattr(args, name) < 1:
+            ap.error(f"--{name.replace('_', '-')} must be >= 1")
 
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = cfg.smoke()
     cfg = cfg.replace(quantize=args.quantize)
+    if cfg.family not in ("dense", "moe") or cfg.input_mode != "tokens":
+        ap.error(f"--arch {args.arch} (family={cfg.family}, "
+                 f"input_mode={cfg.input_mode}) is not servable yet: the "
+                 "engine handles token-input dense/moe archs; hybrid/ssm/"
+                 "encdec/vlm serving is a ROADMAP item")
     mesh = make_smoke_mesh(args.model_parallel)
 
     with shd.use_mesh(mesh):
@@ -72,60 +85,40 @@ def main(argv=None) -> int:
                       for l in jax.tree.leaves(params, is_leaf=lambda x: isinstance(x, tz.QTensor)))
             print(f"[serve] Tensorizer W8A8: {n_q} weight tensors quantized", flush=True)
 
-        B = args.requests
-        total = args.prompt_len + args.gen
         rng = np.random.default_rng(0)
-        prompts = rng.integers(0, cfg.vocab, (B, args.prompt_len), dtype=np.int32)
+        prompts = rng.integers(0, cfg.vocab, (args.requests, args.prompt_len),
+                               dtype=np.int32)
 
-        # ---- prefill: batch forward, then seed the cache token by token ----
-        prefill = jax.jit(ST.make_prefill_step(cfg))
-        decode = jax.jit(ST.make_decode_step(cfg), donate_argnums=(1,))
+        engine = Engine(cfg, params, EngineConfig(
+            max_slots=args.slots, max_queue=args.max_queue,
+            max_seq_len=args.prompt_len + args.gen))
+        requests = []
+        for i in range(args.requests):
+            requests.append(engine.submit(prompts[i], args.gen, strict=True))
+            for _ in range(args.stagger_steps):
+                engine.step()
+        engine.run_until_complete()
 
-        t0 = time.time()
-        batch = {"tokens": jnp.asarray(prompts)}
-        if cfg.input_mode == "embeds" and not cfg.is_encdec:
-            batch = {"embeds": params_embed_stub(params, cfg, prompts)}
-        if cfg.is_encdec:
-            se = max(1, args.prompt_len // cfg.enc_len_ratio)
-            batch["embeds"] = jnp.zeros((B, se, cfg.d_model), jnp.bfloat16)
-        if cfg.rope_kind == "mrope":
-            batch["positions3"] = jnp.broadcast_to(
-                jnp.arange(args.prompt_len, dtype=jnp.int32), (3, B, args.prompt_len))
-        next_logits = prefill(params, batch)
-        next_tok = jnp.argmax(next_logits, axis=-1)[:, None]
-        t_prefill = time.time() - t0
-
-        # cache replay: feed prompt tokens through decode to fill the cache
-        # (production would fuse prefill-with-cache; decode-seeding keeps the
-        # smoke driver simple and exercises the decode path heavily)
-        cache = SV.init_cache(cfg, B, total)
-        for i in range(args.prompt_len):
-            _, cache = decode(params, cache, {"tokens": jnp.asarray(prompts[:, i:i + 1])})
-
-        t1 = time.time()
-        out_tokens = []
-        tok = next_tok
-        for i in range(args.gen):
-            tok, cache = decode(params, cache, {"tokens": tok})
-            tok = tok[:, None]
-            out_tokens.append(np.asarray(tok))
-        jax.block_until_ready(tok)
-        t_decode = time.time() - t1
-
-        gen = np.concatenate(out_tokens, axis=1)
-        print(f"[serve] {B} requests | prefill {args.prompt_len} tok in "
-              f"{t_prefill*1e3:.1f} ms | {args.gen} decode steps in "
-              f"{t_decode*1e3:.1f} ms ({B*args.gen/max(t_decode,1e-9):.1f} tok/s)", flush=True)
-        print(f"[serve] sample generation (req 0): {gen[0].tolist()}", flush=True)
+        for r in requests:
+            print(f"[serve] req {r.id}: prompt {r.metrics.prompt_len} tok | "
+                  f"TTFT {r.metrics.ttft_s*1e3:.1f} ms | "
+                  f"{r.metrics.n_generated} tok @ {r.metrics.decode_tok_s:.1f} tok/s",
+                  flush=True)
+        s = engine.stats()
+        print(f"[serve] engine: {s['completed']} requests | "
+              f"{s['prefill_batches']} prefill batches | "
+              f"{s['decode_steps']} decode steps | "
+              f"sustained {s['sustained_tok_s']:.1f} tok/s | "
+              f"mean queue depth {s['mean_queue_depth']:.2f} | "
+              f"mean occupancy {s['mean_occupancy']:.2f}/{args.slots}", flush=True)
+        if "opq" in s:
+            o = s["opq"]
+            print(f"[serve] opq: {o['issued']} instructions | "
+                  f"{o['affinity_hits']} affinity hits | "
+                  f"{o['backups_issued']} backups", flush=True)
+        print(f"[serve] sample generation (req 0): {requests[0].tokens}", flush=True)
+        engine.close()
     return 0
-
-
-def params_embed_stub(params, cfg, prompts):
-    """VLM stub: pretend patch embeddings = token embeddings of the prompt."""
-    emb = params["embed"]
-    if isinstance(emb, tz.QTensor):
-        emb = emb.dequantize()
-    return emb[prompts].astype(jnp.bfloat16)
 
 
 if __name__ == "__main__":

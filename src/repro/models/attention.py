@@ -254,7 +254,9 @@ def decode_attention(
     x: jax.Array,                 # (B, 1, D) current token
     cache_k: jax.Array,           # (B, S, KV, hd)
     cache_v: jax.Array,
-    index: jax.Array,             # () int32 — number of valid cache entries
+    index: jax.Array,             # () int32 — number of valid cache entries;
+                                  # or (B,) int32 — per-row (slot) positions,
+                                  # the continuous-batching serving layout
     cfg: ArchConfig,
     *,
     positions: Optional[jax.Array] = None,
@@ -268,12 +270,23 @@ def decode_attention(
     The softmax reduction runs over the cache's (possibly sharded) seq dim —
     GSPMD partitions the max/sum (the SP decode path for 32k/500k cells).
 
+    A vector ``index`` gives every batch row its own write position and causal
+    horizon (requests admitted at different times share one decode batch —
+    serving/engine.py); writes then go through a per-row scatter
+    (``dynamic_update_slice`` needs a batch-uniform start), touching O(B)
+    cache rows per step. mode="drop" skips rows whose index is out of range
+    (idle serving slots whose position ran past the cache).
+
     ``cache_scales`` enables the Tensorizer int8 KV cache: entries are stored
     int8 with a *per-token, per-head* scale (exact per-position calibration —
     no cross-step rescaling), halving the dominant decode-bandwidth stream.
     """
     B, _, _ = x.shape
     S = cache_k.shape[1]
+    index = jnp.asarray(index)
+    per_row = index.ndim == 1
+    if per_row:
+        rows = jnp.arange(B)
     q, k_new, v_new = _project_qkv(p, x, cfg, positions, positions3)
     int8_cache = cache_scales is not None
     if int8_cache:
@@ -282,7 +295,12 @@ def decode_attention(
         v_sc = jnp.max(jnp.abs(v_new.astype(jnp.float32)), axis=-1) / 127.0 + 1e-12
         k_q = jnp.clip(jnp.round(k_new.astype(jnp.float32) / k_sc[..., None]), -127, 127).astype(jnp.int8)
         v_q = jnp.clip(jnp.round(v_new.astype(jnp.float32) / v_sc[..., None]), -127, 127).astype(jnp.int8)
-        if update_cache:
+        if update_cache and per_row:
+            cache_k = cache_k.at[rows, index].set(k_q[:, 0], mode="drop")
+            cache_v = cache_v.at[rows, index].set(v_q[:, 0], mode="drop")
+            ks = ks.at[rows, index].set(k_sc[:, 0], mode="drop")
+            vs = vs.at[rows, index].set(v_sc[:, 0], mode="drop")
+        elif update_cache:
             cache_k = jax.lax.dynamic_update_slice(cache_k, k_q, (0, index, 0, 0))
             cache_v = jax.lax.dynamic_update_slice(cache_v, v_q, (0, index, 0, 0))
             ks = jax.lax.dynamic_update_slice(ks, k_sc, (0, index, 0))
@@ -292,14 +310,20 @@ def decode_attention(
         k = _expand_kv(k_full.astype(x.dtype), cfg.n_heads)
         v = _expand_kv(v_full.astype(x.dtype), cfg.n_heads)
     else:
-        if update_cache:
+        if update_cache and per_row:
+            cache_k = cache_k.at[rows, index].set(
+                k_new[:, 0].astype(cache_k.dtype), mode="drop")
+            cache_v = cache_v.at[rows, index].set(
+                v_new[:, 0].astype(cache_v.dtype), mode="drop")
+        elif update_cache:
             cache_k = jax.lax.dynamic_update_slice(cache_k, k_new.astype(cache_k.dtype), (0, index, 0, 0))
             cache_v = jax.lax.dynamic_update_slice(cache_v, v_new.astype(cache_v.dtype), (0, index, 0, 0))
         k = _expand_kv(cache_k, cfg.n_heads)
         v = _expand_kv(cache_v, cfg.n_heads)
     s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
     s = s * (cfg.hd ** -0.5)
-    valid = jnp.arange(S)[None, None, None, :] <= index       # causal: <= current
+    horizon = index[:, None, None, None] if per_row else index
+    valid = jnp.arange(S)[None, None, None, :] <= horizon     # causal: <= current
     s = jnp.where(valid, s, NEG_INF)
     w = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhqk,bkhd->bqhd", w, v.astype(jnp.float32)).astype(x.dtype)

@@ -37,11 +37,19 @@ def _seq_shard(cfg: ArchConfig, batch: int) -> bool:
         return False
 
 
-def init_cache(cfg: ArchConfig, batch: int, seq: int) -> Dict:
+def init_cache(cfg: ArchConfig, batch: int, seq: int, *,
+               per_slot_index: bool = False) -> Dict:
+    """``per_slot_index`` builds the continuous-batching cache layout: a (B,)
+    index vector so every batch row (serving slot) tracks its own position
+    (dense/moe/vlm only — the families the serving engine batches)."""
     int8_kv = cfg.kv_cache_dtype == "int8" and cfg.family in ("dense", "moe", "vlm")
     dt = jnp.int8 if int8_kv else L.cdtype(cfg)
     seq_shard = _seq_shard(cfg, batch)
     spec = A.cache_spec(cfg, seq_shard)
+    if per_slot_index and cfg.family not in ("dense", "moe", "vlm"):
+        raise ValueError(f"per-slot cache indices unsupported for {cfg.family}")
+    idx0 = (jnp.zeros((batch,), jnp.int32) if per_slot_index
+            else jnp.zeros((), jnp.int32))
 
     def kv(n_layers, s):
         k = shd.with_sharding(jnp.zeros((n_layers, batch, s, cfg.n_kv, cfg.hd), dt), P(None, *spec))
@@ -50,13 +58,15 @@ def init_cache(cfg: ArchConfig, batch: int, seq: int) -> Dict:
 
     if cfg.family in ("dense", "moe", "vlm"):
         k, v = kv(cfg.n_layers, seq)
-        cache = {"k": k, "v": v, "index": jnp.zeros((), jnp.int32)}
+        cache = {"k": k, "v": v, "index": idx0}
         if int8_kv:
-            # Tensorizer int8 KV cache: per-token / per-head dequant scales
+            # Tensorizer int8 KV cache: per-token / per-head dequant scales.
+            # Two distinct allocations — aliasing one buffer into both leaves
+            # breaks buffer donation of the cache pytree (double-donate).
             sspec = P(None, *list(spec)[:-1])
-            ones = jnp.full((cfg.n_layers, batch, seq, cfg.n_kv), 1e-12, jnp.float32)
-            cache["k_scale"] = shd.with_sharding(ones, sspec)
-            cache["v_scale"] = shd.with_sharding(ones, sspec)
+            ones = lambda: jnp.full((cfg.n_layers, batch, seq, cfg.n_kv), 1e-12, jnp.float32)
+            cache["k_scale"] = shd.with_sharding(ones(), sspec)
+            cache["v_scale"] = shd.with_sharding(ones(), sspec)
         return cache
     if cfg.family == "encdec":
         k, v = kv(cfg.n_layers, seq)
@@ -103,10 +113,16 @@ def decode(params: Dict, cfg: ArchConfig, cache: Dict, batch: Dict) -> Tuple[jax
     tokens = batch["tokens"]
     B = tokens.shape[0]
     index = cache["index"]
-    positions = jnp.broadcast_to(index[None, None], (B, 1)).astype(jnp.int32)
+    if getattr(index, "ndim", 0) == 1:
+        # Per-slot indices (continuous-batching serving): each batch row sits
+        # at its own sequence position — see serving/kv.py.
+        positions = index[:, None].astype(jnp.int32)
+    else:
+        positions = jnp.broadcast_to(index[None, None], (B, 1)).astype(jnp.int32)
     positions3 = batch.get("positions3")
     if cfg.rope_kind == "mrope" and positions3 is None:
-        positions3 = jnp.broadcast_to(index[None, None, None], (3, B, 1)).astype(jnp.int32)
+        p3 = index[None, :, None] if getattr(index, "ndim", 0) == 1 else index[None, None, None]
+        positions3 = jnp.broadcast_to(p3, (3, B, 1)).astype(jnp.int32)
 
     x = params["embed"][tokens].astype(L.cdtype(cfg))
     x = shd.with_sharding(x, shd.batch_spec(None, None))

@@ -1,0 +1,8 @@
+"""Continuous-batching serving engine on the OPQ runtime (see engine.py)."""
+
+from repro.serving.engine import (          # noqa: F401
+    Engine, EngineConfig, QueueFull, Request, RequestState,
+)
+from repro.serving.kv import KVSlotManager              # noqa: F401
+from repro.serving.metrics import EngineMetrics, RequestMetrics  # noqa: F401
+from repro.serving.scheduler import Scheduler, bucket_for, default_buckets  # noqa: F401

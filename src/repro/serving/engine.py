@@ -1,0 +1,302 @@
+"""Continuous-batching inference engine over the OPQ runtime.
+
+The production-shaped layer the GPTPU runtime was missing: requests enter a
+bounded FIFO (admission control), a slot-based scheduler joins them into a
+fixed-width in-flight decode batch and retires them as they finish — no
+full-batch barrier, so a long generation never stalls short ones — and a
+KVSlotManager leases per-slot cache rows (allocate once, reset on retire,
+int8-KV aware). All device work (bucketed prefill, replay seeding, the batched
+decode step) is dispatched as OPQ instructions, so the paper's buffer-affinity
+scheduling and backup-task straggler mitigation apply to serving traffic, not
+just the Rodinia apps.
+
+Decode semantics are *greedy and batch-invariant* for dense archs: every slot
+computes exactly the math of a single-request decode at its own position
+(per-slot cache index, see models/attention.py), so staggered-arrival outputs
+are bit-identical to one-at-a-time sequential decoding — asserted in
+tests/test_serving.py. MoE archs serve correctly but without the bit-identity
+guarantee: expert capacity is shared across the decode batch (moe.py), so
+under capacity pressure a token's expert slot can depend on its batchmates —
+the standard batched-MoE-serving tradeoff.
+
+Scope: token-input dense/moe families (tinyllama, qwen3, granite, starcoder2,
+deepseek/moonshot MoE). Hybrid/ssm/encdec recurrent state slots, paged KV,
+and per-request-isolated MoE routing are ROADMAP items.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import functools
+import itertools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.opq import OPQ, Buffer
+from repro.models import model as M
+from repro.models import serve as SV
+from repro.models import steps as ST
+from repro.serving.kv import KVSlotManager
+from repro.serving.metrics import EngineMetrics, RequestMetrics, now
+from repro.serving.scheduler import Scheduler, default_buckets
+
+
+class RequestState(enum.Enum):
+    QUEUED = "queued"
+    RUNNING = "running"
+    DONE = "done"
+
+
+@dataclasses.dataclass
+class Request:
+    id: int
+    prompt: np.ndarray                     # (L,) int32
+    max_new_tokens: int
+    state: RequestState = RequestState.QUEUED
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    metrics: RequestMetrics = None         # set at submit
+
+    @property
+    def last_token(self) -> int:
+        return self.tokens[-1]
+
+    @property
+    def done(self) -> bool:
+        return self.state == RequestState.DONE
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    max_slots: int = 4                     # in-flight decode batch width
+    max_queue: int = 64                    # admission control: FIFO bound
+    max_seq_len: int = 64                  # per-slot cache rows (prompt + gen)
+    buckets: Optional[Tuple[int, ...]] = None   # prefill pad lengths
+    eos_id: Optional[int] = None           # early finish token (None = length-only)
+    use_opq: bool = True                   # dispatch through the OPQ runtime
+
+
+def _make_bucket_prefill(cfg: ArchConfig):
+    """Batched prefill over right-padded prompts. Causal attention means pad
+    tokens after a row's prompt never reach its logits, so gathering at
+    ``last_index`` (= prompt_len - 1) is exact for any pad content on dense
+    archs — that is what makes a small fixed bucket set safe. MoE archs carry
+    the same caveat as decode (module docstring): pad tokens are routed and
+    consume shared expert capacity, so under capacity pressure the gathered
+    logits can depend on the bucket/batch composition."""
+    def prefill(params, tokens, last_index):
+        logits, _ = M.forward(params, cfg, {"tokens": tokens})
+        B, V = tokens.shape[0], logits.shape[-1]
+        idx = jnp.broadcast_to(last_index[:, None, None], (B, 1, V))
+        row = jnp.take_along_axis(logits, idx, axis=1)[:, 0, :]
+        return jnp.argmax(row, axis=-1)
+    return prefill
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_steps(cfg: ArchConfig):
+    """Compiled step fns shared across Engine instances of the same config —
+    rebuilding an engine (tests, benchmark sweeps) reuses XLA executables."""
+    prefill = jax.jit(_make_bucket_prefill(cfg))
+    decode = jax.jit(ST.make_decode_step(cfg), donate_argnums=(1,))
+    replay = jax.jit(ST.make_decode_step(cfg))   # B=1 seeding, no donation:
+    # the pristine replay template cache is reused for every admission
+    return prefill, decode, replay
+
+
+class QueueFull(Exception):
+    """Raised by submit(strict=True) when admission control rejects."""
+
+
+class Engine:
+    """See module docstring. Typical use::
+
+        engine = Engine(cfg, params, EngineConfig(max_slots=4, max_seq_len=64))
+        engine.submit(prompt_ids, max_new_tokens=16)
+        done = engine.run_until_complete()
+    """
+
+    def __init__(self, cfg: ArchConfig, params, engine_cfg: EngineConfig = None,
+                 *, opq: Optional[OPQ] = None):
+        if cfg.family not in ("dense", "moe") or cfg.input_mode != "tokens":
+            raise ValueError(
+                f"serving engine supports token-input dense/moe archs, got "
+                f"family={cfg.family} input_mode={cfg.input_mode}")
+        self.cfg = cfg
+        self.params = params
+        self.ecfg = engine_cfg or EngineConfig()
+        buckets = self.ecfg.buckets or default_buckets(self.ecfg.max_seq_len)
+        self.scheduler = Scheduler(self.ecfg.max_slots, buckets)
+        self.kv = KVSlotManager(cfg, self.ecfg.max_slots, self.ecfg.max_seq_len)
+        self._prefill, self._decode, self._replay = _jitted_steps(cfg)
+        self._replay_template = SV.init_cache(cfg, 1, self.ecfg.max_seq_len)
+        self._owns_opq = opq is None and self.ecfg.use_opq
+        self.opq = (OPQ() if self._owns_opq else opq) if self.ecfg.use_opq else None
+        self._params_buf = Buffer(params, name="params")
+        self._req_ids = itertools.count()
+        self.metrics = EngineMetrics()
+        self.completed: List[Request] = []
+
+    # ------------------------------------------------------------ OPQ bridge
+
+    def _resident(self, tree, name: str) -> Buffer:
+        leaves = jax.tree.leaves(tree)
+        try:
+            dev = next(iter(leaves[0].devices()))
+            return Buffer.resident(tree, dev, name=name)
+        except (AttributeError, IndexError, StopIteration):
+            return Buffer(tree, name=name)
+
+    def _dispatch(self, fn, *bufs: Buffer, flags: str = ""):
+        """Run one instruction: through the OPQ scheduler (affinity + backup
+        tasks), or directly when the runtime is disabled. Untracked: the
+        engine consumes each result here, so nothing is retained for sync()
+        and the task registry stays empty over an unbounded serving run."""
+        if self.opq is None:
+            return fn(*(b.data for b in bufs))
+        return self.opq.invoke_operator(fn, *bufs, flags=flags,
+                                        track=False).result()
+
+    # ------------------------------------------------------------- admission
+
+    def submit(self, prompt: Sequence[int], max_new_tokens: int,
+               *, strict: bool = False) -> Optional[Request]:
+        """Admission control at the door: a bounded queue and a hard per-slot
+        sequence budget. Returns the Request, or None when rejected
+        (QueueFull when ``strict``)."""
+        prompt = np.asarray(prompt, dtype=np.int32).reshape(-1)
+        reject = (self.scheduler.queue_depth >= self.ecfg.max_queue
+                  or len(prompt) == 0
+                  or max_new_tokens < 1
+                  or len(prompt) + max_new_tokens > self.ecfg.max_seq_len
+                  # custom buckets may cap below max_seq_len: reject at the
+                  # door, not mid-admission after a slot was leased
+                  or len(prompt) > max(self.scheduler.buckets))
+        if reject:
+            self.metrics.rejected += 1
+            if strict:
+                raise QueueFull(
+                    f"rejected: queue_depth={self.scheduler.queue_depth}, "
+                    f"prompt={len(prompt)} + gen={max_new_tokens} vs "
+                    f"max_seq_len={self.ecfg.max_seq_len}")
+            return None
+        req = Request(id=next(self._req_ids), prompt=prompt,
+                      max_new_tokens=max_new_tokens,
+                      metrics=RequestMetrics(arrival_s=now(),
+                                             prompt_len=len(prompt)))
+        self.scheduler.enqueue(req)
+        self.metrics.submitted += 1
+        return req
+
+    # ----------------------------------------------------------- engine step
+
+    def _admit(self) -> None:
+        for bucket, pairs in self.scheduler.plan_admissions():
+            toks = np.zeros((len(pairs), bucket), np.int32)
+            last = np.zeros((len(pairs),), np.int32)
+            for i, (_, req) in enumerate(pairs):
+                toks[i, :len(req.prompt)] = req.prompt
+                last[i] = len(req.prompt) - 1
+            first = self._dispatch(
+                lambda p, t, li: self._prefill(p, t, li),
+                self._params_buf, Buffer(toks, name=f"prefill{bucket}"),
+                Buffer(last), flags=f"prefill/{bucket}")
+            first = np.asarray(first)
+            self.metrics.prefill_batches += 1
+            self.metrics.prefill_tokens += int(last.sum()) + len(pairs)
+            for i, (slot, req) in enumerate(pairs):
+                req.state = RequestState.RUNNING
+                req.tokens.append(int(first[i]))
+                req.metrics.first_token_s = now()
+                req.metrics.n_generated = 1
+                self.metrics.observe_tokens(1)
+                if self._finished(req):       # done at the prefill token:
+                    self._retire(slot)        # skip the O(prompt) seeding
+                else:
+                    self._seed_slot(slot, req)
+
+    def _seed_slot(self, slot: int, req: Request) -> None:
+        """Fill the slot's cache row with the prompt's K/V by replaying it
+        through the B=1 decode step (every replay step is the same (1,1)
+        shape — zero length-dependent recompilation), then copy the region
+        into the leased row."""
+        rc = self._replay_template
+        for i in range(len(req.prompt)):
+            tok = np.asarray([[req.prompt[i]]], np.int32)
+            _, rc = self._dispatch(
+                lambda p, c, t: self._replay(p, c, {"tokens": t}),
+                self._params_buf, self._resident(rc, "replay-cache"),
+                Buffer(tok), flags="replay")
+        self.kv.write_slot(slot, rc, n_valid=len(req.prompt))
+
+    def _decode_once(self) -> None:
+        toks = np.zeros((self.ecfg.max_slots, 1), np.int32)
+        for slot, req in self.scheduler.active.items():
+            toks[slot, 0] = req.last_token
+        next_tok, cache = self._dispatch(
+            lambda p, c, t: self._decode(p, c, {"tokens": t}),
+            self._params_buf, self._resident(self.kv.cache, "kv-cache"),
+            Buffer(toks, name="decode-tokens"), flags="decode")
+        self.kv.swap(cache)
+        self.metrics.decode_steps += 1
+        next_np = np.asarray(next_tok)
+        produced = 0
+        for slot, req in list(self.scheduler.active.items()):
+            req.tokens.append(int(next_np[slot]))
+            req.metrics.n_generated += 1
+            produced += 1
+            if self._finished(req):
+                self._retire(slot)
+        self.metrics.observe_tokens(produced)
+
+    def _finished(self, req: Request) -> bool:
+        return (req.metrics.n_generated >= req.max_new_tokens
+                or (self.ecfg.eos_id is not None
+                    and req.last_token == self.ecfg.eos_id))
+
+    def _retire(self, slot: int) -> None:
+        req = self.scheduler.retire(slot)
+        self.kv.reset_slot(slot)
+        req.state = RequestState.DONE
+        req.metrics.finish_s = now()
+        self.metrics.completed += 1
+        self.completed.append(req)
+
+    def step(self) -> None:
+        """One engine iteration: join waiting requests into free slots, then
+        one batched decode step for whatever is in flight."""
+        self._admit()
+        # occupancy sampled before the decode's retires, so slots busy this
+        # step count even when their request finishes in it
+        n_active = self.scheduler.n_active
+        if n_active:
+            self._decode_once()
+        self.metrics.observe_step(self.scheduler.queue_depth, n_active)
+
+    def has_work(self) -> bool:
+        return self.scheduler.has_work()
+
+    def run_until_complete(self, max_steps: int = 100_000) -> List[Request]:
+        steps = 0
+        while self.has_work():
+            self.step()
+            steps += 1
+            if steps > max_steps:
+                raise RuntimeError(f"engine did not drain in {max_steps} steps")
+        return self.completed
+
+    # --------------------------------------------------------------- summary
+
+    def stats(self) -> Dict:
+        out = dict(self.metrics.summary())
+        if self.opq is not None:
+            out["opq"] = dict(self.opq.stats)
+        return out
+
+    def close(self) -> None:
+        if self._owns_opq and self.opq is not None:
+            self.opq.shutdown()

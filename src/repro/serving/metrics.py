@@ -1,0 +1,92 @@
+"""Serving telemetry: per-request latency records + engine-level counters.
+
+Per request we track the two numbers a serving SLO is written against —
+TTFT (arrival -> first generated token, queue wait included) and the decode
+rate after the first token. Engine counters are designed to *reconcile*:
+``tokens_generated`` must equal the sum of every completed/active request's
+``n_generated`` (asserted in tests/test_serving.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional
+
+
+def now() -> float:
+    return time.monotonic()
+
+
+@dataclasses.dataclass
+class RequestMetrics:
+    arrival_s: float
+    prompt_len: int = 0
+    first_token_s: Optional[float] = None      # set when prefill emits token 1
+    finish_s: Optional[float] = None
+    n_generated: int = 0
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        if self.first_token_s is None:
+            return None
+        return self.first_token_s - self.arrival_s
+
+    @property
+    def decode_tok_s(self) -> Optional[float]:
+        """Post-first-token generation rate for this request."""
+        if self.finish_s is None or self.first_token_s is None:
+            return None
+        dt = self.finish_s - self.first_token_s
+        return (self.n_generated - 1) / dt if dt > 0 else float("inf")
+
+
+@dataclasses.dataclass
+class EngineMetrics:
+    submitted: int = 0
+    rejected: int = 0
+    completed: int = 0
+    tokens_generated: int = 0                  # prefill first-tokens + decode
+    decode_steps: int = 0
+    prefill_batches: int = 0
+    prefill_tokens: int = 0                    # unpadded prompt tokens prefilled
+    steps: int = 0                             # engine iterations observed
+    queue_depth_sum: int = 0                   # for mean queue depth
+    occupancy_sum: int = 0                     # active slots summed per step
+    started_s: float = dataclasses.field(default_factory=now)
+    first_token_s: Optional[float] = None      # first token the engine produced
+    last_token_s: Optional[float] = None
+
+    def observe_step(self, queue_depth: int, n_active: int) -> None:
+        self.steps += 1
+        self.queue_depth_sum += queue_depth
+        self.occupancy_sum += n_active
+
+    def observe_tokens(self, n: int) -> None:
+        t = now()
+        if self.first_token_s is None:
+            self.first_token_s = t
+        self.last_token_s = t
+        self.tokens_generated += n
+
+    def sustained_tok_s(self) -> float:
+        """Generated tokens over the first->last token wall span (the number
+        the throughput benchmark sweeps offered load against)."""
+        if self.first_token_s is None or self.last_token_s is None:
+            return 0.0
+        dt = self.last_token_s - self.first_token_s
+        return self.tokens_generated / dt if dt > 0 else float("inf")
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "submitted": self.submitted,
+            "rejected": self.rejected,
+            "completed": self.completed,
+            "tokens_generated": self.tokens_generated,
+            "decode_steps": self.decode_steps,
+            "prefill_batches": self.prefill_batches,
+            "prefill_tokens": self.prefill_tokens,
+            "sustained_tok_s": self.sustained_tok_s(),
+            "mean_queue_depth": self.queue_depth_sum / max(self.steps, 1),
+            "mean_occupancy": self.occupancy_sum / max(self.steps, 1),
+        }

@@ -1,0 +1,83 @@
+"""Slot-based continuous-batching scheduler (rtp-llm FIFOScheduler shape).
+
+Requests wait in a FIFO; every engine step the scheduler joins as many waiting
+requests as there are free slots into the in-flight decode batch and retires
+finished ones — there is no full-batch barrier, a long request never blocks
+short ones from entering and leaving around it.
+
+Admissions are grouped by *prefill bucket* (prompt padded up to a small fixed
+set of lengths) so same-bucket arrivals share one prefill forward and the
+number of distinct compiled prefill shapes is bounded by ``len(buckets)``
+instead of the number of distinct prompt lengths seen in traffic.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from typing import Deque, Dict, List, Sequence, Tuple
+
+MIN_BUCKET = 16
+
+
+def default_buckets(max_len: int) -> Tuple[int, ...]:
+    """Powers of two from MIN_BUCKET up, capped at ``max_len``."""
+    buckets: List[int] = []
+    b = MIN_BUCKET
+    while b < max_len:
+        buckets.append(b)
+        b *= 2
+    buckets.append(max_len)
+    return tuple(buckets)
+
+
+def bucket_for(n: int, buckets: Sequence[int]) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    raise ValueError(f"prompt length {n} exceeds largest bucket {buckets[-1]}")
+
+
+class Scheduler:
+    def __init__(self, n_slots: int, buckets: Sequence[int]):
+        self.n_slots = n_slots
+        self.buckets = tuple(sorted(buckets))
+        # pop() from the tail — reversed so slot 0 is leased first
+        self.free: List[int] = list(range(n_slots))[::-1]
+        self.active: Dict[int, object] = {}        # slot -> Request
+        self.waiting: Deque[object] = deque()
+
+    # ------------------------------------------------------------------ FIFO
+
+    def enqueue(self, request) -> None:
+        self.waiting.append(request)
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self.waiting)
+
+    @property
+    def n_active(self) -> int:
+        return len(self.active)
+
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.active)
+
+    # ------------------------------------------------------------ join/retire
+
+    def plan_admissions(self) -> List[Tuple[int, List[Tuple[int, object]]]]:
+        """Lease free slots to waiting requests (FIFO), grouped by prefill
+        bucket: [(bucket_len, [(slot, request), ...]), ...]. Mutates the free
+        list and active map — the engine must prefill every planned request."""
+        groups: Dict[int, List[Tuple[int, object]]] = {}
+        while self.waiting and self.free:
+            req = self.waiting.popleft()
+            slot = self.free.pop()
+            self.active[slot] = req
+            b = bucket_for(len(req.prompt), self.buckets)
+            groups.setdefault(b, []).append((slot, req))
+        return sorted(groups.items())
+
+    def retire(self, slot: int):
+        req = self.active.pop(slot)
+        self.free.append(slot)
+        return req

@@ -1,0 +1,93 @@
+"""Minimal numpy.random stand-in for the slice of the hypothesis API that
+tests/test_tensorizer.py uses, so the property tests still run (with random
+rather than adversarially-shrunk cases) on containers without the package.
+
+Drop-in for: ``given``, ``settings``, ``strategies.floats/integers``,
+``hypothesis.extra.numpy.arrays/array_shapes``. Each ``@given`` test runs
+``N_EXAMPLES`` times on a per-test deterministic seed.
+"""
+
+from __future__ import annotations
+
+import zlib
+
+import numpy as np
+
+N_EXAMPLES = 10      # enough cases to exercise the invariants without
+                     # paying a fresh XLA compile for 25 distinct shapes
+
+
+class _Strategy:
+    def __init__(self, sample_fn):
+        self._sample = sample_fn
+
+    def example(self, rng: np.random.Generator):
+        return self._sample(rng)
+
+
+class settings:                                          # noqa: N801
+    """API-compatible no-op (profiles only tune example counts/deadlines)."""
+
+    def __init__(self, *a, **kw):
+        pass
+
+    @staticmethod
+    def register_profile(name, *a, **kw):
+        pass
+
+    @staticmethod
+    def load_profile(name):
+        pass
+
+    def __call__(self, fn):
+        return fn
+
+
+def given(*strategies):
+    def deco(fn):
+        # zero-arg wrapper (no functools.wraps: pytest must NOT see the
+        # wrapped signature, or it would treat strategy args as fixtures)
+        def wrapper():
+            # stable per-test seed: same cases every run, distinct per test
+            rng = np.random.default_rng(zlib.crc32(fn.__name__.encode()))
+            for _ in range(N_EXAMPLES):
+                fn(*(s.example(rng) for s in strategies))
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco
+
+
+class _St:
+    @staticmethod
+    def floats(min_value=-1e9, max_value=1e9, allow_nan=False, width=64, **kw):
+        dt = np.float32 if width == 32 else np.float64
+        return _Strategy(lambda rng: dt(rng.uniform(min_value, max_value)))
+
+    @staticmethod
+    def integers(min_value=0, max_value=1 << 30):
+        return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+class _Hnp:
+    @staticmethod
+    def array_shapes(min_dims=1, max_dims=3, min_side=1, max_side=10):
+        def sample(rng):
+            nd = int(rng.integers(min_dims, max_dims + 1))
+            return tuple(int(rng.integers(min_side, max_side + 1))
+                         for _ in range(nd))
+        return _Strategy(sample)
+
+    @staticmethod
+    def arrays(dtype, shape, elements=None):
+        def sample(rng):
+            shp = shape.example(rng) if isinstance(shape, _Strategy) else shape
+            if elements is None:
+                return rng.standard_normal(shp).astype(dtype)
+            flat = [elements.example(rng) for _ in range(int(np.prod(shp)))]
+            return np.asarray(flat, dtype=dtype).reshape(shp)
+        return _Strategy(sample)
+
+
+st = _St()
+hnp = _Hnp()

@@ -5,6 +5,7 @@ semantics."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_config
 from repro.models import forward, init_model, serve
@@ -60,6 +61,7 @@ def test_mrope_chunked_path():
     assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
 
 
+@pytest.mark.slow
 def test_int8_kv_cache_decode_accuracy():
     cfg, params, toks = _setup()
     full_logits, _ = forward(params, cfg, {"tokens": toks})

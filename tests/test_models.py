@@ -31,7 +31,16 @@ def _batch(cfg, rng_seed=0):
     return batch
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+# the recurrent-family smokes compile large scan bodies, and moonshot's MoE
+# smoke is the other compile heavyweight (deepseek keeps the family covered
+# in the fast tier) — slow tier
+_HEAVY_SMOKE = {"zamba2_7b", "xlstm_125m", "seamless_m4t_medium",
+                "moonshot_v1_16b_a3b"}
+
+
+@pytest.mark.parametrize(
+    "arch", [pytest.param(a, marks=pytest.mark.slow) if a in _HEAVY_SMOKE else a
+             for a in ARCH_IDS])
 def test_arch_smoke_forward_and_decode(arch):
     cfg = get_config(arch).smoke()
     params = init_model(cfg, jax.random.PRNGKey(0))
@@ -48,8 +57,10 @@ def test_arch_smoke_forward_and_decode(arch):
     assert int(cache2["index"]) == 1
 
 
-@pytest.mark.parametrize("arch", ["tinyllama_1_1b", "deepseek_moe_16b",
-                                  "zamba2_7b", "xlstm_125m", "seamless_m4t_medium"])
+@pytest.mark.parametrize(
+    "arch", ["tinyllama_1_1b"] + [pytest.param(a, marks=pytest.mark.slow)
+                                  for a in ("deepseek_moe_16b", "zamba2_7b",
+                                            "xlstm_125m", "seamless_m4t_medium")])
 def test_arch_train_step(arch):
     cfg = get_config(arch).smoke()
     params = init_model(cfg, jax.random.PRNGKey(0))
@@ -65,6 +76,7 @@ def test_arch_train_step(arch):
     assert float(m2["loss"]) != float(m["loss"])
 
 
+@pytest.mark.slow
 def test_decode_matches_forward_dense():
     """Prefill logits at each position == step-by-step decode logits (the
     KV-cache correctness contract)."""
@@ -82,6 +94,7 @@ def test_decode_matches_forward_dense():
             rtol=0.15, atol=0.15)  # bf16 accumulation-order tolerance
 
 
+@pytest.mark.slow
 def test_decode_matches_forward_ssm():
     """Chunked mLSTM/sLSTM training form == recurrent decode form."""
     cfg = get_config("xlstm_125m").smoke().replace(remat=False)
@@ -96,6 +109,7 @@ def test_decode_matches_forward_ssm():
         np.asarray(full_logits[:, -1], np.float32), rtol=0.15, atol=0.15)
 
 
+@pytest.mark.slow
 def test_decode_matches_forward_hybrid():
     cfg = get_config("zamba2_7b").smoke().replace(remat=False)
     params = init_model(cfg, jax.random.PRNGKey(0))
@@ -141,6 +155,7 @@ def test_chunked_attention_matches_plain():
         np.testing.assert_allclose(np.asarray(ch), np.asarray(plain), rtol=2e-4, atol=2e-4)
 
 
+@pytest.mark.slow
 def test_quantized_serve_forward_all_families():
     """Tensorizer W8A8 params run through forward for one arch per family."""
     from repro.core import tensorizer as tz

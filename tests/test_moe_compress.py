@@ -4,6 +4,7 @@ error-feedback properties."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_config
 from repro.models import moe as MOE
@@ -28,6 +29,7 @@ def _moe_oracle(p, x, cfg):
     return y.reshape(B, S, D)
 
 
+@pytest.mark.slow
 def test_moe_dispatch_matches_oracle():
     """With ample capacity, the sort-free cumsum dispatch must equal the
     run-every-expert oracle exactly (no drops, exact combine weights)."""
@@ -43,6 +45,7 @@ def test_moe_dispatch_matches_oracle():
     assert float(aux) > 0.0
 
 
+@pytest.mark.slow
 def test_moe_capacity_drops_tokens():
     """With capacity 1 slot/expert, most tokens drop — outputs shrink but
     stay finite (the Switch-style bounded-capacity contract)."""

@@ -3,6 +3,7 @@ backup re-issue (paper §6.1)."""
 
 import time
 
+import jax
 import numpy as np
 import pytest
 
@@ -92,4 +93,112 @@ def test_fcfs_least_loaded():
     q = OPQ()
     lane, aff = q._pick_lane(Instruction(0, I.add_fp, (_mat(), _mat())))
     assert lane in q.lanes and aff is False
+    q.shutdown()
+
+
+def test_affinity_hit_accounting_exact():
+    """issued/affinity_hits reconcile: first touch of a buffer pair is a miss,
+    every follow-up instruction on the now-resident buffers is a hit."""
+    q = OPQ()
+    a, b = _mat(), _mat()
+    q.invoke_operator(I.add_fp, a, b)
+    q.sync()
+    n_follow = 5
+    for _ in range(n_follow):
+        q.invoke_operator(I.mul_fp, a, b)
+        q.sync()
+    assert q.stats["issued"] == 1 + n_follow
+    assert q.stats["affinity_hits"] == n_follow
+    q.shutdown()
+
+
+def test_wait_is_per_task_sync_is_global():
+    """``wait(tid)`` blocks on exactly that task's instructions; ``sync``
+    drains everything and groups results by task id — including tasks already
+    waited on (idempotent re-read of their futures)."""
+    q = OPQ()
+    pairs = [(_mat(), _mat()) for _ in range(3)]
+    tids = [q.enqueue(lambda invoke, x, y: invoke(I.add_fp, x, y), a, b)
+            for a, b in pairs]
+    # wait on the middle task only: its result is complete and correct even
+    # though the other tasks may still be in flight
+    res1 = q.wait(tids[1])
+    np.testing.assert_allclose(np.asarray(res1[0]),
+                               pairs[1][0].data + pairs[1][1].data, rtol=1e-6)
+    out = q.sync()
+    assert sorted(out) == sorted(tids)
+    for tid, (a, b) in zip(tids, pairs):
+        np.testing.assert_allclose(np.asarray(out[tid][0]), a.data + b.data,
+                                   rtol=1e-6)
+    # wait after sync is a no-op re-read, same values
+    res_again = q.wait(tids[1])
+    np.testing.assert_allclose(np.asarray(res_again[0]),
+                               np.asarray(res1[0]), rtol=0)
+    q.shutdown()
+
+
+def test_wait_on_unknown_task_returns_empty():
+    q = OPQ()
+    assert q.wait(12345) == []
+    q.shutdown()
+
+
+def test_untracked_invoke_does_not_accumulate_futures():
+    """track=False (the serving engine's mode) must not grow the task-futures
+    registry — a long-running engine would otherwise leak every step result."""
+    q = OPQ()
+    a, b = _mat(), _mat()
+    futs = [q.invoke_operator(I.add_fp, a, b, track=False) for _ in range(6)]
+    for f in futs:
+        np.testing.assert_allclose(np.asarray(f.result()), a.data + b.data,
+                                   rtol=1e-6)
+    assert len(q._task_futures) == 0
+    assert q.sync() == {}
+    assert q.stats["issued"] == 6          # still scheduled/accounted normally
+    q.shutdown()
+
+
+def test_straggler_detection_with_injected_slow_executor():
+    """A wall-clock-slow executor (not an exception) on a multi-lane queue
+    trips the post-hoc straggler detector: the lane's EMA service time is
+    warmed up by fast instructions, then one instruction blows through
+    ``straggler_factor`` x EMA and is recorded."""
+    devices = [jax.devices()[0]] * 2               # two lanes, one CPU device
+    calls = {"n": 0}
+
+    def slow_once_executor(ins: Instruction, device):
+        calls["n"] += 1
+        if calls["n"] == 8:                        # straggle late, post-warmup
+            time.sleep(0.25)
+        return OPQ._default_executor(ins, device)
+
+    q = OPQ(devices=devices, straggler_factor=2.0, executor=slow_once_executor)
+    a, b = _mat(4), _mat(4)
+    for _ in range(8):
+        q.invoke_operator(I.add_fp, a, b)
+        q.sync()                                   # serialize: stable EMA
+    assert q.stats.get("stragglers_detected", 0) >= 1
+    assert q.stats["issued"] == 8
+    q.shutdown()
+
+
+def test_backup_reissue_result_correct_under_repeated_straggling():
+    """Every instruction straggles on first attempt; the backup path must
+    still return correct results for all of them."""
+    attempts = {}
+
+    def flaky(ins: Instruction, device):
+        # key by task id, not id(ins): object ids get reused after GC
+        attempts[ins.task_id] = attempts.get(ins.task_id, 0) + 1
+        if attempts[ins.task_id] == 1:
+            raise _StragglerTimeout()
+        return OPQ._default_executor(ins, device)
+
+    q = OPQ(executor=flaky)
+    bufs = [(_mat(), _mat()) for _ in range(4)]
+    futs = [q.invoke_operator(I.sub_fp, a, b) for a, b in bufs]
+    for fut, (a, b) in zip(futs, bufs):
+        np.testing.assert_allclose(np.asarray(fut.result()), a.data - b.data,
+                                   rtol=1e-6)
+    assert q.stats["backups_issued"] == 4
     q.shutdown()
