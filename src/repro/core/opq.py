@@ -113,6 +113,10 @@ class OPQ:
         self._pool = ThreadPoolExecutor(max_workers=max(2, len(self.devices)))
         self._lock = threading.Lock()
         self.stats = {"issued": 0, "backups_issued": 0, "affinity_hits": 0}
+        # per-flag instruction counts ("prefill/32", "decode", ...): the
+        # audit trail callers use to assert dispatch shape — e.g. the serving
+        # engine's fused admission proves zero replay decodes ever ran
+        self.flag_counts: Dict[str, int] = defaultdict(int)
 
     # ------------------------------------------------------------------ API
 
@@ -178,6 +182,7 @@ class OPQ:
         lane, affinity = self._pick_lane(ins)
         with self._lock:
             self.stats["issued"] += 1
+            self.flag_counts[ins.flags] += 1
             if affinity:
                 self.stats["affinity_hits"] += 1
             lane.pending += 1

@@ -11,9 +11,12 @@ is exactly the dominant roofline term of the decode cells (§Perf).
 
 Batching model: requests flow through the Engine's bounded queue into a
 slot-based in-flight decode batch (continuous batching — joins and retires per
-step, no full-batch barrier); prefill runs per padded-length bucket; all
-device work is dispatched through the OPQ runtime. ``--stagger-steps N``
-offsets arrivals by N engine steps to exercise mid-flight joins.
+step, no full-batch barrier); admission is fused prefill-with-cache — one
+bucketed forward returns the first token plus per-layer K/V that a single
+batched scatter writes into the leased slot rows (O(1) dispatches per bucket,
+zero replay decodes); all device work is dispatched through the OPQ runtime.
+``--stagger-steps N`` offsets arrivals by N engine steps to exercise
+mid-flight joins.
 """
 
 from __future__ import annotations
@@ -101,7 +104,9 @@ def main(argv=None) -> int:
 
         for r in requests:
             print(f"[serve] req {r.id}: prompt {r.metrics.prompt_len} tok | "
-                  f"TTFT {r.metrics.ttft_s*1e3:.1f} ms | "
+                  f"TTFT {r.metrics.ttft_s*1e3:.1f} ms "
+                  f"(queue {r.metrics.queue_wait_s*1e3:.1f} + "
+                  f"prefill+seed {r.metrics.prefill_s*1e3:.1f}) | "
                   f"{r.metrics.n_generated} tok @ {r.metrics.decode_tok_s:.1f} tok/s",
                   flush=True)
         s = engine.stats()
@@ -111,6 +116,10 @@ def main(argv=None) -> int:
               f"sustained {s['sustained_tok_s']:.1f} tok/s | "
               f"mean queue depth {s['mean_queue_depth']:.2f} | "
               f"mean occupancy {s['mean_occupancy']:.2f}/{args.slots}", flush=True)
+        print(f"[serve] admission: fused prefill-with-cache | "
+              f"prefill wait {s['prefill_wait_s']*1e3:.1f} ms | "
+              f"batched seed writes {s['seed_write_s']*1e3:.1f} ms | "
+              f"0 replay decodes", flush=True)
         if "opq" in s:
             o = s["opq"]
             print(f"[serve] opq: {o['issued']} instructions | "

@@ -7,6 +7,10 @@
                  KV cache; softmax reductions over the sharded seq dim are
                  GSPMD-partitioned (SP for the 32k/500k decode cells)
 
+plus ``prefill_attention_with_kv`` — the fused serving-admission path: decode-
+mirrored full-sequence attention that also emits the cache-layout K/V entries
+(float or int8+scales) so one prefill forward can seed a serving slot.
+
 Sharding: q/k/v heads constrained to the ``model`` axis when
 ``cfg.shard_heads`` (TP); KV caches shard (batch->data, heads->model) and for
 long-context cells additionally sequence->data.
@@ -103,6 +107,22 @@ def _expand_kv(k: jax.Array, n_heads: int) -> jax.Array:
     B, S, KV, hd = k.shape
     rep = n_heads // KV
     return jnp.repeat(k, rep, axis=2) if rep > 1 else k
+
+
+def _quantize_kv(k_new: jax.Array, v_new: jax.Array):
+    """Tensorizer int8 KV-cache quantization: per-token / per-head amax scales
+    (exact per-position calibration — no cross-step rescaling). The SINGLE
+    definition shared by decode_attention and prefill_attention_with_kv: the
+    fused-admission bit-identity contract (tests/test_serving.py) requires the
+    two paths to quantize identically, epsilon and all.
+
+    Returns (k_q, v_q, k_scale, v_scale): int8 entries (..., KV, hd) and f32
+    dequant scales (..., KV)."""
+    k_sc = jnp.max(jnp.abs(k_new.astype(jnp.float32)), axis=-1) / 127.0 + 1e-12
+    v_sc = jnp.max(jnp.abs(v_new.astype(jnp.float32)), axis=-1) / 127.0 + 1e-12
+    k_q = jnp.clip(jnp.round(k_new.astype(jnp.float32) / k_sc[..., None]), -127, 127).astype(jnp.int8)
+    v_q = jnp.clip(jnp.round(v_new.astype(jnp.float32) / v_sc[..., None]), -127, 127).astype(jnp.int8)
+    return k_q, v_q, k_sc, v_sc
 
 
 def _plain_attention(q, k, v, causal: bool, q_offset: int = 0) -> jax.Array:
@@ -213,6 +233,67 @@ def attention(
     return out
 
 
+def prefill_attention_with_kv(
+    p: Dict,
+    x: jax.Array,                 # (B, S, D) prompt activations
+    cfg: ArchConfig,
+    *,
+    positions: jax.Array,
+    positions3: Optional[jax.Array] = None,
+    int8_kv: bool = False,
+) -> Tuple[jax.Array, ...]:
+    """Full-sequence causal attention that also returns this layer's K/V rows
+    exactly as the decode cache stores them (fused prefill-with-cache).
+
+    Returns ``(out, k_entry, v_entry)`` with entries in the cache dtype, or
+    ``(out, k_q, v_q, k_scale, v_scale)`` on the int8-KV path — shapes
+    (B, S, KV, hd) and (B, S, KV), ready to stack into the (L, B, S, KV, hd)
+    cache layout and scatter into serving slot rows.
+
+    The math deliberately mirrors :func:`decode_attention` bit-for-bit rather
+    than reusing :func:`attention`'s plain/chunked paths: scores and the value
+    contraction run in f32 against the *cache-dtype* K/V (int8 entries are
+    quantized with the same per-token/per-head amax scales and dequantized
+    before use, exactly as decode reads them back). That makes a cache seeded
+    from these entries continue decoding with the identical token stream the
+    B=1 prompt-replay seeding produced — the fused-admission bit-identity
+    guarantee asserted in tests/test_serving.py.
+
+    Memory: materializes the (B, H, S, S) f32 score matrix (the rounding
+    anchor is decode's full-row softmax, which the chunked/online-softmax
+    kernel does not reproduce bitwise). S here is an admission bucket — the
+    engine bounds it by ``max_seq_len`` (slot-row length) at construction —
+    not the 32k-class training/prefill sequence lengths, which keep using
+    :func:`attention`'s chunked path. Paged long-prompt admission is the
+    ROADMAP item.
+    """
+    B, S, _ = x.shape
+    q, k_new, v_new = _project_qkv(p, x, cfg, positions, positions3)
+    if int8_kv:
+        k_q, v_q, k_sc, v_sc = _quantize_kv(k_new, v_new)
+        k_full = k_q.astype(jnp.float32) * k_sc[..., None]
+        v_full = v_q.astype(jnp.float32) * v_sc[..., None]
+        k = _expand_kv(k_full.astype(x.dtype), cfg.n_heads)
+        v = _expand_kv(v_full.astype(x.dtype), cfg.n_heads)
+        entries: Tuple[jax.Array, ...] = (k_q, v_q, k_sc, v_sc)
+    else:
+        cache_dt = L.cdtype(cfg)
+        k_c = k_new.astype(cache_dt)
+        v_c = v_new.astype(cache_dt)
+        k = _expand_kv(k_c, cfg.n_heads)
+        v = _expand_kv(v_c, cfg.n_heads)
+        entries = (k_c, v_c)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * (cfg.hd ** -0.5)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    s = jnp.where((kpos <= qpos)[None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", w, v.astype(jnp.float32)).astype(x.dtype)
+    out = L.pdot(o.reshape(B, S, cfg.n_heads * cfg.hd), p["wo"], cfg)
+    return (out,) + entries
+
+
 def project_kv_for_cross(p: Dict, enc_out: jax.Array, cfg: ArchConfig):
     """Pre-compute cross-attention K/V from encoder output (cached at prefill)."""
     B, S, _ = enc_out.shape
@@ -291,10 +372,7 @@ def decode_attention(
     int8_cache = cache_scales is not None
     if int8_cache:
         ks, vs = cache_scales
-        k_sc = jnp.max(jnp.abs(k_new.astype(jnp.float32)), axis=-1) / 127.0 + 1e-12
-        v_sc = jnp.max(jnp.abs(v_new.astype(jnp.float32)), axis=-1) / 127.0 + 1e-12
-        k_q = jnp.clip(jnp.round(k_new.astype(jnp.float32) / k_sc[..., None]), -127, 127).astype(jnp.int8)
-        v_q = jnp.clip(jnp.round(v_new.astype(jnp.float32) / v_sc[..., None]), -127, 127).astype(jnp.int8)
+        k_q, v_q, k_sc, v_sc = _quantize_kv(k_new, v_new)
         if update_cache and per_row:
             cache_k = cache_k.at[rows, index].set(k_q[:, 0], mode="drop")
             cache_v = cache_v.at[rows, index].set(v_q[:, 0], mode="drop")

@@ -277,8 +277,20 @@ def _dense_layer_fwd(lp, x, cfg: ArchConfig, positions, positions3):
     return x + y, aux
 
 
-def forward(params: Dict, cfg: ArchConfig, batch: Dict) -> Tuple[jax.Array, jax.Array]:
-    """Full-sequence forward. Returns (logits, aux_loss)."""
+def forward(params: Dict, cfg: ArchConfig, batch: Dict, *,
+            return_kv: bool = False):
+    """Full-sequence forward. Returns (logits, aux_loss), or with
+    ``return_kv=True`` (dense/moe/vlm only) (logits, aux_loss, kv) where kv is
+    the per-layer K/V in decode-cache layout — {"k","v": (L, B, S, KV, hd)}
+    plus {"k_scale","v_scale": (L, B, S, KV)} on the int8-KV path.
+
+    The return_kv path is the fused serving admission (prefill-with-cache): it
+    swaps the plain/chunked attention for the decode-mirrored
+    ``prefill_attention_with_kv`` so the emitted entries (and hence every token
+    decoded from a cache seeded with them) are bit-identical to replaying the
+    prompt through the B=1 decode step, and routes MoE layers row-isolated so
+    requests sharing one bucketed forward never perturb each other's experts.
+    """
     B = (batch.get("tokens") if "tokens" in batch else batch["embeds"]).shape[0]
     S = (batch.get("tokens") if "tokens" in batch else batch["embeds"]).shape[1]
     positions = batch.get("positions")
@@ -289,12 +301,37 @@ def forward(params: Dict, cfg: ArchConfig, batch: Dict) -> Tuple[jax.Array, jax.
     x = _embed_in(params, cfg, batch)
 
     if cfg.family in ("dense", "moe", "vlm"):
+        if return_kv:
+            int8_kv = cfg.kv_cache_dtype == "int8"
+
+            def body_kv(carry, lp):
+                x, aux = carry
+                h = L.apply_norm(lp["ln1"], x, cfg)
+                o, *kv = A.prefill_attention_with_kv(
+                    lp["attn"], h, cfg, positions=positions,
+                    positions3=positions3, int8_kv=int8_kv)
+                x = x + o
+                h = L.apply_norm(lp["ln2"], x, cfg)
+                if cfg.family == "moe":
+                    y, a = MOE.apply_moe(lp["moe"], h, cfg, row_isolated=True)
+                else:
+                    y, a = L.apply_mlp(lp["mlp"], h, cfg), jnp.zeros((), jnp.float32)
+                return (x + y, aux + a), tuple(kv)
+
+            (x, aux), kv = _scan(_maybe_remat(body_kv, cfg), (x, 0.0),
+                                 params["layers"], cfg)
+            names = ("k", "v", "k_scale", "v_scale") if int8_kv else ("k", "v")
+            return _logits(params, cfg, x), aux, dict(zip(names, kv))
+
         def body(carry, lp):
             x, aux = carry
             x, a = _dense_layer_fwd(lp, x, cfg, positions, positions3)
             return (x, aux + a), None
         (x, aux), _ = _scan(_maybe_remat(body, cfg), (x, 0.0), params["layers"], cfg)
         return _logits(params, cfg, x), aux
+
+    if return_kv:
+        raise ValueError(f"return_kv is a dense/moe/vlm cache path, not {cfg.family}")
 
     if cfg.family == "encdec":
         return _encdec_forward(params, cfg, batch, positions)

@@ -105,11 +105,30 @@ def init_cache(cfg: ArchConfig, batch: int, seq: int, *,
 
 
 # ===========================================================================
+# prefill-with-cache: one forward that seeds a serving slot
+# ===========================================================================
+
+def prefill_with_cache(params: Dict, cfg: ArchConfig, batch: Dict) -> Tuple[jax.Array, Dict]:
+    """Fused admission prefill (dense/moe/vlm): one full-sequence forward over
+    right-padded prompts that returns (logits, kv) with kv the per-layer K/V
+    already in cache layout — {"k","v": (L, B, S, KV, hd)} (+ per-token int8
+    scales when ``cfg.kv_cache_dtype == "int8"``), ready to scatter into
+    leased engine slot rows (serving/kv.py ``write_slots``). Replaces the
+    O(prompt_len) B=1 replay-decode seeding with O(1) forwards per admission
+    bucket; bit-identity with the replay path is asserted in
+    tests/test_serving.py."""
+    logits, _, kv = M.forward(params, cfg, batch, return_kv=True)
+    return logits, kv
+
+
+# ===========================================================================
 # decode: one token against the cache
 # ===========================================================================
 
 def decode(params: Dict, cfg: ArchConfig, cache: Dict, batch: Dict) -> Tuple[jax.Array, Dict]:
-    """batch: {"tokens": (B,1)} (+ positions3 for mrope). Returns (logits, cache)."""
+    """batch: {"tokens": (B,1)} (+ positions3 for mrope; + "active" (B,) bool
+    for MoE serving — masks idle engine slots out of the expert-capacity
+    cumsum). Returns (logits, cache)."""
     tokens = batch["tokens"]
     B = tokens.shape[0]
     index = cache["index"]
@@ -148,7 +167,8 @@ def decode(params: Dict, cfg: ArchConfig, cache: Dict, batch: Dict) -> Tuple[jax
             x = x + o
             h = L.apply_norm(lp["ln2"], x, cfg)
             if cfg.family == "moe":
-                y, _ = MOE.apply_moe(lp["moe"], h, cfg)
+                y, _ = MOE.apply_moe(lp["moe"], h, cfg,
+                                     active=batch.get("active"))
             else:
                 y = L.apply_mlp(lp["mlp"], h, cfg)
             out_caches = (ck, cv, cks, cvs) if int8_kv else (ck, cv)

@@ -3,6 +3,8 @@
   make_train_step(cfg)   — fwd + CE loss + bwd + grad-clip + AdamW update
                            (the full production step incl. optimizer collectives)
   make_prefill_step(cfg) — full-sequence forward returning last-token logits
+  make_prefill_with_cache_step(cfg) — bucketed serving prefill returning
+                           (first_tokens, per-layer K/V in cache layout)
   make_decode_step(cfg)  — one-token decode against the KV/state cache
   input_specs(cfg,shape) — ShapeDtypeStruct stand-ins + shardings per cell
                            (the assignment's no-allocation dry-run inputs)
@@ -72,6 +74,21 @@ def make_prefill_step(cfg: ArchConfig) -> Callable:
     def prefill_step(params, batch):
         logits, _ = M.forward(params, cfg, batch)
         return logits[:, -1, :]            # next-token distribution
+    return prefill_step
+
+
+def make_prefill_with_cache_step(cfg: ArchConfig) -> Callable:
+    """Fused admission step (serving): one bucketed forward over right-padded
+    prompts returning (first_tokens, kv) — the greedy token at each row's
+    ``last_index`` plus the per-layer K/V in cache layout, so the engine seeds
+    a leased slot with a single dispatch instead of O(prompt_len) replay
+    decodes (serving/engine.py)."""
+    def prefill_step(params, tokens, last_index):
+        logits, kv = SV.prefill_with_cache(params, cfg, {"tokens": tokens})
+        B, V = tokens.shape[0], logits.shape[-1]
+        idx = jnp.broadcast_to(last_index[:, None, None], (B, 1, V))
+        row = jnp.take_along_axis(logits, idx, axis=1)[:, 0, :]
+        return jnp.argmax(row, axis=-1), kv
     return prefill_step
 
 

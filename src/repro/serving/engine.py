@@ -5,23 +5,34 @@ bounded FIFO (admission control), a slot-based scheduler joins them into a
 fixed-width in-flight decode batch and retires them as they finish — no
 full-batch barrier, so a long generation never stalls short ones — and a
 KVSlotManager leases per-slot cache rows (allocate once, reset on retire,
-int8-KV aware). All device work (bucketed prefill, replay seeding, the batched
-decode step) is dispatched as OPQ instructions, so the paper's buffer-affinity
-scheduling and backup-task straggler mitigation apply to serving traffic, not
-just the Rodinia apps.
+int8-KV aware). All device work is dispatched as OPQ instructions, so the
+paper's buffer-affinity scheduling and backup-task straggler mitigation apply
+to serving traffic, not just the Rodinia apps.
 
-Decode semantics are *greedy and batch-invariant* for dense archs: every slot
-computes exactly the math of a single-request decode at its own position
-(per-slot cache index, see models/attention.py), so staggered-arrival outputs
-are bit-identical to one-at-a-time sequential decoding — asserted in
-tests/test_serving.py. MoE archs serve correctly but without the bit-identity
-guarantee: expert capacity is shared across the decode batch (moe.py), so
-under capacity pressure a token's expert slot can depend on its batchmates —
-the standard batched-MoE-serving tradeoff.
+Admission is *fused prefill-with-cache*: one bucketed forward per admission
+batch returns the first token AND the per-layer K/V in cache layout
+(models/serve.py ``prefill_with_cache``), which one batched donated scatter
+writes into all leased slot rows (serving/kv.py ``write_slots``). Seeding a
+prompt of length L therefore costs exactly one dispatched forward + one slot
+write per bucket — O(1) instructions instead of the old O(L) B=1 replay-decode
+chain — keeping admission on the matmul-bound side of the roofline (the GPTPU
+whole-kernel-offload argument applied to TTFT). Multi-bucket admission rounds
+dispatch their prefills concurrently and wait once, so buckets overlap on the
+OPQ lanes.
+
+Decode semantics are *greedy and batch-invariant*: every slot computes exactly
+the math of a single-request decode at its own position (per-slot cache index,
+see models/attention.py), so staggered-arrival outputs are bit-identical to
+one-at-a-time sequential decoding — asserted in tests/test_serving.py, which
+also keeps a reference replay seeder proving fused admission is bit-identical
+to the replay era. MoE routing is per-request isolated: idle slots are masked
+out of the expert-capacity cumsum at decode, prefill routes row-isolated, and
+serving capacity is dropless (models/moe.py), so a token's expert assignment
+never depends on its batchmates.
 
 Scope: token-input dense/moe families (tinyllama, qwen3, granite, starcoder2,
-deepseek/moonshot MoE). Hybrid/ssm/encdec recurrent state slots, paged KV,
-and per-request-isolated MoE routing are ROADMAP items.
+deepseek/moonshot MoE). Hybrid/ssm/encdec recurrent state slots and paged KV
+are ROADMAP items.
 """
 
 from __future__ import annotations
@@ -33,13 +44,10 @@ import itertools
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core.opq import OPQ, Buffer
-from repro.models import model as M
-from repro.models import serve as SV
 from repro.models import steps as ST
 from repro.serving.kv import KVSlotManager
 from repro.serving.metrics import EngineMetrics, RequestMetrics, now
@@ -80,32 +88,27 @@ class EngineConfig:
     use_opq: bool = True                   # dispatch through the OPQ runtime
 
 
-def _make_bucket_prefill(cfg: ArchConfig):
-    """Batched prefill over right-padded prompts. Causal attention means pad
-    tokens after a row's prompt never reach its logits, so gathering at
-    ``last_index`` (= prompt_len - 1) is exact for any pad content on dense
-    archs — that is what makes a small fixed bucket set safe. MoE archs carry
-    the same caveat as decode (module docstring): pad tokens are routed and
-    consume shared expert capacity, so under capacity pressure the gathered
-    logits can depend on the bucket/batch composition."""
-    def prefill(params, tokens, last_index):
-        logits, _ = M.forward(params, cfg, {"tokens": tokens})
-        B, V = tokens.shape[0], logits.shape[-1]
-        idx = jnp.broadcast_to(last_index[:, None, None], (B, 1, V))
-        row = jnp.take_along_axis(logits, idx, axis=1)[:, 0, :]
-        return jnp.argmax(row, axis=-1)
-    return prefill
-
-
 @functools.lru_cache(maxsize=None)
 def _jitted_steps(cfg: ArchConfig):
     """Compiled step fns shared across Engine instances of the same config —
-    rebuilding an engine (tests, benchmark sweeps) reuses XLA executables."""
-    prefill = jax.jit(_make_bucket_prefill(cfg))
+    rebuilding an engine (tests, benchmark sweeps) reuses XLA executables.
+    Prefill is the fused prefill-with-cache step: right-padded bucket batch in,
+    (first_tokens, per-layer K/V in cache layout) out — causal attention means
+    pad tokens after a row's prompt never reach its logits or its K/V rows, so
+    a small fixed bucket set is exact for any pad content."""
+    prefill = jax.jit(ST.make_prefill_with_cache_step(cfg))
     decode = jax.jit(ST.make_decode_step(cfg), donate_argnums=(1,))
-    replay = jax.jit(ST.make_decode_step(cfg))   # B=1 seeding, no donation:
-    # the pristine replay template cache is reused for every admission
-    return prefill, decode, replay
+    return prefill, decode
+
+
+class _Ready:
+    """Completed-future shim for the OPQ-disabled direct-dispatch path."""
+
+    def __init__(self, value):
+        self._value = value
+
+    def result(self):
+        return self._value
 
 
 class QueueFull(Exception):
@@ -130,10 +133,15 @@ class Engine:
         self.params = params
         self.ecfg = engine_cfg or EngineConfig()
         buckets = self.ecfg.buckets or default_buckets(self.ecfg.max_seq_len)
+        if max(buckets) > self.ecfg.max_seq_len:
+            # a bucket wider than the slot rows could admit prompts whose
+            # fused K/V block cannot be scattered into the cache
+            raise ValueError(
+                f"largest prefill bucket {max(buckets)} exceeds "
+                f"max_seq_len {self.ecfg.max_seq_len} (the slot-row length)")
         self.scheduler = Scheduler(self.ecfg.max_slots, buckets)
         self.kv = KVSlotManager(cfg, self.ecfg.max_slots, self.ecfg.max_seq_len)
-        self._prefill, self._decode, self._replay = _jitted_steps(cfg)
-        self._replay_template = SV.init_cache(cfg, 1, self.ecfg.max_seq_len)
+        self._prefill, self._decode = _jitted_steps(cfg)
         self._owns_opq = opq is None and self.ecfg.use_opq
         self.opq = (OPQ() if self._owns_opq else opq) if self.ecfg.use_opq else None
         self._params_buf = Buffer(params, name="params")
@@ -152,14 +160,19 @@ class Engine:
             return Buffer(tree, name=name)
 
     def _dispatch(self, fn, *bufs: Buffer, flags: str = ""):
-        """Run one instruction: through the OPQ scheduler (affinity + backup
-        tasks), or directly when the runtime is disabled. Untracked: the
-        engine consumes each result here, so nothing is retained for sync()
-        and the task registry stays empty over an unbounded serving run."""
+        """Run one instruction to completion (decode path)."""
+        return self._dispatch_async(fn, *bufs, flags=flags).result()
+
+    def _dispatch_async(self, fn, *bufs: Buffer, flags: str = ""):
+        """Issue one instruction and return its future: through the OPQ
+        scheduler (affinity + backup tasks), or eagerly when the runtime is
+        disabled. Admission uses this to overlap the per-bucket prefills of
+        one round on the lanes before a single wait. Untracked: the engine
+        consumes each result itself, so nothing is retained for sync() and
+        the task registry stays empty over an unbounded serving run."""
         if self.opq is None:
-            return fn(*(b.data for b in bufs))
-        return self.opq.invoke_operator(fn, *bufs, flags=flags,
-                                        track=False).result()
+            return _Ready(fn(*(b.data for b in bufs)))
+        return self.opq.invoke_operator(fn, *bufs, flags=flags, track=False)
 
     # ------------------------------------------------------------- admission
 
@@ -195,19 +208,34 @@ class Engine:
     # ----------------------------------------------------------- engine step
 
     def _admit(self) -> None:
+        """Fused admission: ONE dispatched prefill forward per bucket batch
+        (first token + per-layer K/V out) and ONE batched donated scatter
+        into the leased slot rows — zero B=1 replay decodes, seeding cost
+        O(1) instructions in prompt length. All buckets of the round are
+        dispatched before the first wait, so they overlap on the OPQ lanes."""
+        pending = []
         for bucket, pairs in self.scheduler.plan_admissions():
             toks = np.zeros((len(pairs), bucket), np.int32)
             last = np.zeros((len(pairs),), np.int32)
             for i, (_, req) in enumerate(pairs):
                 toks[i, :len(req.prompt)] = req.prompt
                 last[i] = len(req.prompt) - 1
-            first = self._dispatch(
+                req.metrics.admitted_s = now()
+            fut = self._dispatch_async(
                 lambda p, t, li: self._prefill(p, t, li),
                 self._params_buf, Buffer(toks, name=f"prefill{bucket}"),
                 Buffer(last), flags=f"prefill/{bucket}")
+            pending.append((pairs, last, fut))
+        for pairs, last, fut in pending:
+            t0 = now()
+            first, kv = fut.result()
             first = np.asarray(first)
+            self.metrics.prefill_wait_s += now() - t0
             self.metrics.prefill_batches += 1
             self.metrics.prefill_tokens += int(last.sum()) + len(pairs)
+            t0 = now()
+            self._seed_admitted(pairs, kv)
+            self.metrics.seed_write_s += now() - t0
             for i, (slot, req) in enumerate(pairs):
                 req.state = RequestState.RUNNING
                 req.tokens.append(int(first[i]))
@@ -215,32 +243,27 @@ class Engine:
                 req.metrics.n_generated = 1
                 self.metrics.observe_tokens(1)
                 if self._finished(req):       # done at the prefill token:
-                    self._retire(slot)        # skip the O(prompt) seeding
-                else:
-                    self._seed_slot(slot, req)
+                    self._retire(slot)        # reset scrubs the seeded row
 
-    def _seed_slot(self, slot: int, req: Request) -> None:
-        """Fill the slot's cache row with the prompt's K/V by replaying it
-        through the B=1 decode step (every replay step is the same (1,1)
-        shape — zero length-dependent recompilation), then copy the region
-        into the leased row."""
-        rc = self._replay_template
-        for i in range(len(req.prompt)):
-            tok = np.asarray([[req.prompt[i]]], np.int32)
-            _, rc = self._dispatch(
-                lambda p, c, t: self._replay(p, c, {"tokens": t}),
-                self._params_buf, self._resident(rc, "replay-cache"),
-                Buffer(tok), flags="replay")
-        self.kv.write_slot(slot, rc, n_valid=len(req.prompt))
+    def _seed_admitted(self, pairs, kv) -> None:
+        """Seed every leased row of one admission bucket from the fused
+        prefill's K/V block — one batched donated scatter. Overridable seam:
+        tests substitute the PR-1 B=1 replay seeder here to prove fused
+        admission is bit-identical to prompt replay."""
+        self.kv.write_slots([slot for slot, _ in pairs], kv,
+                            [len(req.prompt) for _, req in pairs])
 
     def _decode_once(self) -> None:
         toks = np.zeros((self.ecfg.max_slots, 1), np.int32)
+        active = np.zeros((self.ecfg.max_slots,), bool)
         for slot, req in self.scheduler.active.items():
             toks[slot, 0] = req.last_token
+            active[slot] = True
         next_tok, cache = self._dispatch(
-            lambda p, c, t: self._decode(p, c, {"tokens": t}),
+            lambda p, c, b: self._decode(p, c, b),
             self._params_buf, self._resident(self.kv.cache, "kv-cache"),
-            Buffer(toks, name="decode-tokens"), flags="decode")
+            Buffer({"tokens": toks, "active": active}, name="decode-tokens"),
+            flags="decode")
         self.kv.swap(cache)
         self.metrics.decode_steps += 1
         next_np = np.asarray(next_tok)
@@ -295,6 +318,10 @@ class Engine:
         out = dict(self.metrics.summary())
         if self.opq is not None:
             out["opq"] = dict(self.opq.stats)
+            # per-flag instruction counts: the dispatch-shape audit trail
+            # (tests assert admission issues one prefill/<bucket> instruction
+            # per bucket batch and zero replay decodes)
+            out["opq"]["flags"] = dict(self.opq.flag_counts)
         return out
 
     def close(self) -> None:

@@ -9,9 +9,13 @@ the slot lifecycle:
     1); admit/retire never reallocates, they rewrite one batch row in place
     (a jitted ``dynamic_update_slice`` with the cache donated, so XLA aliases
     the buffers instead of copying the whole cache per admission)
-  * ``write_slot(slot, cache)`` on admit — copy a replayed single-request
-    cache region (k/v, int8 scales when ``kv_cache_dtype == "int8"``) into the
-    slot's row and set its index
+  * ``write_slots(slots, kv, n_valid)`` on admit — scatter a fused-prefill
+    K/V block (leaves (L, B, S_bucket, ...), models/serve.py
+    ``prefill_with_cache``) into all leased rows with ONE jitted donated
+    scatter per admission bucket; each row's pad tail is scrubbed back to the
+    pristine pattern so the result is bit-equal to a replay-seeded row
+  * ``write_slot(slot, cache)`` — single-row variant taking a full-length B=1
+    cache (the replay-seeding reference path, now exercised only by tests)
   * ``reset_slot(slot)`` on retire — restore the row to its pristine init
     state (zero k/v, 1e-12 scales, index 0) so the next lease starts clean
 
@@ -47,6 +51,33 @@ def _write_row(cache: Dict, row: Dict, slot, n_valid) -> Dict:
     return out
 
 
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _scatter_rows(cache: Dict, kv: Dict, slots, n_valid) -> Dict:
+    """Batched admission write: scatter per-layer K/V blocks (L, B, Sb, ...)
+    into rows ``slots`` (B,) of the cache, set each row's index to its prompt
+    length, and scrub everything at/after position n_valid[i] back to the
+    pristine pattern (k/v -> 0, scales -> 1e-12) so an admitted row is
+    bit-equal to a replay-seeded one. One donated scatter for the whole
+    bucket batch — O(B rows), never O(cache)."""
+    Sb = kv["k"].shape[2]
+    out = {}
+    for name, leaf in cache.items():
+        if name == "index":
+            out[name] = leaf.at[slots].set(n_valid)
+            continue
+        S = leaf.shape[2]
+        src = kv[name].astype(leaf.dtype)
+        if S > Sb:  # pad the bucket block out to the row length
+            src = jnp.pad(src, [(0, 0), (0, 0), (0, S - Sb)]
+                          + [(0, 0)] * (src.ndim - 3))
+        valid = jnp.arange(S)[None, :] < n_valid[:, None]          # (B, S)
+        valid = valid.reshape(valid.shape + (1,) * (src.ndim - 3))
+        pristine = 1e-12 if name.endswith("_scale") else 0
+        src = jnp.where(valid, src, jnp.asarray(pristine, leaf.dtype))
+        out[name] = leaf.at[:, slots].set(src)
+    return out
+
+
 class KVSlotManager:
     def __init__(self, cfg: ArchConfig, n_slots: int, max_seq_len: int):
         if cfg.family not in ("dense", "moe", "vlm"):
@@ -68,6 +99,17 @@ class KVSlotManager:
                            if name != "index"}
 
     # ------------------------------------------------------------- lifecycle
+
+    def write_slots(self, slots, kv: Dict, n_valid) -> None:
+        """Lease ``slots`` (B,) to the requests of one admission bucket: one
+        batched donated scatter of the fused-prefill K/V block (leaves
+        (L, B, S_bucket, ...)) into the leased rows + their index entries.
+        Pad positions (>= each row's prompt length) are scrubbed to pristine,
+        so the written rows are bit-equal to replay-seeded ones."""
+        slots = jnp.asarray(slots, jnp.int32)
+        n_valid = jnp.asarray(n_valid, jnp.int32)
+        assert slots.shape == n_valid.shape and slots.ndim == 1
+        self.cache = _scatter_rows(self.cache, kv, slots, n_valid)
 
     def write_slot(self, slot: int, src_cache: Dict, n_valid: int) -> None:
         """Lease ``slot`` to a request: copy a single-request (B=1) cache —

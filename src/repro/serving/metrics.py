@@ -2,7 +2,10 @@
 
 Per request we track the two numbers a serving SLO is written against —
 TTFT (arrival -> first generated token, queue wait included) and the decode
-rate after the first token. Engine counters are designed to *reconcile*:
+rate after the first token. TTFT decomposes as queue_wait_s (arrival ->
+admission) + prefill_s (admission -> first token: the fused prefill forward
+plus the batched cache-seed write); the engine aggregates the device-side
+halves as prefill_wait_s / seed_write_s. Engine counters are designed to *reconcile*:
 ``tokens_generated`` must equal the sum of every completed/active request's
 ``n_generated`` (asserted in tests/test_serving.py).
 """
@@ -22,6 +25,7 @@ def now() -> float:
 class RequestMetrics:
     arrival_s: float
     prompt_len: int = 0
+    admitted_s: Optional[float] = None         # slot leased, prefill dispatched
     first_token_s: Optional[float] = None      # set when prefill emits token 1
     finish_s: Optional[float] = None
     n_generated: int = 0
@@ -31,6 +35,23 @@ class RequestMetrics:
         if self.first_token_s is None:
             return None
         return self.first_token_s - self.arrival_s
+
+    @property
+    def queue_wait_s(self) -> Optional[float]:
+        """TTFT share spent waiting for a slot (arrival -> admission)."""
+        if self.admitted_s is None:
+            return None
+        return self.admitted_s - self.arrival_s
+
+    @property
+    def prefill_s(self) -> Optional[float]:
+        """TTFT share spent in the fused prefill + cache seeding (admission ->
+        first token). With fused admission this is one forward + one batched
+        slot write, flat in prompt length — the replay era's O(prompt_len)
+        decode chain lived here."""
+        if self.admitted_s is None or self.first_token_s is None:
+            return None
+        return self.first_token_s - self.admitted_s
 
     @property
     def decode_tok_s(self) -> Optional[float]:
@@ -50,6 +71,8 @@ class EngineMetrics:
     decode_steps: int = 0
     prefill_batches: int = 0
     prefill_tokens: int = 0                    # unpadded prompt tokens prefilled
+    prefill_wait_s: float = 0.0                # wall time blocked on prefill forwards
+    seed_write_s: float = 0.0                  # wall time in batched slot writes
     steps: int = 0                             # engine iterations observed
     queue_depth_sum: int = 0                   # for mean queue depth
     occupancy_sum: int = 0                     # active slots summed per step
@@ -86,6 +109,8 @@ class EngineMetrics:
             "decode_steps": self.decode_steps,
             "prefill_batches": self.prefill_batches,
             "prefill_tokens": self.prefill_tokens,
+            "prefill_wait_s": self.prefill_wait_s,
+            "seed_write_s": self.seed_write_s,
             "sustained_tok_s": self.sustained_tok_s(),
             "mean_queue_depth": self.queue_depth_sum / max(self.steps, 1),
             "mean_occupancy": self.occupancy_sum / max(self.steps, 1),

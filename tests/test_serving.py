@@ -2,24 +2,35 @@
 
   * isolation   — a request's tokens never leak into another slot: staggered
                   mixed-traffic outputs are BIT-IDENTICAL to one-at-a-time
-                  sequential decoding of the same requests
+                  sequential decoding of the same requests (dense AND MoE)
+  * fused admission — seeding is ONE prefill forward + ONE batched slot write
+                  per bucket (asserted via OPQ instruction flags, zero replay
+                  decodes), and the seeded cache + generated tokens are
+                  bit-identical to the PR-1 B=1 prompt-replay seeding (the
+                  reference replay seeder lives HERE, not in src/)
   * slot reuse  — retired slots are re-leased without reallocating the cache
   * metrics     — engine counters reconcile with per-request token counts
   * admission   — the bounded queue and the per-slot sequence budget reject
   * int8 KV     — the slot manager carries the Tensorizer int8 cache scales
+  * MoE         — routing is per-request isolated: idle slots are masked out
+                  of the expert-capacity cumsum, prefill routes row-isolated
 """
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.configs import get_config
 from repro.models import init_model
+from repro.models import serve as SV
+from repro.models import steps as ST
 from repro.serving import (
     Engine, EngineConfig, KVSlotManager, QueueFull, bucket_for, default_buckets,
 )
 
 CFG = get_config("tinyllama-1.1b").smoke()
+MOE_CFG = get_config("moonshot-v1-16b-a3b").smoke()
 RNG = np.random.default_rng(7)
 
 
@@ -28,13 +39,18 @@ def params():
     return init_model(CFG, jax.random.PRNGKey(0))
 
 
+@pytest.fixture(scope="module")
+def moe_params():
+    return init_model(MOE_CFG, jax.random.PRNGKey(1))
+
+
 def _prompts(lens):
     return [RNG.integers(0, CFG.vocab, (l,), dtype=np.int32) for l in lens]
 
 
-def _sequential(params, prompts, gens, **ecfg_kw):
+def _sequential(params, prompts, gens, cfg=CFG, **ecfg_kw):
     """Reference: same engine, one request at a time, drained in between."""
-    eng = Engine(CFG, params, EngineConfig(max_slots=2, max_seq_len=32, **ecfg_kw))
+    eng = Engine(cfg, params, EngineConfig(max_slots=2, max_seq_len=32, **ecfg_kw))
     outs = []
     for p, g in zip(prompts, gens):
         req = eng.submit(p, g)
@@ -42,6 +58,42 @@ def _sequential(params, prompts, gens, **ecfg_kw):
         outs.append(list(req.tokens))
     eng.close()
     return outs
+
+
+class _ReplaySeededEngine(Engine):
+    """The PR-1 admission reference: first token from the bucketed prefill,
+    but slot caches seeded by replaying the prompt token-by-token through the
+    B=1 decode step (O(prompt_len) forwards — the path fused admission
+    deleted). Kept in tests only, as the bit-identity oracle."""
+
+    def __init__(self, cfg, params, engine_cfg=None, **kw):
+        super().__init__(cfg, params, engine_cfg, **kw)
+        self._replay = jax.jit(ST.make_decode_step(cfg))
+        self._replay_template = SV.init_cache(cfg, 1, self.ecfg.max_seq_len)
+
+    def _seed_admitted(self, pairs, kv):
+        del kv                               # fused prefill K/V ignored
+        for slot, req in pairs:
+            rc = self._replay_template
+            for t in req.prompt:
+                _, rc = self._replay(
+                    self.params, rc, {"tokens": jnp.asarray([[int(t)]], jnp.int32)})
+            self.kv.write_slot(slot, rc, n_valid=len(req.prompt))
+
+
+def _pure_sequential_decode(cfg, params, prompt, gen, max_seq):
+    """Single-request decoding with no engine at all: feed the prompt through
+    the B=1 decode step, then greedy-decode ``gen`` tokens."""
+    dec = jax.jit(ST.make_decode_step(cfg))
+    cache = SV.init_cache(cfg, 1, max_seq)
+    for t in prompt:
+        tok, cache = dec(params, cache, {"tokens": jnp.asarray([[int(t)]], jnp.int32)})
+    out = [int(tok[0])]
+    while len(out) < gen:
+        tok, cache = dec(params, cache,
+                         {"tokens": jnp.asarray([[out[-1]]], jnp.int32)})
+        out.append(int(tok[0]))
+    return out
 
 
 def test_staggered_arrivals_match_sequential_exactly(params):
@@ -160,6 +212,14 @@ def test_single_slot_engine_reuses_cleanly(params):
     eng.close()
 
 
+def test_engine_rejects_bucket_wider_than_slot_rows(params):
+    """A bucket wider than max_seq_len could admit prompts whose fused K/V
+    block can't be scattered into the slot rows — rejected at construction."""
+    with pytest.raises(ValueError, match="exceeds"):
+        Engine(CFG, params, EngineConfig(max_slots=2, max_seq_len=32,
+                                         buckets=(64,)))
+
+
 def test_admission_rejects_prompt_over_largest_bucket(params):
     """Custom buckets capping below max_seq_len must reject at submit(), not
     wedge the scheduler mid-admission after a slot was leased."""
@@ -200,6 +260,115 @@ def test_int8_kv_slot_manager(params):
         seq.append(list(r.tokens))
     eng2.close()
     assert staggered == seq
+
+
+@pytest.mark.parametrize("family,kv_dtype", [
+    ("dense", "bfloat16"), ("dense", "int8"), ("moe", "bfloat16"),
+])
+def test_fused_seeding_bit_identical_to_replay(params, moe_params, family, kv_dtype):
+    """The fused-admission guarantee: seeding a slot from the prefill's K/V
+    block produces (a) the bit-identical cache state and (b) the bit-identical
+    generated tokens of the PR-1 B=1 prompt-replay seeding — for the float and
+    the int8-KV (per-token scales) cache formats, and for MoE (where dropless
+    row-isolated prefill routing makes a batched prompt route exactly as the
+    one-token-at-a-time replay did) — and both equal decoding the request with
+    no engine at all."""
+    base, params = (CFG, params) if family == "dense" else (MOE_CFG, moe_params)
+    cfg = base.replace(kv_cache_dtype=kv_dtype)
+    prompts = _prompts([5, 9, 4])
+    gens = [6, 4, 7]
+    ecfg = EngineConfig(max_slots=2, max_seq_len=32)
+    eng_f = Engine(cfg, params, ecfg)
+    eng_r = _ReplaySeededEngine(cfg, params, ecfg)
+    reqs_f = [eng_f.submit(p, g) for p, g in zip(prompts, gens)]
+    reqs_r = [eng_r.submit(p, g) for p, g in zip(prompts, gens)]
+    eng_f._admit()
+    eng_r._admit()
+    # freshly admitted rows: the batched fused scatter leaves the cache
+    # bit-equal to per-slot replay writes (pad tails scrubbed to pristine)
+    for name in eng_f.kv.cache:
+        np.testing.assert_array_equal(
+            np.asarray(eng_f.kv.cache[name]), np.asarray(eng_r.kv.cache[name]),
+            err_msg=f"cache leaf {name!r} diverged ({kv_dtype})")
+    eng_f.run_until_complete()
+    eng_r.run_until_complete()
+    toks_f = [list(r.tokens) for r in reqs_f]
+    assert toks_f == [list(r.tokens) for r in reqs_r]
+    assert toks_f == [_pure_sequential_decode(cfg, params, p, g, 32)
+                      for p, g in zip(prompts, gens)]
+    eng_f.close()
+    eng_r.close()
+
+
+def test_admission_is_one_forward_per_bucket_no_replay(params):
+    """Dispatch-shape audit via OPQ instruction flags: an admission round
+    issues exactly ONE prefill instruction per bucket batch (same-bucket
+    arrivals share it) and ZERO replay decodes — seeding is O(1) dispatches
+    in prompt length."""
+    eng = Engine(CFG, params, EngineConfig(max_slots=4, max_seq_len=32))
+    for l, g in ((3, 4), (9, 3), (20, 5)):       # buckets: 16, 16, 32
+        eng.submit(_prompts([l])[0], g)
+    eng.step()
+    flags = eng.stats()["opq"]["flags"]
+    assert flags["prefill/16"] == 1              # two prompts, one forward
+    assert flags["prefill/32"] == 1
+    eng.run_until_complete()
+    s = eng.stats()
+    flags = s["opq"]["flags"]
+    # the complete run's instruction ledger: per-bucket prefills and batched
+    # decode steps, nothing else — the replay instruction class is extinct
+    assert set(flags) == {"prefill/16", "prefill/32", "decode"}
+    assert sum(c for f, c in flags.items()
+               if f.startswith("prefill/")) == s["prefill_batches"] == 2
+    assert flags["decode"] == s["decode_steps"]
+    eng.close()
+
+
+def test_moe_staggered_matches_sequential(moe_params):
+    """MoE serving carries the dense bit-identity guarantee now: idle slots
+    are masked out of the expert-capacity cumsum at decode and fused prefill
+    routes row-isolated, so requests joining/leaving mid-flight decode exactly
+    as if served one at a time."""
+    prompts = _prompts([5, 9, 4, 7])
+    gens = [6, 5, 8, 3]
+    eng = Engine(MOE_CFG, moe_params, EngineConfig(max_slots=2, max_seq_len=32))
+    reqs = [eng.submit(prompts[0], gens[0])]
+    eng.step()                                    # r0 decoding alone
+    reqs.append(eng.submit(prompts[1], gens[1]))  # joins mid-flight
+    eng.step()
+    reqs.append(eng.submit(prompts[2], gens[2]))
+    reqs.append(eng.submit(prompts[3], gens[3]))
+    eng.run_until_complete()
+    staggered = [list(r.tokens) for r in reqs]
+    assert staggered == _sequential(moe_params, prompts, gens, cfg=MOE_CFG)
+    eng.close()
+
+
+def test_moe_idle_mask_restores_isolation(moe_params):
+    """Teeth for the capacity-masking fix, at the apply_moe level: four
+    identical tokens all pick the same experts, so with shared capacity
+    ceil(4*topk/E*cf) = 3 the last row's expert traffic is dropped on the
+    floor. With its three batchmates masked idle, the survivor routes exactly
+    as the first row does alone."""
+    from repro.models import moe as MOE
+    p = jax.tree.map(lambda l: l[0], moe_params["layers"])["moe"]
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, 1, MOE_CFG.d_model), jnp.float32)
+    x4 = jnp.broadcast_to(x, (4, 1, MOE_CFG.d_model))
+    y_shared, _ = MOE.apply_moe(p, x4, MOE_CFG)
+    y_masked, _ = MOE.apply_moe(p, x4, MOE_CFG,
+                                active=jnp.asarray([False, False, False, True]))
+    y_first, _ = MOE.apply_moe(p, x4, MOE_CFG,
+                               active=jnp.asarray([True, False, False, False]))
+    # the lone active row routes identically wherever it sits in the batch
+    np.testing.assert_array_equal(np.asarray(y_masked[3]), np.asarray(y_first[0]))
+    # and shared capacity really was the failure mode being fixed: without the
+    # mask, row 3 lost its routed experts to its (identical) batchmates
+    assert not np.array_equal(np.asarray(y_shared[3]), np.asarray(y_masked[3]))
+    # serving decode is dropless: even with every batchmate ACTIVE and
+    # colliding on the same experts (worst case for the old shared capacity
+    # of 3), each token routes exactly as it does alone
+    y_active, _ = MOE.apply_moe(p, x4, MOE_CFG, active=jnp.ones((4,), bool))
+    np.testing.assert_array_equal(np.asarray(y_active[3]), np.asarray(y_first[0]))
 
 
 def test_bucketing_bounds_prefill_shapes(params):
