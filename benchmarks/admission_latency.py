@@ -41,7 +41,7 @@ from repro.models import init_model
 from repro.models import serve as SV
 from repro.models import steps as ST
 from repro.serving.engine import Engine, EngineConfig
-from repro.serving.kv import KVSlotManager
+from repro.serving.store import ContiguousKVStore
 
 from common import emit
 
@@ -93,7 +93,7 @@ def replay_seed_cell(cfg, params, *, prompt_len: int, batch: int, max_seq: int,
                for _ in range(batch)]
     replay = jax.jit(ST.make_decode_step(cfg))
     template = SV.init_cache(cfg, 1, max_seq)
-    mgr = KVSlotManager(cfg, n_slots=batch, max_seq_len=max_seq)
+    mgr = ContiguousKVStore(cfg, n_slots=batch, max_seq_len=max_seq)
 
     def seed_all():
         for slot, p in enumerate(prompts):

@@ -2,18 +2,29 @@
 continuous-batching engine (Jouppi et al.'s framing: a serving accelerator is
 judged at its latency-bounded throughput, not peak batch FLOPs).
 
-    PYTHONPATH=src python benchmarks/serve_throughput.py [--quantize serve]
+    PYTHONPATH=src python benchmarks/serve_throughput.py [--quantize serve] \
+        [--cache-backend contiguous|paged] \
+        [--paged-report reports/BENCH_paged.json]
 
 Sweeps the arrival stagger (engine steps between request arrivals — smaller
 stagger = higher offered load) and the slot count, and emits the CSV contract
 of benchmarks/common.py: name,us_per_call,derived. ``us_per_call`` is the
 microseconds per generated token (1e6 / sustained tok/s); ``derived`` carries
-sustained tok/s, mean TTFT, and mean slot occupancy.
+sustained tok/s, mean TTFT, and mean slot occupancy. ``--cache-backend``
+selects the SlotStore backend the sweep runs through (serving/store.py).
+
+``--paged-report PATH`` skips the sweep and runs the paged-vs-contiguous
+memory cell instead: the same short-prompt mix served by both backends
+(tokens asserted bit-identical), with the paged block pool sized BELOW the
+contiguous footprint — the JSON records cache bytes per admitted concurrent
+request for each backend and the admission-backpressure counters, the
+regression record for reports/BENCH_paged.json and the CI artifact.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 from pathlib import Path
 
@@ -34,10 +45,12 @@ from common import emit
 
 
 def run_cell(cfg, params, *, slots: int, stagger: int, n_requests: int,
-             prompt_len: int, gen: int):
+             prompt_len: int, gen: int, backend: str = "auto",
+             block_size: int = 16, n_blocks=None, max_seq_len=None):
     engine = Engine(cfg, params, EngineConfig(
         max_slots=slots, max_queue=n_requests,
-        max_seq_len=prompt_len + gen))
+        max_seq_len=max_seq_len or (prompt_len + gen), cache_backend=backend,
+        block_size=block_size, n_blocks=n_blocks))
     rng = np.random.default_rng(0)
     reqs = []
     for _ in range(n_requests):
@@ -49,17 +62,102 @@ def run_cell(cfg, params, *, slots: int, stagger: int, n_requests: int,
     engine.run_until_complete()
     s = engine.stats()
     ttft_ms = 1e3 * float(np.mean([r.metrics.ttft_s for r in reqs]))
+    toks = [list(r.tokens) for r in reqs]
     engine.close()
-    return s, ttft_ms
+    return s, ttft_ms, toks
+
+
+def paged_memory_report(cfg, params, *, slots: int, prompt_len: int, gen: int,
+                        block_size: int, out_path: str) -> dict:
+    """The paged-KV memory claim, measured: serve one short-prompt mix through
+    both backends under the same per-slot sequence BUDGET (``max_seq``, 4x the
+    requests' true length — the headroom a production engine must offer), with
+    the paged pool sized to the mix's true footprint. The contiguous backend
+    reserves full max_seq rows per slot — a footprint that exceeds the whole
+    paged pool — while paged leases only ceil((prompt+gen)/block) blocks per
+    request, so it serves strictly more concurrent short requests per byte.
+    Token streams are asserted bit-identical, so the bytes saved cost zero
+    output fidelity."""
+    req_len = prompt_len + gen
+    max_seq = 4 * req_len                  # the budget slots must offer
+    n_requests = 2 * slots
+    blocks_per_req = -(-req_len // block_size)
+    # pool: exactly the blocks the admitted short-request concurrency needs
+    # (+ the reserved null block) — well under slots x max_seq rows
+    n_blocks = slots * blocks_per_req + 1
+
+    s_c, ttft_c, toks_c = run_cell(
+        cfg, params, slots=slots, stagger=0, n_requests=n_requests,
+        prompt_len=prompt_len, gen=gen, backend="contiguous",
+        max_seq_len=max_seq)
+    s_p, ttft_p, toks_p = run_cell(
+        cfg, params, slots=slots, stagger=0, n_requests=n_requests,
+        prompt_len=prompt_len, gen=gen, backend="paged",
+        block_size=block_size, n_blocks=n_blocks, max_seq_len=max_seq)
+    assert toks_c == toks_p, "paged decode diverged from contiguous"
+
+    bytes_c = s_c["cache"]["bytes"]
+    bytes_p = s_p["cache"]["bytes"]
+    report = {
+        "benchmark": "paged_kv_memory",
+        "arch": cfg.name,
+        "kv_cache_dtype": cfg.kv_cache_dtype,
+        "slots": slots,
+        "prompt_len": prompt_len,
+        "gen": gen,
+        "max_seq_len": max_seq,
+        "block_size": block_size,
+        "n_blocks": n_blocks,
+        "requests": n_requests,
+        "bit_identical_tokens": True,
+        "contiguous": {
+            "cache_bytes": bytes_c,
+            "bytes_per_admitted_request": bytes_c // slots,
+            "ttft_ms": ttft_c,
+            "sustained_tok_s": s_c["sustained_tok_s"],
+        },
+        "paged": {
+            "cache_bytes": bytes_p,
+            "bytes_per_admitted_request": bytes_p // slots,
+            # per-step transient contiguous view (the bit-identity gather
+            # bridge) — the peak decode working set is cache + view, so the
+            # byte saving is in the RESIDENT allocation, not the step peak
+            "decode_view_bytes": s_p["cache"]["decode_view_bytes"],
+            "ttft_ms": ttft_p,
+            "sustained_tok_s": s_p["sustained_tok_s"],
+            "admissions_deferred": s_p["admissions_deferred"],
+            "blocks_total": s_p["cache"]["blocks_total"],
+        },
+        "paged_over_contiguous_bytes": bytes_p / bytes_c,
+        # the headline: concurrent admitted requests a byte of cache buys
+        "requests_per_mib_contiguous": slots / (bytes_c / 2**20),
+        "requests_per_mib_paged": slots / (bytes_p / 2**20),
+    }
+    emit("paged_kv_bytes_per_req", report["paged"]["bytes_per_admitted_request"],
+         f"contiguous={report['contiguous']['bytes_per_admitted_request']}B "
+         f"ratio={report['paged_over_contiguous_bytes']:.2f}")
+    Path(out_path).parent.mkdir(parents=True, exist_ok=True)
+    Path(out_path).write_text(json.dumps(report, indent=2) + "\n")
+    print(f"# paged {bytes_p}B vs contiguous {bytes_c}B "
+          f"({report['paged_over_contiguous_bytes']:.2f}x) for the same "
+          f"admitted concurrency, tokens bit-identical")
+    print(f"# wrote {out_path}")
+    return report
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tinyllama-1.1b")
     ap.add_argument("--quantize", default="off", choices=["off", "serve"])
+    ap.add_argument("--cache-backend", default="auto",
+                    choices=["auto", "contiguous", "paged"])
+    ap.add_argument("--block-size", type=int, default=8)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--paged-report", default="",
+                    help="write the paged-vs-contiguous memory JSON here "
+                         "and skip the throughput sweep")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch).smoke().replace(quantize=args.quantize)
@@ -69,6 +167,13 @@ def main(argv=None) -> int:
         if args.quantize == "serve":
             params = tz.quantize_params(params, predicate=_quant_predicate)
 
+        if args.paged_report:
+            paged_memory_report(
+                cfg, params, slots=4, prompt_len=args.prompt_len,
+                gen=args.gen, block_size=args.block_size,
+                out_path=args.paged_report)
+            return 0
+
         for slots in (1, 2, 4, 8):
             # warmup compiles this slot count's executables with the sweep's
             # own shapes — same prompt_len+gen (cache/max_seq_len), the
@@ -77,19 +182,23 @@ def main(argv=None) -> int:
             # measure steady-state serving, not XLA
             run_cell(cfg, params, slots=slots, stagger=0,
                      n_requests=args.requests, prompt_len=args.prompt_len,
-                     gen=args.gen)
+                     gen=args.gen, backend=args.cache_backend,
+                     block_size=args.block_size)
             run_cell(cfg, params, slots=slots, stagger=1, n_requests=2,
-                     prompt_len=args.prompt_len, gen=args.gen)
+                     prompt_len=args.prompt_len, gen=args.gen,
+                     backend=args.cache_backend, block_size=args.block_size)
             for stagger in (0, 1, 4):          # all-at-once .. trickle
-                s, ttft_ms = run_cell(
+                s, ttft_ms, _ = run_cell(
                     cfg, params, slots=slots, stagger=stagger,
                     n_requests=args.requests, prompt_len=args.prompt_len,
-                    gen=args.gen)
+                    gen=args.gen, backend=args.cache_backend,
+                    block_size=args.block_size)
                 tps = s["sustained_tok_s"]
                 emit(f"serve_s{slots}_g{stagger}",
                      1e6 / max(tps, 1e-9),
                      f"sustained={tps:.1f}tok/s ttft={ttft_ms:.0f}ms "
-                     f"occ={s['mean_occupancy']:.2f}")
+                     f"occ={s['mean_occupancy']:.2f} "
+                     f"backend={s['cache']['backend']}")
     return 0
 
 

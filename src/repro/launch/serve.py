@@ -17,6 +17,14 @@ batched scatter writes into the leased slot rows (O(1) dispatches per bucket,
 zero replay decodes); all device work is dispatched through the OPQ runtime.
 ``--stagger-steps N`` offsets arrivals by N engine steps to exercise
 mid-flight joins.
+
+The cache sits behind the SlotStore protocol (serving/store.py):
+``--cache-backend contiguous`` leases per-slot rows sized to the seq budget,
+``--cache-backend paged`` leases fixed-size blocks from a pool
+(``--block-size``, ``--n-blocks``) with admission backpressure when the pool
+runs dry, and ``auto`` picks contiguous for dense/moe and the recurrent-state
+backend for ssm/hybrid archs (xlstm/zamba2 serve end-to-end now). The
+end-of-run report prints ``memory_stats()`` for the selected backend.
 """
 
 from __future__ import annotations
@@ -33,6 +41,7 @@ from repro.distributed import sharding as shd
 from repro.launch.mesh import make_smoke_mesh
 from repro.models import init_model
 from repro.serving.engine import Engine, EngineConfig
+from repro.serving.metrics import format_memory_stats
 
 
 def _quant_predicate(path, leaf):
@@ -63,6 +72,15 @@ def main(argv=None) -> int:
     ap.add_argument("--max-queue", type=int, default=64)
     ap.add_argument("--stagger-steps", type=int, default=0,
                     help="engine steps between request arrivals (0 = all at once)")
+    ap.add_argument("--cache-backend", default="auto",
+                    choices=["auto", "contiguous", "paged", "recurrent"],
+                    help="SlotStore backend (auto: contiguous for dense/moe, "
+                         "recurrent for ssm/hybrid)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="paged backend: tokens per KV block")
+    ap.add_argument("--n-blocks", type=int, default=0,
+                    help="paged backend: pool size in blocks (0 = full "
+                         "slots x max-seq capacity)")
     ap.add_argument("--model-parallel", type=int, default=1)
     args = ap.parse_args(argv)
     for name in ("requests", "prompt_len", "gen", "slots", "max_queue"):
@@ -73,11 +91,13 @@ def main(argv=None) -> int:
     if args.smoke:
         cfg = cfg.smoke()
     cfg = cfg.replace(quantize=args.quantize)
-    if cfg.family not in ("dense", "moe") or cfg.input_mode != "tokens":
+    if (cfg.family not in ("dense", "moe", "ssm", "hybrid")
+            or cfg.input_mode != "tokens"):
         ap.error(f"--arch {args.arch} (family={cfg.family}, "
                  f"input_mode={cfg.input_mode}) is not servable yet: the "
-                 "engine handles token-input dense/moe archs; hybrid/ssm/"
-                 "encdec/vlm serving is a ROADMAP item")
+                 "engine handles token-input dense/moe (contiguous or paged "
+                 "KV) and ssm/hybrid (recurrent-state) archs; encdec/vlm "
+                 "serving is a ROADMAP item")
     mesh = make_smoke_mesh(args.model_parallel)
 
     with shd.use_mesh(mesh):
@@ -94,7 +114,9 @@ def main(argv=None) -> int:
 
         engine = Engine(cfg, params, EngineConfig(
             max_slots=args.slots, max_queue=args.max_queue,
-            max_seq_len=args.prompt_len + args.gen))
+            max_seq_len=args.prompt_len + args.gen,
+            cache_backend=args.cache_backend, block_size=args.block_size,
+            n_blocks=args.n_blocks or None))
         requests = []
         for i in range(args.requests):
             requests.append(engine.submit(prompts[i], args.gen, strict=True))
@@ -119,7 +141,9 @@ def main(argv=None) -> int:
         print(f"[serve] admission: fused prefill-with-cache | "
               f"prefill wait {s['prefill_wait_s']*1e3:.1f} ms | "
               f"batched seed writes {s['seed_write_s']*1e3:.1f} ms | "
-              f"0 replay decodes", flush=True)
+              f"0 replay decodes | "
+              f"{s['admissions_deferred']} deferred (backpressure)", flush=True)
+        print(f"[serve] cache: {format_memory_stats(s['cache'])}", flush=True)
         if "opq" in s:
             o = s["opq"]
             print(f"[serve] opq: {o['issued']} instructions | "

@@ -306,6 +306,26 @@ def project_kv_for_cross(p: Dict, enc_out: jax.Array, cfg: ArchConfig):
 # KV cache + decode
 # ---------------------------------------------------------------------------
 
+def gather_block_kv(pool: Dict, tables: jax.Array) -> Dict:
+    """Block-paged K/V gather (serving/store.py PagedKVStore): pool leaves
+    (L, n_blocks, block_size, ...) + per-slot block tables (B, MB) -> the
+    contiguous view (L, B, MB*block_size, ...) that :func:`decode_attention`
+    consumes — every slot's blocks concatenated in table order, one
+    ``jnp.take`` over the block axis per leaf (XLA lowers it to a single
+    dynamic-gather; rows stay block-aligned so the copy is contiguous per
+    block). Table entries past a slot's lease point at the reserved null
+    block 0; those view positions sit beyond the slot's causal horizon, where
+    decode masks scores to -inf and the softmax weight is exactly 0."""
+    B, MB = tables.shape
+    flat = tables.reshape(-1)
+    out = {}
+    for name, leaf in pool.items():
+        bs = leaf.shape[2]
+        g = jnp.take(leaf, flat, axis=1)                   # (L, B*MB, bs, ...)
+        out[name] = g.reshape(leaf.shape[0], B, MB * bs, *leaf.shape[3:])
+    return out
+
+
 def cache_spec(cfg: ArchConfig, seq_shard: bool) -> P:
     """Cache (B, S, KV, hd): batch->data axes, seq->data when SP (long ctx,
     batch too small to shard), heads->model when divisible."""

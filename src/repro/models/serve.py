@@ -40,13 +40,15 @@ def _seq_shard(cfg: ArchConfig, batch: int) -> bool:
 def init_cache(cfg: ArchConfig, batch: int, seq: int, *,
                per_slot_index: bool = False) -> Dict:
     """``per_slot_index`` builds the continuous-batching cache layout: a (B,)
-    index vector so every batch row (serving slot) tracks its own position
-    (dense/moe/vlm only — the families the serving engine batches)."""
+    index vector so every batch row (serving slot) tracks its own position —
+    supported for the families the serving engine batches (dense/moe/vlm K/V
+    rows and ssm/hybrid recurrent state rows; encdec's scalar-index cross
+    cache is not slot-batched)."""
     int8_kv = cfg.kv_cache_dtype == "int8" and cfg.family in ("dense", "moe", "vlm")
     dt = jnp.int8 if int8_kv else L.cdtype(cfg)
     seq_shard = _seq_shard(cfg, batch)
     spec = A.cache_spec(cfg, seq_shard)
-    if per_slot_index and cfg.family not in ("dense", "moe", "vlm"):
+    if per_slot_index and cfg.family == "encdec":
         raise ValueError(f"per-slot cache indices unsupported for {cfg.family}")
     idx0 = (jnp.zeros((batch,), jnp.int32) if per_slot_index
             else jnp.zeros((), jnp.int32))
@@ -86,7 +88,7 @@ def init_cache(cfg: ArchConfig, batch: int, seq: int, *,
         }
         return {"k": k, "v": v, "groups": mk(n_groups * cfg.attn_every),
                 "tail": mk(rem) if rem else None,
-                "index": jnp.zeros((), jnp.int32)}
+                "index": idx0}
     if cfg.family == "ssm":
         n_pairs = cfg.n_layers // 2
         H, hd = XL._heads(cfg)
@@ -99,9 +101,35 @@ def init_cache(cfg: ArchConfig, batch: int, seq: int, *,
             "slstm_n": jnp.full((n_pairs, batch, D), 1e-6, jnp.float32),
             "slstm_h": jnp.zeros((n_pairs, batch, D), jnp.float32),
             "slstm_m": jnp.full((n_pairs, batch, D), -1e30, jnp.float32),
-            "index": jnp.zeros((), jnp.int32),
+            "index": idx0,
         }
     raise ValueError(cfg.family)
+
+
+def init_paged_cache(cfg: ArchConfig, n_slots: int, n_blocks: int,
+                     block_size: int, blocks_per_slot: int) -> Dict:
+    """Block-paged serving cache (dense/moe/vlm): K/V entries live in a pool
+    of ``n_blocks`` blocks of ``block_size`` tokens — k/v (L, NB, bs, KV, hd),
+    int8 scales (L, NB, bs, KV) — addressed through per-slot block tables
+    (B, MB). Block 0 is the reserved null block (serving/store.py
+    PagedKVStore). Scales park at 1e-12 like the contiguous layout so a
+    pristine entry dequantizes to exactly 0."""
+    if cfg.family not in ("dense", "moe", "vlm"):
+        raise ValueError(f"paged KV cache is a dense-family layout, not {cfg.family}")
+    int8_kv = cfg.kv_cache_dtype == "int8"
+    dt = jnp.int8 if int8_kv else L.cdtype(cfg)
+    shape = (cfg.n_layers, n_blocks, block_size, cfg.n_kv, cfg.hd)
+    cache = {
+        "k": jnp.zeros(shape, dt),
+        "v": jnp.zeros(shape, dt),
+        "index": jnp.zeros((n_slots,), jnp.int32),
+        "tables": jnp.zeros((n_slots, blocks_per_slot), jnp.int32),
+    }
+    if int8_kv:
+        ones = lambda: jnp.full(shape[:-1], 1e-12, jnp.float32)
+        cache["k_scale"] = ones()
+        cache["v_scale"] = ones()
+    return cache
 
 
 # ===========================================================================
@@ -119,6 +147,53 @@ def prefill_with_cache(params: Dict, cfg: ArchConfig, batch: Dict) -> Tuple[jax.
     tests/test_serving.py."""
     logits, _, kv = M.forward(params, cfg, batch, return_kv=True)
     return logits, kv
+
+
+def prefill_recurrent(params: Dict, cfg: ArchConfig, tokens: jax.Array,
+                      last_index: jax.Array, max_seq_len: int
+                      ) -> Tuple[jax.Array, Dict]:
+    """Fused admission prefill for the recurrent families (ssm/hybrid): run
+    the right-padded prompt batch through the single-token decode body with a
+    ``lax.scan`` over time — ONE dispatched instruction per admission bucket —
+    and return (first_tokens (B,), cache) where cache holds each row's
+    post-prompt state (mamba conv/ssm, xlstm mLSTM/sLSTM, hybrid attn K/V),
+    ready to scatter into leased slot rows.
+
+    Rows whose prompt ended (t > last_index[i]) keep their state frozen via a
+    per-leaf ``where`` mask, so pad tokens never touch it. Each scan step
+    computes exactly the math of a B-row decode step, and every recurrent
+    decode body is row-independent, so the emitted states and first tokens
+    are bit-identical to replaying each prompt alone through the B=1 decode
+    step — the recurrent analogue of the dense fused==replay guarantee."""
+    B, Sb = tokens.shape
+    cache0 = init_cache(cfg, B, max_seq_len, per_slot_index=True)
+    first0 = jnp.zeros((B,), jnp.int32)
+
+    def body(carry, inp):
+        cache, first = carry
+        t, tok = inp                                        # (), (B,)
+        logits, new_cache = decode(params, cfg, cache, {"tokens": tok[:, None]})
+        keep = t <= last_index                              # (B,) still in prompt
+
+        def sel(path, new, old):
+            if new is old:
+                return new
+            name_is_index = any(
+                getattr(p, "key", None) == "index" for p in path[-1:])
+            if name_is_index:
+                return jnp.where(keep, new, old)
+            mask = keep.reshape((1, B) + (1,) * (new.ndim - 2))
+            return jnp.where(mask, new, old)
+
+        cache = jax.tree_util.tree_map_with_path(sel, new_cache, cache)
+        tok1 = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        first = jnp.where(t == last_index, tok1, first)
+        return (cache, first), None
+
+    (cache, first), _ = jax.lax.scan(
+        body, (cache0, first0),
+        (jnp.arange(Sb), jnp.moveaxis(tokens.astype(jnp.int32), 1, 0)))
+    return first, cache
 
 
 # ===========================================================================

@@ -5,6 +5,8 @@
   make_prefill_step(cfg) — full-sequence forward returning last-token logits
   make_prefill_with_cache_step(cfg) — bucketed serving prefill returning
                            (first_tokens, per-layer K/V in cache layout)
+  make_recurrent_prefill_step(cfg, max_seq_len) — masked-scan admission
+                           prefill for ssm/hybrid recurrent-state slots
   make_decode_step(cfg)  — one-token decode against the KV/state cache
   input_specs(cfg,shape) — ShapeDtypeStruct stand-ins + shardings per cell
                            (the assignment's no-allocation dry-run inputs)
@@ -89,6 +91,19 @@ def make_prefill_with_cache_step(cfg: ArchConfig) -> Callable:
         idx = jnp.broadcast_to(last_index[:, None, None], (B, 1, V))
         row = jnp.take_along_axis(logits, idx, axis=1)[:, 0, :]
         return jnp.argmax(row, axis=-1), kv
+    return prefill_step
+
+
+def make_recurrent_prefill_step(cfg: ArchConfig, max_seq_len: int) -> Callable:
+    """Fused admission step for the recurrent families (ssm/hybrid): a masked
+    scan of the decode body over the right-padded prompt bucket — one
+    dispatch per bucket, same (params, tokens, last_index) ->
+    (first_tokens, cache-payload) contract as the dense
+    ``make_prefill_with_cache_step`` so the engine's admission path is
+    backend-agnostic (serving/store.py RecurrentStateStore)."""
+    def prefill_step(params, tokens, last_index):
+        return SV.prefill_recurrent(params, cfg, tokens, last_index,
+                                    max_seq_len)
     return prefill_step
 
 

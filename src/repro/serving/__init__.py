@@ -1,8 +1,20 @@
-"""Continuous-batching serving engine on the OPQ runtime (see engine.py)."""
+"""Continuous-batching serving engine on the OPQ runtime (see engine.py).
+
+Public cache surface: the :class:`SlotStore` protocol (store.py) with
+``ContiguousKVStore`` / ``PagedKVStore`` / ``RecurrentStateStore`` backends
+and the ``make_store(cfg, n_slots, max_seq_len, backend=...)`` factory.
+``KVSlotManager`` survives as a deprecated shim over ContiguousKVStore.
+"""
 
 from repro.serving.engine import (          # noqa: F401
     Engine, EngineConfig, QueueFull, Request, RequestState,
 )
-from repro.serving.kv import KVSlotManager              # noqa: F401
-from repro.serving.metrics import EngineMetrics, RequestMetrics  # noqa: F401
+from repro.serving.kv import KVSlotManager              # noqa: F401  (deprecated)
+from repro.serving.metrics import (          # noqa: F401
+    EngineMetrics, RequestMetrics, format_memory_stats,
+)
 from repro.serving.scheduler import Scheduler, bucket_for, default_buckets  # noqa: F401
+from repro.serving.store import (            # noqa: F401
+    ContiguousKVStore, PagedKVStore, RecurrentStateStore, SlotStore,
+    make_store, pristine_value,
+)

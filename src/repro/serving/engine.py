@@ -4,8 +4,8 @@ The production-shaped layer the GPTPU runtime was missing: requests enter a
 bounded FIFO (admission control), a slot-based scheduler joins them into a
 fixed-width in-flight decode batch and retires them as they finish — no
 full-batch barrier, so a long generation never stalls short ones — and a
-KVSlotManager leases per-slot cache rows (allocate once, reset on retire,
-int8-KV aware). All device work is dispatched as OPQ instructions, so the
+SlotStore backend leases per-slot cache capacity (allocate once, reset on
+retire, int8-KV aware). All device work is dispatched as OPQ instructions, so the
 paper's buffer-affinity scheduling and backup-task straggler mitigation apply
 to serving traffic, not just the Rodinia apps.
 
@@ -30,9 +30,17 @@ out of the expert-capacity cumsum at decode, prefill routes row-isolated, and
 serving capacity is dropless (models/moe.py), so a token's expert assignment
 never depends on its batchmates.
 
-Scope: token-input dense/moe families (tinyllama, qwen3, granite, starcoder2,
-deepseek/moonshot MoE). Hybrid/ssm/encdec recurrent state slots and paged KV
-are ROADMAP items.
+The cache itself lives behind the SlotStore protocol (serving/store.py): the
+engine only leases, seeds, resets, and exchanges an opaque pytree with the
+decode step — it never touches cache leaves. Backends: ``contiguous``
+(per-slot rows sized to max_seq_len), ``paged`` (vLLM-style block pool +
+per-slot block tables; ``lease`` returning False is admission backpressure
+when the pool runs dry), and ``recurrent`` (per-slot mamba/xlstm state rows —
+ssm and hybrid families serve through the same engine, admitted by a
+masked-scan prefill that is one dispatch per bucket like the dense path).
+
+Scope: token-input dense/moe/ssm/hybrid families. encdec/vlm (embeds input)
+serving is a ROADMAP item.
 """
 
 from __future__ import annotations
@@ -49,9 +57,9 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.core.opq import OPQ, Buffer
 from repro.models import steps as ST
-from repro.serving.kv import KVSlotManager
 from repro.serving.metrics import EngineMetrics, RequestMetrics, now
 from repro.serving.scheduler import Scheduler, default_buckets
+from repro.serving.store import RECURRENT_FAMILIES, SlotStore, make_store
 
 
 class RequestState(enum.Enum):
@@ -82,21 +90,35 @@ class Request:
 class EngineConfig:
     max_slots: int = 4                     # in-flight decode batch width
     max_queue: int = 64                    # admission control: FIFO bound
-    max_seq_len: int = 64                  # per-slot cache rows (prompt + gen)
+    max_seq_len: int = 64                  # per-slot seq budget (prompt + gen)
     buckets: Optional[Tuple[int, ...]] = None   # prefill pad lengths
     eos_id: Optional[int] = None           # early finish token (None = length-only)
     use_opq: bool = True                   # dispatch through the OPQ runtime
+    cache_backend: str = "auto"            # auto | contiguous | paged | recurrent
+    block_size: int = 16                   # paged: tokens per KV block
+    n_blocks: Optional[int] = None         # paged: pool size (None = full capacity)
 
 
 @functools.lru_cache(maxsize=None)
-def _jitted_steps(cfg: ArchConfig):
-    """Compiled step fns shared across Engine instances of the same config —
-    rebuilding an engine (tests, benchmark sweeps) reuses XLA executables.
-    Prefill is the fused prefill-with-cache step: right-padded bucket batch in,
-    (first_tokens, per-layer K/V in cache layout) out — causal attention means
-    pad tokens after a row's prompt never reach its logits or its K/V rows, so
-    a small fixed bucket set is exact for any pad content."""
-    prefill = jax.jit(ST.make_prefill_with_cache_step(cfg))
+def _jitted_steps(cfg: ArchConfig, kind: str, max_seq_len: int = 0):
+    """Compiled step fns shared across Engine instances of the same
+    (config, store kind) — rebuilding an engine (tests, benchmark sweeps)
+    reuses XLA executables. ``max_seq_len`` keys the cache ONLY for the
+    recurrent backend (its prefill scan allocates the state cache at that
+    length); dense/moe callers pass 0 so engines with different seq budgets
+    keep sharing one set of compiled executables. Dense-family prefill is the fused
+    prefill-with-cache step: right-padded bucket batch in, (first_tokens,
+    per-layer K/V in cache layout) out — causal attention means pad tokens
+    after a row's prompt never reach its logits or its K/V rows, so a small
+    fixed bucket set is exact for any pad content. Recurrent-family prefill is
+    the masked scan of the decode body (same contract, state rows out). The
+    decode step is the SAME for every backend — paged layout translation
+    happens inside the store's decode_cache/swap bridge, which is what makes
+    paged decode bit-identical to contiguous."""
+    if kind == "recurrent":
+        prefill = jax.jit(ST.make_recurrent_prefill_step(cfg, max_seq_len))
+    else:
+        prefill = jax.jit(ST.make_prefill_with_cache_step(cfg))
     decode = jax.jit(ST.make_decode_step(cfg), donate_argnums=(1,))
     return prefill, decode
 
@@ -125,10 +147,11 @@ class Engine:
 
     def __init__(self, cfg: ArchConfig, params, engine_cfg: EngineConfig = None,
                  *, opq: Optional[OPQ] = None):
-        if cfg.family not in ("dense", "moe") or cfg.input_mode != "tokens":
+        if (cfg.family not in ("dense", "moe") + RECURRENT_FAMILIES
+                or cfg.input_mode != "tokens"):
             raise ValueError(
-                f"serving engine supports token-input dense/moe archs, got "
-                f"family={cfg.family} input_mode={cfg.input_mode}")
+                f"serving engine supports token-input dense/moe/ssm/hybrid "
+                f"archs, got family={cfg.family} input_mode={cfg.input_mode}")
         self.cfg = cfg
         self.params = params
         self.ecfg = engine_cfg or EngineConfig()
@@ -140,14 +163,24 @@ class Engine:
                 f"largest prefill bucket {max(buckets)} exceeds "
                 f"max_seq_len {self.ecfg.max_seq_len} (the slot-row length)")
         self.scheduler = Scheduler(self.ecfg.max_slots, buckets)
-        self.kv = KVSlotManager(cfg, self.ecfg.max_slots, self.ecfg.max_seq_len)
-        self._prefill, self._decode = _jitted_steps(cfg)
+        self.store: SlotStore = make_store(
+            cfg, self.ecfg.max_slots, self.ecfg.max_seq_len,
+            backend=self.ecfg.cache_backend,
+            block_size=self.ecfg.block_size, n_blocks=self.ecfg.n_blocks)
+        self._prefill, self._decode = _jitted_steps(
+            cfg, self.store.kind,
+            self.ecfg.max_seq_len if self.store.kind == "recurrent" else 0)
         self._owns_opq = opq is None and self.ecfg.use_opq
         self.opq = (OPQ() if self._owns_opq else opq) if self.ecfg.use_opq else None
         self._params_buf = Buffer(params, name="params")
         self._req_ids = itertools.count()
         self.metrics = EngineMetrics()
         self.completed: List[Request] = []
+
+    @property
+    def kv(self) -> SlotStore:
+        """Back-compat alias from the KVSlotManager era — the slot store."""
+        return self.store
 
     # ------------------------------------------------------------ OPQ bridge
 
@@ -188,7 +221,11 @@ class Engine:
                   or len(prompt) + max_new_tokens > self.ecfg.max_seq_len
                   # custom buckets may cap below max_seq_len: reject at the
                   # door, not mid-admission after a slot was leased
-                  or len(prompt) > max(self.scheduler.buckets))
+                  or len(prompt) > max(self.scheduler.buckets)
+                  # a request exceeding the store's TOTAL capacity (e.g. more
+                  # paged blocks than the pool holds) could never be leased:
+                  # deferring it would livelock the queue head forever
+                  or not self.store.fits(len(prompt), max_new_tokens))
         if reject:
             self.metrics.rejected += 1
             if strict:
@@ -207,14 +244,24 @@ class Engine:
 
     # ----------------------------------------------------------- engine step
 
+    def _try_lease(self, slot: int, req: Request) -> bool:
+        """Reserve store capacity for a request before the scheduler commits
+        the slot. A False return (paged block-pool dry) leaves the request at
+        the queue head — admission backpressure, never mid-flight corruption."""
+        ok = self.store.lease(slot, len(req.prompt), req.max_new_tokens)
+        if not ok:
+            self.metrics.admissions_deferred += 1
+        return ok
+
     def _admit(self) -> None:
         """Fused admission: ONE dispatched prefill forward per bucket batch
-        (first token + per-layer K/V out) and ONE batched donated scatter
-        into the leased slot rows — zero B=1 replay decodes, seeding cost
-        O(1) instructions in prompt length. All buckets of the round are
+        (first token + cache payload out — per-layer K/V for dense families,
+        post-prompt state rows for recurrent ones) and ONE batched donated
+        scatter into the leased slot rows — zero B=1 replay decodes, seeding
+        cost O(1) instructions in prompt length. All buckets of the round are
         dispatched before the first wait, so they overlap on the OPQ lanes."""
         pending = []
-        for bucket, pairs in self.scheduler.plan_admissions():
+        for bucket, pairs in self.scheduler.plan_admissions(self._try_lease):
             toks = np.zeros((len(pairs), bucket), np.int32)
             last = np.zeros((len(pairs),), np.int32)
             for i, (_, req) in enumerate(pairs):
@@ -247,11 +294,11 @@ class Engine:
 
     def _seed_admitted(self, pairs, kv) -> None:
         """Seed every leased row of one admission bucket from the fused
-        prefill's K/V block — one batched donated scatter. Overridable seam:
-        tests substitute the PR-1 B=1 replay seeder here to prove fused
-        admission is bit-identical to prompt replay."""
-        self.kv.write_slots([slot for slot, _ in pairs], kv,
-                            [len(req.prompt) for _, req in pairs])
+        prefill's payload — one batched donated scatter through the store.
+        Overridable seam: tests substitute the PR-1 B=1 replay seeder here to
+        prove fused admission is bit-identical to prompt replay."""
+        self.store.write_slots([slot for slot, _ in pairs], kv,
+                               [len(req.prompt) for _, req in pairs])
 
     def _decode_once(self) -> None:
         toks = np.zeros((self.ecfg.max_slots, 1), np.int32)
@@ -261,10 +308,11 @@ class Engine:
             active[slot] = True
         next_tok, cache = self._dispatch(
             lambda p, c, b: self._decode(p, c, b),
-            self._params_buf, self._resident(self.kv.cache, "kv-cache"),
+            self._params_buf,
+            self._resident(self.store.decode_cache(), "kv-cache"),
             Buffer({"tokens": toks, "active": active}, name="decode-tokens"),
             flags="decode")
-        self.kv.swap(cache)
+        self.store.swap(cache)
         self.metrics.decode_steps += 1
         next_np = np.asarray(next_tok)
         produced = 0
@@ -283,7 +331,7 @@ class Engine:
 
     def _retire(self, slot: int) -> None:
         req = self.scheduler.retire(slot)
-        self.kv.reset_slot(slot)
+        self.store.reset(slot)
         req.state = RequestState.DONE
         req.metrics.finish_s = now()
         self.metrics.completed += 1
@@ -316,6 +364,7 @@ class Engine:
 
     def stats(self) -> Dict:
         out = dict(self.metrics.summary())
+        out["cache"] = self.store.memory_stats()
         if self.opq is not None:
             out["opq"] = dict(self.opq.stats)
             # per-flag instruction counts: the dispatch-shape audit trail

@@ -1,141 +1,29 @@
-"""KVSlotManager: slot-granular ownership of the decode batch's cache.
+"""Deprecated shim: ``KVSlotManager`` moved behind the SlotStore protocol.
 
-The engine decodes a fixed ``n_slots``-row batch; each row ("slot") is leased
-to one in-flight request. This manager owns the backing cache pytree
-(``models/serve.py:init_cache`` with a per-slot index vector) and implements
-the slot lifecycle:
-
-  * allocate once — the arrays are created a single time (``alloc_count`` stays
-    1); admit/retire never reallocates, they rewrite one batch row in place
-    (a jitted ``dynamic_update_slice`` with the cache donated, so XLA aliases
-    the buffers instead of copying the whole cache per admission)
-  * ``write_slots(slots, kv, n_valid)`` on admit — scatter a fused-prefill
-    K/V block (leaves (L, B, S_bucket, ...), models/serve.py
-    ``prefill_with_cache``) into all leased rows with ONE jitted donated
-    scatter per admission bucket; each row's pad tail is scrubbed back to the
-    pristine pattern so the result is bit-equal to a replay-seeded row
-  * ``write_slot(slot, cache)`` — single-row variant taking a full-length B=1
-    cache (the replay-seeding reference path, now exercised only by tests)
-  * ``reset_slot(slot)`` on retire — restore the row to its pristine init
-    state (zero k/v, 1e-12 scales, index 0) so the next lease starts clean
-
-Leaf layout (dense/moe/vlm): k/v (L, B, S, KV, hd) and scales (L, B, S, KV)
-carry the slot on axis 1; the index vector (B,) carries it on axis 0.
+The slot-granular cache layer now lives in ``repro/serving/store.py`` —
+:class:`~repro.serving.store.SlotStore` with three backends
+(``ContiguousKVStore``, ``PagedKVStore``, ``RecurrentStateStore``) built via
+``make_store(cfg, n_slots, max_seq_len, backend=...)``. ``KVSlotManager``
+was exactly today's ``ContiguousKVStore``; this subclass keeps old imports
+working (same constructor, same lifecycle methods incl. the ``reset_slot``
+alias) and warns once per instantiation.
 """
 
 from __future__ import annotations
 
-import functools
-from typing import Dict
+import warnings
 
-import jax
-import jax.numpy as jnp
-
-from repro.configs.base import ArchConfig
-from repro.models import serve as SV
+from repro.serving.store import ContiguousKVStore
+from repro.serving.store import pristine_value  # noqa: F401  (old import site)
 
 
-@functools.partial(jax.jit, donate_argnums=(0,))
-def _write_row(cache: Dict, row: Dict, slot, n_valid) -> Dict:
-    """Write one slot's row (B=1 leaves) + its index into the cache. The cache
-    is donated: XLA updates the buffers in place, O(row) not O(cache)."""
-    out = {}
-    for name, leaf in cache.items():
-        if name == "index":
-            out[name] = jax.lax.dynamic_update_slice(
-                leaf, jnp.asarray([n_valid], jnp.int32), (slot,))
-        else:
-            out[name] = jax.lax.dynamic_update_slice(
-                leaf, row[name].astype(leaf.dtype),
-                (0, slot) + (0,) * (leaf.ndim - 2))
-    return out
+class KVSlotManager(ContiguousKVStore):
+    """Deprecated alias of :class:`repro.serving.store.ContiguousKVStore`."""
 
-
-@functools.partial(jax.jit, donate_argnums=(0,))
-def _scatter_rows(cache: Dict, kv: Dict, slots, n_valid) -> Dict:
-    """Batched admission write: scatter per-layer K/V blocks (L, B, Sb, ...)
-    into rows ``slots`` (B,) of the cache, set each row's index to its prompt
-    length, and scrub everything at/after position n_valid[i] back to the
-    pristine pattern (k/v -> 0, scales -> 1e-12) so an admitted row is
-    bit-equal to a replay-seeded one. One donated scatter for the whole
-    bucket batch — O(B rows), never O(cache)."""
-    Sb = kv["k"].shape[2]
-    out = {}
-    for name, leaf in cache.items():
-        if name == "index":
-            out[name] = leaf.at[slots].set(n_valid)
-            continue
-        S = leaf.shape[2]
-        src = kv[name].astype(leaf.dtype)
-        if S > Sb:  # pad the bucket block out to the row length
-            src = jnp.pad(src, [(0, 0), (0, 0), (0, S - Sb)]
-                          + [(0, 0)] * (src.ndim - 3))
-        valid = jnp.arange(S)[None, :] < n_valid[:, None]          # (B, S)
-        valid = valid.reshape(valid.shape + (1,) * (src.ndim - 3))
-        pristine = 1e-12 if name.endswith("_scale") else 0
-        src = jnp.where(valid, src, jnp.asarray(pristine, leaf.dtype))
-        out[name] = leaf.at[:, slots].set(src)
-    return out
-
-
-class KVSlotManager:
-    def __init__(self, cfg: ArchConfig, n_slots: int, max_seq_len: int):
-        if cfg.family not in ("dense", "moe", "vlm"):
-            raise ValueError(
-                f"KVSlotManager supports dense-family caches, not {cfg.family}")
-        self.cfg = cfg
-        self.n_slots = n_slots
-        self.max_seq_len = max_seq_len
-        self.cache: Dict = SV.init_cache(cfg, n_slots, max_seq_len,
-                                         per_slot_index=True)
-        self.alloc_count = 1
-        # Pristine single-slot row, captured before any write (functional
-        # updates never mutate it): reset_slot copies it back into a retired
-        # row. Kept with a size-1 batch axis, the _write_row layout. The
-        # explicit copy matters: with n_slots == 1 the slice is full-extent
-        # and JAX would alias the cache buffer, which donation then deletes.
-        self._empty_row = {name: jnp.array(leaf[:, :1], copy=True)
-                           for name, leaf in self.cache.items()
-                           if name != "index"}
-
-    # ------------------------------------------------------------- lifecycle
-
-    def write_slots(self, slots, kv: Dict, n_valid) -> None:
-        """Lease ``slots`` (B,) to the requests of one admission bucket: one
-        batched donated scatter of the fused-prefill K/V block (leaves
-        (L, B, S_bucket, ...)) into the leased rows + their index entries.
-        Pad positions (>= each row's prompt length) are scrubbed to pristine,
-        so the written rows are bit-equal to replay-seeded ones."""
-        slots = jnp.asarray(slots, jnp.int32)
-        n_valid = jnp.asarray(n_valid, jnp.int32)
-        assert slots.shape == n_valid.shape and slots.ndim == 1
-        self.cache = _scatter_rows(self.cache, kv, slots, n_valid)
-
-    def write_slot(self, slot: int, src_cache: Dict, n_valid: int) -> None:
-        """Lease ``slot`` to a request: copy a single-request (B=1) cache —
-        same seq length, scalar index — into the slot's row."""
-        assert 0 <= slot < self.n_slots
-        row = {name: src_cache[name] for name in self.cache if name != "index"}
-        self.cache = _write_row(self.cache, row, jnp.int32(slot),
-                                jnp.int32(n_valid))
-
-    def reset_slot(self, slot: int) -> None:
-        """Retire a request: scrub the row so tokens can never leak into the
-        slot's next tenant, and park the index at 0."""
-        assert 0 <= slot < self.n_slots
-        self.cache = _write_row(self.cache, self._empty_row, jnp.int32(slot),
-                                jnp.int32(0))
-
-    def swap(self, new_cache: Dict) -> None:
-        """Adopt the cache pytree returned by a decode step (the old buffers
-        were donated to it)."""
-        self.cache = new_cache
-
-    # ------------------------------------------------------------------ info
-
-    def slot_index(self, slot: int) -> int:
-        return int(self.cache["index"][slot])
-
-    def nbytes(self) -> int:
-        return sum(leaf.size * leaf.dtype.itemsize
-                   for leaf in jax.tree.leaves(self.cache))
+    def __init__(self, cfg, n_slots: int, max_seq_len: int):
+        warnings.warn(
+            "KVSlotManager is deprecated: use repro.serving.store.make_store("
+            "cfg, n_slots, max_seq_len, backend='contiguous') or "
+            "ContiguousKVStore directly",
+            DeprecationWarning, stacklevel=2)
+        super().__init__(cfg, n_slots, max_seq_len)

@@ -8,6 +8,12 @@ plus the batched cache-seed write); the engine aggregates the device-side
 halves as prefill_wait_s / seed_write_s. Engine counters are designed to *reconcile*:
 ``tokens_generated`` must equal the sum of every completed/active request's
 ``n_generated`` (asserted in tests/test_serving.py).
+
+Cache-memory telemetry comes from ``SlotStore.memory_stats()`` (bytes per
+backend, block occupancy for the paged store) — surfaced through
+``Engine.stats()["cache"]`` and rendered by :func:`format_memory_stats` in
+the launch/serve.py end-of-run report. ``admissions_deferred`` counts store
+lease refusals (paged block-pool backpressure).
 """
 
 from __future__ import annotations
@@ -66,6 +72,8 @@ class RequestMetrics:
 class EngineMetrics:
     submitted: int = 0
     rejected: int = 0
+    admissions_deferred: int = 0               # store lease refusals (paged
+                                               # block-pool backpressure)
     completed: int = 0
     tokens_generated: int = 0                  # prefill first-tokens + decode
     decode_steps: int = 0
@@ -104,6 +112,7 @@ class EngineMetrics:
         return {
             "submitted": self.submitted,
             "rejected": self.rejected,
+            "admissions_deferred": self.admissions_deferred,
             "completed": self.completed,
             "tokens_generated": self.tokens_generated,
             "decode_steps": self.decode_steps,
@@ -115,3 +124,18 @@ class EngineMetrics:
             "mean_queue_depth": self.queue_depth_sum / max(self.steps, 1),
             "mean_occupancy": self.occupancy_sum / max(self.steps, 1),
         }
+
+
+def format_memory_stats(ms: Dict) -> str:
+    """One-line cache-memory summary from ``SlotStore.memory_stats()`` —
+    the end-of-run report line (launch/serve.py) and log decoration."""
+    kib = ms.get("bytes", 0) / 1024.0
+    if ms.get("backend") == "paged":
+        view_kib = ms.get("decode_view_bytes", 0) / 1024.0
+        return (f"paged: {kib:.1f} KiB pool | block={ms['block_size']} tok | "
+                f"{ms['blocks_used']}/{ms['blocks_total']} blocks used "
+                f"({ms['blocks_free']} free) | "
+                f"+{view_kib:.1f} KiB transient decode view")
+    per_slot = ms.get("bytes_per_slot", 0) / 1024.0
+    return (f"{ms.get('backend', '?')}: {kib:.1f} KiB "
+            f"({per_slot:.1f} KiB/slot x {ms.get('slots', 0)} slots)")

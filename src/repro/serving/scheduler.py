@@ -64,14 +64,25 @@ class Scheduler:
 
     # ------------------------------------------------------------ join/retire
 
-    def plan_admissions(self) -> List[Tuple[int, List[Tuple[int, object]]]]:
+    def plan_admissions(self, try_lease=None
+                        ) -> List[Tuple[int, List[Tuple[int, object]]]]:
         """Lease free slots to waiting requests (FIFO), grouped by prefill
         bucket: [(bucket_len, [(slot, request), ...]), ...]. Mutates the free
-        list and active map — the engine must prefill every planned request."""
+        list and active map — the engine must prefill every planned request.
+
+        ``try_lease(slot, request) -> bool`` lets the cache backend reserve
+        capacity before the slot is committed (serving/store.py). A False
+        return stops planning with the request still at the queue head —
+        FIFO-order admission backpressure (e.g. paged block-pool exhaustion),
+        resolved when a retire frees capacity."""
         groups: Dict[int, List[Tuple[int, object]]] = {}
         while self.waiting and self.free:
-            req = self.waiting.popleft()
-            slot = self.free.pop()
+            req = self.waiting[0]
+            slot = self.free[-1]
+            if try_lease is not None and not try_lease(slot, req):
+                break
+            self.waiting.popleft()
+            self.free.pop()
             self.active[slot] = req
             b = bucket_for(len(req.prompt), self.buckets)
             groups.setdefault(b, []).append((slot, req))

@@ -1,0 +1,578 @@
+"""SlotStore: the pluggable serving-cache layer.
+
+GPTPU's thesis is a general-purpose runtime interface that hides
+accelerator-specific memory layout behind a clean API; this module applies the
+same posture to the serving cache. The engine decodes a fixed ``n_slots``-row
+batch; each row ("slot") is leased to one in-flight request. Everything the
+engine knows about the cache goes through the :class:`SlotStore` protocol —
+no code outside this module touches cache leaves directly:
+
+  * ``alloc()``            — build the backing pytree ONCE (``alloc_count``
+                             stays 1; admit/retire rewrite rows in place via
+                             jitted donated updates, never reallocating)
+  * ``fits``/``lease``     — capacity checks + reservation: ``fits`` gates
+                             submit() against TOTAL capacity (an unservable
+                             request bounces at the door), ``lease`` reserves
+                             at admission time (paged: block accounting →
+                             admission backpressure instead of mid-flight
+                             corruption)
+  * ``write_slots``        — batched admission write: scatter one fused-prefill
+                             payload (K/V block or recurrent state rows) into
+                             all leased slot rows with ONE donated dispatch
+  * ``write_slot``         — single-row variant taking a full-length B=1 cache
+                             (the replay-seeding reference path, tests only)
+  * ``reset``              — retire: restore the row/blocks to the pristine
+                             pattern so the next lease can never see a prior
+                             tenant's tokens or state
+  * ``decode_cache``/``swap`` — the pytree handed to (and adopted back from)
+                             the jitted decode step; backends translate layout
+                             here (paged: gather blocks → contiguous view →
+                             scatter the written entries back)
+  * ``gather_view``        — contiguous-layout view for inspection and tests
+  * ``memory_stats``       — bytes / block occupancy per backend
+
+Backends
+  ContiguousKVStore   dense/moe/vlm K/V rows sized to ``max_seq_len`` — the
+                      original ``KVSlotManager`` layout, ported.
+  PagedKVStore        vLLM-style block-paged K/V: a fixed pool of
+                      ``block_size``-token blocks plus per-slot block tables.
+                      Slots lease exactly ``ceil((prompt+gen)/block_size)``
+                      blocks, so the pool can be far smaller than
+                      ``n_slots * max_seq_len`` rows — more concurrent short
+                      requests per byte, with admission backpressure when the
+                      pool runs dry. Decode gathers each slot's blocks into a
+                      contiguous view (``attention.gather_block_kv``, a
+                      jnp.take over the block axis), runs the SAME compiled
+                      decode step as the contiguous backend, and scatters the
+                      one written entry per row back into block layout — which
+                      is what makes paged decode bit-identical to contiguous.
+  RecurrentStateStore per-slot recurrent state rows (mamba conv/ssm, xlstm
+                      mLSTM/sLSTM hidden states, plus the hybrid family's attn
+                      K/V) with pristine reset — makes ssm/hybrid families
+                      servable through the same engine.
+
+Leaf convention (all backends): the ``index`` leaf carries the slot on axis 0
+(shape ``(B,)``); every other leaf carries it on axis 1 (``(L, B, ...)``).
+``pristine_value`` is the single definition of each leaf's "empty" fill —
+shared by reset, pad-scrub, and block-scrub so the pattern cannot drift
+between backends.
+"""
+
+from __future__ import annotations
+
+import abc
+import functools
+import math
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as A
+from repro.models import serve as SV
+from repro.models.xlstm import M_INIT
+
+DENSE_FAMILIES = ("dense", "moe", "vlm")
+RECURRENT_FAMILIES = ("ssm", "hybrid")
+
+# Non-zero pristine fills, by leaf name. Everything else resets to 0. These
+# mirror models/serve.py:init_cache exactly — a reset row must be bit-equal to
+# a freshly allocated one (asserted in tests/test_serving.py).
+_PRISTINE = {
+    "mlstm_m": M_INIT,      # xlstm stabilizer "no history" sentinel
+    "slstm_n": 1e-6,        # sLSTM normalizer floor
+    "slstm_m": -1e30,       # sLSTM stabilizer init
+}
+
+
+def pristine_value(name: str) -> float:
+    """The single source of truth for a cache leaf's empty-state fill value,
+    shared by every backend's reset/scrub path (int8-KV dequant scales park at
+    1e-12 so a pristine entry dequantizes to exactly 0 without dividing by 0)."""
+    if name.endswith("_scale"):
+        return 1e-12
+    return _PRISTINE.get(name, 0.0)
+
+
+def _leaf_name(path) -> str:
+    for p in reversed(path):
+        key = getattr(p, "key", getattr(p, "name", ""))
+        if key:
+            return str(key)
+    return ""
+
+
+# ===========================================================================
+# jitted row/block primitives (donated: XLA updates buffers in place)
+# ===========================================================================
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _write_row(cache, row, slot, n_valid):
+    """Write one slot's row (B=1 leaves on axis 1) + its index entry. Works on
+    any nested cache pytree following the axis-0/axis-1 slot convention."""
+    def f(path, leaf, src):
+        if _leaf_name(path) == "index":
+            return jax.lax.dynamic_update_slice(
+                leaf, jnp.asarray([n_valid], jnp.int32), (slot,))
+        return jax.lax.dynamic_update_slice(
+            leaf, src.astype(leaf.dtype), (0, slot) + (0,) * (leaf.ndim - 2))
+    return jax.tree_util.tree_map_with_path(f, cache, row)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _reset_row(cache, slot):
+    """Restore one slot's row across every leaf to the pristine pattern (the
+    ``pristine_value`` fills) and park its index at 0."""
+    def f(path, leaf):
+        name = _leaf_name(path)
+        if name == "index":
+            return jax.lax.dynamic_update_slice(
+                leaf, jnp.zeros((1,), jnp.int32), (slot,))
+        row = jnp.full((leaf.shape[0], 1) + leaf.shape[2:],
+                       pristine_value(name), leaf.dtype)
+        return jax.lax.dynamic_update_slice(
+            leaf, row, (0, slot) + (0,) * (leaf.ndim - 2))
+    return jax.tree_util.tree_map_with_path(f, cache)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _scatter_kv_rows(cache, kv, slots, n_valid):
+    """Contiguous admission write: scatter per-layer K/V blocks (L, B, Sb, ...)
+    into rows ``slots`` (B,), set each row's index to its prompt length, and
+    scrub everything at/after position n_valid[i] back to pristine so an
+    admitted row is bit-equal to a replay-seeded one. One donated scatter for
+    the whole bucket batch — O(B rows), never O(cache)."""
+    Sb = kv["k"].shape[2]
+    out = {}
+    for name, leaf in cache.items():
+        if name == "index":
+            out[name] = leaf.at[slots].set(n_valid)
+            continue
+        S = leaf.shape[2]
+        src = kv[name].astype(leaf.dtype)
+        if S > Sb:  # pad the bucket block out to the row length
+            src = jnp.pad(src, [(0, 0), (0, 0), (0, S - Sb)]
+                          + [(0, 0)] * (src.ndim - 3))
+        valid = jnp.arange(S)[None, :] < n_valid[:, None]          # (B, S)
+        valid = valid.reshape(valid.shape + (1,) * (src.ndim - 3))
+        src = jnp.where(valid, src,
+                        jnp.asarray(pristine_value(name), leaf.dtype))
+        out[name] = leaf.at[:, slots].set(src)
+    return out
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _scatter_state_rows(cache, states, slots, n_valid):
+    """Recurrent admission write: copy whole state rows (leaves (nl, B, ...))
+    from a prefill's B-row cache into rows ``slots`` — one donated scatter."""
+    def f(path, leaf, src):
+        if _leaf_name(path) == "index":
+            return leaf.at[slots].set(n_valid)
+        return leaf.at[:, slots].set(src.astype(leaf.dtype))
+    return jax.tree_util.tree_map_with_path(f, cache, states)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _paged_scatter(cache, kv, phys, off, slots, n_valid):
+    """Paged admission write: scatter K/V blocks (L, B, Sb, ...) through each
+    row's block table — position p of admitted row i lands in the pool at
+    (phys[i, p], off[i, p]). Pad positions are scrubbed to pristine; pad
+    positions past a row's leased blocks resolve to the reserved null block 0,
+    which no request ever reads."""
+    out = {}
+    for name, leaf in cache.items():
+        if name == "index":
+            out[name] = leaf.at[slots].set(n_valid)
+            continue
+        if name == "tables":
+            out[name] = leaf
+            continue
+        Sb = kv[name].shape[2]
+        src = kv[name].astype(leaf.dtype)
+        valid = jnp.arange(Sb)[None, :] < n_valid[:, None]          # (B, Sb)
+        valid = valid.reshape(valid.shape + (1,) * (src.ndim - 3))
+        src = jnp.where(valid, src,
+                        jnp.asarray(pristine_value(name), leaf.dtype))
+        out[name] = leaf.at[:, phys, off].set(src)
+    return out
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _paged_reset(cache, blocks, slot):
+    """Retire a slot: scrub its (freed) blocks back to pristine, zero its
+    table row, park its index. ``blocks`` is padded with 0 (the null block) to
+    a fixed length so every retire shares one compiled shape."""
+    out = {}
+    for name, leaf in cache.items():
+        if name == "index":
+            out[name] = jax.lax.dynamic_update_slice(
+                leaf, jnp.zeros((1,), jnp.int32), (slot,))
+        elif name == "tables":
+            out[name] = jax.lax.dynamic_update_slice(
+                leaf, jnp.zeros((1, leaf.shape[1]), jnp.int32), (slot, 0))
+        else:
+            fill = jnp.full((leaf.shape[0], blocks.shape[0]) + leaf.shape[2:],
+                            pristine_value(name), leaf.dtype)
+            out[name] = leaf.at[:, blocks].set(fill)
+    return out
+
+
+@jax.jit
+def _paged_gather(cache):
+    """Pool → contiguous-layout view {k, v, (scales), index}: every slot's
+    blocks concatenated in table order. Table entries past a slot's lease are
+    0 (the null block), so those view positions hold null-block contents —
+    always at positions > the slot's index, where decode masks scores to -inf
+    and the softmax weight is exactly 0, keeping the view's decode bit-equal
+    to the contiguous backend's."""
+    pool = {name: leaf for name, leaf in cache.items()
+            if name not in ("index", "tables")}
+    view = A.gather_block_kv(pool, cache["tables"])
+    view["index"] = cache["index"]
+    return view
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _paged_writeback(cache, view):
+    """Adopt a decode-updated contiguous view back into the pool: decode wrote
+    exactly one entry per row at its pre-step index, so only O(B) pool cells
+    change. Rows whose table is zeroed (retired slots) write into the null
+    block — harmless, it is never read unmasked."""
+    index = cache["index"]                       # pre-step write positions
+    tables = cache["tables"]
+    B = tables.shape[0]
+    bs = cache["k"].shape[2]
+    S = view["k"].shape[2]
+    rows = jnp.arange(B)
+    pos = jnp.minimum(index, S - 1)              # idle rows: index can run on
+    phys = tables[rows, pos // bs]
+    off = pos % bs
+    out = {}
+    for name, leaf in cache.items():
+        if name == "index":
+            out[name] = view["index"]
+        elif name == "tables":
+            out[name] = leaf
+        else:
+            out[name] = leaf.at[:, phys, off].set(view[name][:, rows, pos])
+    return out
+
+
+# ===========================================================================
+# the protocol + backends
+# ===========================================================================
+
+class SlotStore(abc.ABC):
+    """Slot-granular ownership of the decode batch's cache (see module doc).
+    Subclasses implement ``alloc`` and ``write_slots``; the row-generic
+    lifecycle (write_slot / reset / decode bridge) is shared."""
+
+    kind: str = "abstract"
+
+    def __init__(self, cfg: ArchConfig, n_slots: int, max_seq_len: int):
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.max_seq_len = max_seq_len
+        self.cache: Dict = self.alloc()
+        self.alloc_count = 1
+
+    # ------------------------------------------------------------ allocation
+
+    @abc.abstractmethod
+    def alloc(self) -> Dict:
+        """Build the backing cache pytree. Called exactly once."""
+
+    # ----------------------------------------------------------- reservation
+
+    def fits(self, prompt_len: int, max_new_tokens: int) -> bool:
+        """Whether a request of this size could EVER be leased (checked
+        against total capacity, not current occupancy). The engine rejects
+        at submit() when False — a request that can never fit must bounce at
+        the door, not park at the queue head deferring forever and
+        head-of-line-blocking everything behind it."""
+        return True
+
+    def lease(self, slot: int, prompt_len: int, max_new_tokens: int) -> bool:
+        """Reserve capacity for a request on ``slot``. Returns False when the
+        backend cannot hold it right now (admission backpressure) — the
+        scheduler then leaves the request queued, FIFO order intact."""
+        return True
+
+    # ------------------------------------------------------------- lifecycle
+
+    @abc.abstractmethod
+    def write_slots(self, slots: Sequence[int], payload: Dict,
+                    n_valid: Sequence[int]) -> None:
+        """Seed all leased rows of one admission bucket from the fused
+        prefill's payload (K/V block or recurrent state rows) — one batched
+        donated scatter."""
+
+    def write_slot(self, slot: int, src_cache: Dict, n_valid: int) -> None:
+        """Seed ``slot`` from a single-request (B=1, full-length) cache — the
+        replay-seeding reference path, exercised only by tests."""
+        assert 0 <= slot < self.n_slots
+        self.cache = _write_row(self.cache, src_cache, jnp.int32(slot),
+                                jnp.int32(n_valid))
+
+    def reset(self, slot: int) -> None:
+        """Retire a request: scrub the row so state can never leak into the
+        slot's next tenant, and park the index at 0."""
+        assert 0 <= slot < self.n_slots
+        self.cache = _reset_row(self.cache, jnp.int32(slot))
+
+    # Back-compat alias for the KVSlotManager era.
+    def reset_slot(self, slot: int) -> None:
+        self.reset(slot)
+
+    # ---------------------------------------------------------- decode bridge
+
+    def decode_cache(self) -> Dict:
+        """The pytree handed to the jitted decode step (donated)."""
+        return self.cache
+
+    def swap(self, new_cache: Dict) -> None:
+        """Adopt the cache pytree returned by a decode step (the old buffers
+        were donated to it)."""
+        self.cache = new_cache
+
+    def gather_view(self) -> Dict:
+        """Contiguous-layout view of the cache (inspection / tests)."""
+        return self.cache
+
+    # ------------------------------------------------------------------ info
+
+    def slot_index(self, slot: int) -> int:
+        return int(self.cache["index"][slot])
+
+    def nbytes(self) -> int:
+        return sum(leaf.size * leaf.dtype.itemsize
+                   for leaf in jax.tree.leaves(self.cache))
+
+    def memory_stats(self) -> Dict:
+        b = self.nbytes()
+        return {"backend": self.kind, "bytes": b,
+                "bytes_per_slot": b // max(self.n_slots, 1),
+                "slots": self.n_slots}
+
+
+class ContiguousKVStore(SlotStore):
+    """Dense-family K/V rows sized to ``max_seq_len`` — the original
+    ``KVSlotManager`` layout. Leaf layout: k/v (L, B, S, KV, hd) and scales
+    (L, B, S, KV) carry the slot on axis 1; index (B,) on axis 0."""
+
+    kind = "contiguous"
+
+    def __init__(self, cfg: ArchConfig, n_slots: int, max_seq_len: int):
+        if cfg.family not in DENSE_FAMILIES:
+            raise ValueError(
+                f"ContiguousKVStore supports dense-family caches, not "
+                f"{cfg.family}")
+        super().__init__(cfg, n_slots, max_seq_len)
+
+    def alloc(self) -> Dict:
+        return SV.init_cache(self.cfg, self.n_slots, self.max_seq_len,
+                             per_slot_index=True)
+
+    def write_slots(self, slots, kv: Dict, n_valid) -> None:
+        slots = jnp.asarray(slots, jnp.int32)
+        n_valid = jnp.asarray(n_valid, jnp.int32)
+        assert slots.shape == n_valid.shape and slots.ndim == 1
+        self.cache = _scatter_kv_rows(self.cache, kv, slots, n_valid)
+
+
+class PagedKVStore(SlotStore):
+    """vLLM-style block-paged K/V. Pool leaves: k/v (L, NB, bs, KV, hd) and
+    scales (L, NB, bs, KV); per-slot block tables (B, MB) map sequence
+    position p to pool cell (tables[slot, p // bs], p % bs). Block 0 is the
+    reserved null block: never leased, absorbs idle-slot writes, and backs
+    table entries past a slot's lease so gathers stay in-bounds.
+
+    A request leases exactly ceil((prompt + gen) / bs) blocks at admission —
+    the whole-generation reservation means decode can never run out of blocks
+    mid-flight, and ``lease`` returning False is clean backpressure. The pool
+    (``n_blocks``) can therefore be sized well below the contiguous
+    n_slots x max_seq_len footprint for short-request mixes.
+    """
+
+    kind = "paged"
+
+    def __init__(self, cfg: ArchConfig, n_slots: int, max_seq_len: int,
+                 *, block_size: int = 16, n_blocks: Optional[int] = None):
+        if cfg.family not in DENSE_FAMILIES:
+            raise ValueError(
+                f"PagedKVStore supports dense-family caches, not {cfg.family}")
+        if max_seq_len % block_size:
+            # the gathered view must be exactly max_seq_len long so the decode
+            # step compiles to the same program as the contiguous backend —
+            # the bit-identity contract
+            raise ValueError(
+                f"block_size {block_size} must divide max_seq_len {max_seq_len}")
+        self.block_size = block_size
+        self.blocks_per_slot = max_seq_len // block_size
+        full = n_slots * self.blocks_per_slot + 1          # +1: null block
+        self.n_blocks = full if n_blocks is None else n_blocks
+        if not 2 <= self.n_blocks:
+            raise ValueError(f"n_blocks must be >= 2, got {self.n_blocks}")
+        super().__init__(cfg, n_slots, max_seq_len)
+        # block 0 reserved as the null block; free blocks hand out low ids first
+        self._free: List[int] = list(range(1, self.n_blocks))[::-1]
+        self._leased: Dict[int, List[int]] = {}
+        self._tables = np.zeros((n_slots, self.blocks_per_slot), np.int32)
+
+    def alloc(self) -> Dict:
+        return SV.init_paged_cache(self.cfg, self.n_slots, self.n_blocks,
+                                   self.block_size, self.blocks_per_slot)
+
+    # ----------------------------------------------------------- reservation
+
+    def _blocks_needed(self, prompt_len: int, max_new_tokens: int) -> int:
+        return math.ceil((prompt_len + max_new_tokens) / self.block_size)
+
+    def fits(self, prompt_len: int, max_new_tokens: int) -> bool:
+        # against the WHOLE pool and the table width: a request needing more
+        # blocks than exist is unservable and must be rejected at submit,
+        # never deferred (lease would refuse it forever — livelock)
+        return (self._blocks_needed(prompt_len, max_new_tokens)
+                <= min(self.n_blocks - 1, self.blocks_per_slot))
+
+    def lease(self, slot: int, prompt_len: int, max_new_tokens: int) -> bool:
+        need = self._blocks_needed(prompt_len, max_new_tokens)
+        if need > len(self._free) or need > self.blocks_per_slot:
+            return False
+        blocks = [self._free.pop() for _ in range(need)]
+        self._leased[slot] = blocks
+        self._tables[slot, :] = 0
+        self._tables[slot, :need] = blocks
+        self.cache = dict(self.cache, tables=jnp.asarray(self._tables))
+        return True
+
+    # ------------------------------------------------------------- lifecycle
+
+    def _phys_off(self, slots: np.ndarray, length: int):
+        """(B, length) physical block + offset for sequence positions
+        0..length-1 of each slot, through the block tables."""
+        pos = np.arange(length)
+        blk, off = pos // self.block_size, pos % self.block_size
+        phys = self._tables[slots][:, blk]                  # (B, length)
+        return (jnp.asarray(phys, jnp.int32),
+                jnp.asarray(np.broadcast_to(off, phys.shape), jnp.int32))
+
+    def write_slots(self, slots, kv: Dict, n_valid) -> None:
+        slots_np = np.asarray(slots, np.int32)
+        Sb = kv["k"].shape[2]
+        phys, off = self._phys_off(slots_np, Sb)
+        self.cache = _paged_scatter(self.cache, kv, phys, off,
+                                    jnp.asarray(slots_np),
+                                    jnp.asarray(n_valid, jnp.int32))
+
+    def write_slot(self, slot: int, src_cache: Dict, n_valid: int) -> None:
+        assert 0 <= slot < self.n_slots
+        kv = {name: src_cache[name] for name in self.cache
+              if name not in ("index", "tables")}
+        phys, off = self._phys_off(np.asarray([slot], np.int32),
+                                   kv["k"].shape[2])
+        self.cache = _paged_scatter(self.cache, kv, phys, off,
+                                    jnp.asarray([slot], jnp.int32),
+                                    jnp.asarray([n_valid], jnp.int32))
+
+    def reset(self, slot: int) -> None:
+        assert 0 <= slot < self.n_slots
+        blocks = self._leased.pop(slot, [])
+        self._free.extend(blocks)
+        self._tables[slot, :] = 0
+        # pad with the null block to a fixed length: one compiled reset shape
+        padded = blocks + [0] * (self.blocks_per_slot - len(blocks))
+        # _paged_reset zeroes the slot's device-side table row itself — only
+        # the host mirror needed updating above
+        self.cache = _paged_reset(self.cache, jnp.asarray(padded, jnp.int32),
+                                  jnp.int32(slot))
+
+    # ---------------------------------------------------------- decode bridge
+
+    def decode_cache(self) -> Dict:
+        """Gather every slot's blocks into the contiguous view the shared
+        decode step consumes — layout translation lives HERE, the decode math
+        (and its compiled program) is byte-for-byte the contiguous backend's."""
+        return _paged_gather(self.cache)
+
+    def swap(self, new_view: Dict) -> None:
+        self.cache = _paged_writeback(self.cache, new_view)
+
+    def gather_view(self) -> Dict:
+        return _paged_gather(self.cache)
+
+    # ------------------------------------------------------------------ info
+
+    def memory_stats(self) -> Dict:
+        used = sum(len(b) for b in self._leased.values())
+        total = self.n_blocks - 1                           # null block excluded
+        # the persistent allocation is the pool ("bytes"); each decode step
+        # additionally materializes a TRANSIENT contiguous view of
+        # n_slots x max_seq_len rows (the gather bridge that buys exact
+        # bit-identity with the contiguous decode program) — reported
+        # separately so operators size devices for pool + view, not pool alone
+        view_bytes = sum(
+            leaf.dtype.itemsize
+            * leaf.shape[0] * self.n_slots * self.max_seq_len
+            * int(np.prod(leaf.shape[3:], dtype=np.int64))
+            for name, leaf in self.cache.items()
+            if name not in ("index", "tables"))
+        return {
+            "backend": self.kind,
+            "bytes": self.nbytes(),
+            "decode_view_bytes": view_bytes,
+            "block_size": self.block_size,
+            "blocks_total": total,
+            "blocks_free": len(self._free),
+            "blocks_used": used,
+            "slots": self.n_slots,
+        }
+
+
+class RecurrentStateStore(SlotStore):
+    """Per-slot recurrent state rows for the ssm (xlstm mLSTM/sLSTM) and
+    hybrid (zamba2 mamba conv/ssm + shared-attention K/V) families. Leaves
+    follow the same axis-1 slot convention, so the row-generic lifecycle
+    applies unchanged; admission payloads are whole state rows from the
+    masked-scan recurrent prefill (models/serve.py ``prefill_recurrent``)."""
+
+    kind = "recurrent"
+
+    def __init__(self, cfg: ArchConfig, n_slots: int, max_seq_len: int):
+        if cfg.family not in RECURRENT_FAMILIES:
+            raise ValueError(
+                f"RecurrentStateStore supports ssm/hybrid state caches, not "
+                f"{cfg.family}")
+        super().__init__(cfg, n_slots, max_seq_len)
+
+    def alloc(self) -> Dict:
+        return SV.init_cache(self.cfg, self.n_slots, self.max_seq_len,
+                             per_slot_index=True)
+
+    def write_slots(self, slots, states: Dict, n_valid) -> None:
+        slots = jnp.asarray(slots, jnp.int32)
+        n_valid = jnp.asarray(n_valid, jnp.int32)
+        assert slots.shape == n_valid.shape and slots.ndim == 1
+        self.cache = _scatter_state_rows(self.cache, states, slots, n_valid)
+
+
+def make_store(cfg: ArchConfig, n_slots: int, max_seq_len: int,
+               backend: str = "auto", *, block_size: int = 16,
+               n_blocks: Optional[int] = None) -> SlotStore:
+    """Factory: build the SlotStore backend for a config. ``backend="auto"``
+    picks contiguous for dense-family archs and recurrent for ssm/hybrid."""
+    if backend == "auto":
+        backend = ("recurrent" if cfg.family in RECURRENT_FAMILIES
+                   else "contiguous")
+    if backend == "contiguous":
+        return ContiguousKVStore(cfg, n_slots, max_seq_len)
+    if backend == "paged":
+        return PagedKVStore(cfg, n_slots, max_seq_len,
+                            block_size=block_size, n_blocks=n_blocks)
+    if backend == "recurrent":
+        return RecurrentStateStore(cfg, n_slots, max_seq_len)
+    raise ValueError(
+        f"unknown cache backend {backend!r} "
+        f"(expected auto | contiguous | paged | recurrent)")

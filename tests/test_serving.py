@@ -11,10 +11,18 @@
   * slot reuse  — retired slots are re-leased without reallocating the cache
   * metrics     — engine counters reconcile with per-request token counts
   * admission   — the bounded queue and the per-slot sequence budget reject
-  * int8 KV     — the slot manager carries the Tensorizer int8 cache scales
+  * int8 KV     — the slot store carries the Tensorizer int8 cache scales
   * MoE         — routing is per-request isolated: idle slots are masked out
                   of the expert-capacity cumsum, prefill routes row-isolated
+  * SlotStore   — the cache sits behind the pluggable store protocol
+                  (serving/store.py): paged decode is bit-identical to
+                  contiguous (dense + int8-KV + MoE), block-pool exhaustion
+                  is admission backpressure (never corruption), and the
+                  recurrent backend serves ssm/hybrid families with pristine
+                  slot reset (no state leaks across leases)
 """
+
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -26,11 +34,15 @@ from repro.models import init_model
 from repro.models import serve as SV
 from repro.models import steps as ST
 from repro.serving import (
-    Engine, EngineConfig, KVSlotManager, QueueFull, bucket_for, default_buckets,
+    ContiguousKVStore, Engine, EngineConfig, KVSlotManager, PagedKVStore,
+    QueueFull, RecurrentStateStore, bucket_for, default_buckets,
+    format_memory_stats, make_store,
 )
 
 CFG = get_config("tinyllama-1.1b").smoke()
 MOE_CFG = get_config("moonshot-v1-16b-a3b").smoke()
+XLSTM_CFG = get_config("xlstm-125m").smoke()
+HYBRID_CFG = get_config("zamba2-7b").smoke()
 RNG = np.random.default_rng(7)
 
 
@@ -44,8 +56,13 @@ def moe_params():
     return init_model(MOE_CFG, jax.random.PRNGKey(1))
 
 
-def _prompts(lens):
-    return [RNG.integers(0, CFG.vocab, (l,), dtype=np.int32) for l in lens]
+@pytest.fixture(scope="module")
+def xlstm_params():
+    return init_model(XLSTM_CFG, jax.random.PRNGKey(2))
+
+
+def _prompts(lens, cfg=CFG):
+    return [RNG.integers(0, cfg.vocab, (l,), dtype=np.int32) for l in lens]
 
 
 def _sequential(params, prompts, gens, cfg=CFG, **ecfg_kw):
@@ -56,6 +73,21 @@ def _sequential(params, prompts, gens, cfg=CFG, **ecfg_kw):
         req = eng.submit(p, g)
         eng.run_until_complete()
         outs.append(list(req.tokens))
+    eng.close()
+    return outs
+
+
+def _staggered(params, prompts, gens, cfg=CFG, **ecfg_kw):
+    """Mixed traffic: two joins mid-flight, the rest queued behind them."""
+    eng = Engine(cfg, params, EngineConfig(max_slots=2, max_seq_len=32, **ecfg_kw))
+    reqs = [eng.submit(prompts[0], gens[0])]
+    eng.step()
+    reqs.append(eng.submit(prompts[1], gens[1]))
+    eng.step()
+    for p, g in zip(prompts[2:], gens[2:]):
+        reqs.append(eng.submit(p, g))
+    eng.run_until_complete()
+    outs = [list(r.tokens) for r in reqs]
     eng.close()
     return outs
 
@@ -233,12 +265,12 @@ def test_admission_rejects_prompt_over_largest_bucket(params):
     eng.close()
 
 
-def test_int8_kv_slot_manager(params):
-    """int8 KV cache config: the slot manager carries per-token scale planes
+def test_int8_kv_slot_store(params):
+    """int8 KV cache config: the slot store carries per-token scale planes
     and the engine still decodes staggered == sequential."""
     cfg8 = CFG.replace(kv_cache_dtype="int8")
     params8 = init_model(cfg8, jax.random.PRNGKey(0))
-    mgr = KVSlotManager(cfg8, n_slots=2, max_seq_len=16)
+    mgr = make_store(cfg8, n_slots=2, max_seq_len=16, backend="contiguous")
     assert mgr.cache["k"].dtype == np.int8
     assert "k_scale" in mgr.cache and "v_scale" in mgr.cache
 
@@ -386,3 +418,225 @@ def test_bucketing_bounds_prefill_shapes(params):
     assert eng.stats()["prefill_batches"] == 1    # one shared prefill forward
     eng.run_until_complete()
     eng.close()
+
+
+# ===========================================================================
+# SlotStore protocol: paged KV + recurrent-state backends
+# ===========================================================================
+
+def _leaf_rows(cache, slot):
+    """Flatten a (possibly nested) cache pytree to {path: slot-row array}."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(cache)
+    out = {}
+    for path, leaf in flat:
+        name = jax.tree_util.keystr(path)
+        out[name] = leaf[slot] if "index" in name else leaf[:, slot]
+    return out
+
+
+def test_make_store_backend_selection():
+    assert isinstance(make_store(CFG, 2, 32), ContiguousKVStore)
+    assert isinstance(make_store(CFG, 2, 32, backend="paged"), PagedKVStore)
+    assert isinstance(make_store(XLSTM_CFG, 2, 32), RecurrentStateStore)
+    with pytest.raises(ValueError, match="dense-family"):
+        make_store(XLSTM_CFG, 2, 32, backend="paged")
+    with pytest.raises(ValueError, match="ssm/hybrid"):
+        make_store(CFG, 2, 32, backend="recurrent")
+    with pytest.raises(ValueError, match="divide"):
+        make_store(CFG, 2, 32, backend="paged", block_size=12)
+    with pytest.raises(ValueError, match="unknown cache backend"):
+        make_store(CFG, 2, 32, backend="mmap")
+
+
+def test_kvslotmanager_shim_warns():
+    """Direct KVSlotManager use is deprecated but still works (it IS the
+    contiguous backend underneath)."""
+    with pytest.warns(DeprecationWarning, match="make_store"):
+        mgr = KVSlotManager(CFG, n_slots=2, max_seq_len=16)
+    assert isinstance(mgr, ContiguousKVStore)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")            # the store itself is clean
+        make_store(CFG, 2, 16, backend="contiguous")
+
+
+@pytest.mark.parametrize("family,kv_dtype,block_size", [
+    ("dense", "bfloat16", 8), ("dense", "int8", 8), ("moe", "bfloat16", 16),
+])
+def test_paged_decode_bit_identical_to_contiguous(
+        params, moe_params, family, kv_dtype, block_size):
+    """The paged-backend contract: the same staggered token stream served
+    through block-paged KV produces bit-identical tokens to contiguous rows —
+    for float, int8-per-token-scale, and MoE cache formats — and the seeded
+    cache contents agree on every valid position."""
+    base, p = (CFG, params) if family == "dense" else (MOE_CFG, moe_params)
+    cfg = base.replace(kv_cache_dtype=kv_dtype)
+    prompts = _prompts([5, 9, 4, 7])
+    gens = [6, 5, 8, 3]
+
+    eng_c = Engine(cfg, p, EngineConfig(max_slots=2, max_seq_len=32))
+    eng_p = Engine(cfg, p, EngineConfig(max_slots=2, max_seq_len=32,
+                                        cache_backend="paged",
+                                        block_size=block_size))
+    for e in (eng_c, eng_p):
+        for pr, g in zip(prompts, gens):
+            e.submit(pr, g)
+        e._admit()
+    # freshly admitted rows agree bit-for-bit on every valid position
+    view_c = eng_c.store.gather_view()
+    view_p = eng_p.store.gather_view()
+    for slot, req in eng_c.scheduler.active.items():
+        n = len(req.prompt)
+        for name in ("k", "v", "k_scale", "v_scale"):
+            if name not in view_c:
+                continue
+            np.testing.assert_array_equal(
+                np.asarray(view_c[name][:, slot, :n]),
+                np.asarray(view_p[name][:, slot, :n]),
+                err_msg=f"seeded leaf {name!r} diverged (slot {slot})")
+
+    toks_c = _staggered(p, prompts, gens, cfg=cfg)
+    toks_p = _staggered(p, prompts, gens, cfg=cfg, cache_backend="paged",
+                        block_size=block_size)
+    assert toks_c == toks_p                       # bit-identical, not allclose
+    eng_c.close()
+    eng_p.close()
+
+
+def test_paged_fused_seeding_bit_identical_to_replay(params):
+    """The fused==replay guarantee holds per backend: a paged store seeded by
+    the B=1 replay reference path (write_slot through the block tables)
+    generates the same tokens as fused admission."""
+    prompts = _prompts([5, 9, 4])
+    gens = [6, 4, 7]
+    ecfg = EngineConfig(max_slots=2, max_seq_len=32, cache_backend="paged",
+                        block_size=8)
+    eng_f = Engine(CFG, params, ecfg)
+    eng_r = _ReplaySeededEngine(CFG, params, ecfg)
+    reqs_f = [eng_f.submit(p, g) for p, g in zip(prompts, gens)]
+    reqs_r = [eng_r.submit(p, g) for p, g in zip(prompts, gens)]
+    eng_f.run_until_complete()
+    eng_r.run_until_complete()
+    assert [r.tokens for r in reqs_f] == [r.tokens for r in reqs_r]
+    eng_f.close()
+    eng_r.close()
+
+
+def test_paged_pool_exhaustion_is_backpressure_not_corruption(params):
+    """A block pool sized for 2 concurrent requests with 4 slots free: the
+    scheduler defers the overflow at the queue head (FIFO intact) until
+    retires free blocks — every request completes with tokens bit-identical
+    to the contiguous backend, and the pool drains back to fully free."""
+    prompts = _prompts([8, 8, 8, 8])
+    # 2 blocks per request (8 prompt + 8 gen, block 8); pool holds 4 blocks
+    eng = Engine(CFG, params, EngineConfig(max_slots=4, max_seq_len=16,
+                                           cache_backend="paged",
+                                           block_size=8, n_blocks=5))
+    reqs = [eng.submit(p, 8) for p in prompts]
+    eng.step()
+    s = eng.stats()
+    assert s["cache"]["blocks_used"] == 4 and s["cache"]["blocks_free"] == 0
+    assert eng.scheduler.n_active == 2            # two admitted, two held back
+    assert s["admissions_deferred"] >= 1
+    eng.run_until_complete()
+    s = eng.stats()
+    assert s["completed"] == 4
+    assert s["cache"]["blocks_free"] == s["cache"]["blocks_total"] == 4
+
+    eng_c = Engine(CFG, params, EngineConfig(max_slots=4, max_seq_len=16))
+    reqs_c = [eng_c.submit(p, 8) for p in prompts]
+    eng_c.run_until_complete()
+    assert [r.tokens for r in reqs] == [r.tokens for r in reqs_c]
+    eng.close()
+    eng_c.close()
+
+
+def test_paged_request_that_can_never_fit_is_rejected_not_livelocked(params):
+    """A request needing more blocks than the whole pool holds must bounce at
+    submit() — deferring it would park it at the queue head forever, spinning
+    run_until_complete and starving everything behind it."""
+    # pool: 2 usable blocks of 8 -> 16 tokens total; request needs 24
+    eng = Engine(CFG, params, EngineConfig(max_slots=2, max_seq_len=32,
+                                           cache_backend="paged",
+                                           block_size=8, n_blocks=3))
+    assert eng.submit(_prompts([16])[0], 8) is None
+    with pytest.raises(QueueFull):
+        eng.submit(_prompts([16])[0], 8, strict=True)
+    assert eng.stats()["rejected"] == 2
+    # a fitting request behind the rejection still serves normally
+    ok = eng.submit(_prompts([8])[0], 8)
+    eng.run_until_complete()
+    assert ok.metrics.n_generated == 8
+    eng.close()
+
+
+def test_ssm_staggered_matches_sequential(xlstm_params):
+    """The headline invariant, extended to the recurrent family: xlstm
+    requests joining/leaving the in-flight batch mid-decode produce exactly
+    the tokens they would produce served one at a time."""
+    prompts = _prompts([5, 9, 4, 7], cfg=XLSTM_CFG)
+    gens = [6, 5, 8, 3]
+    staggered = _staggered(xlstm_params, prompts, gens, cfg=XLSTM_CFG)
+    sequential = _sequential(xlstm_params, prompts, gens, cfg=XLSTM_CFG)
+    assert staggered == sequential               # bit-identical, not allclose
+
+
+def test_recurrent_slot_reset_has_teeth(xlstm_params):
+    """A retired xlstm slot never leaks state into the next lease: the row is
+    restored to the pristine pattern (incl. the non-zero mLSTM/sLSTM
+    stabilizer sentinels) immediately at retire, and a request served through
+    the reused slot decodes exactly as on a fresh engine."""
+    prompts = _prompts([6, 9], cfg=XLSTM_CFG)
+    eng = Engine(XLSTM_CFG, xlstm_params,
+                 EngineConfig(max_slots=1, max_seq_len=32))
+    r0 = eng.submit(prompts[0], 5)
+    eng.run_until_complete()
+    assert r0.metrics.n_generated == 5
+    # slot 0's row is bit-equal to a never-used store's (M_INIT / 1e-6 /
+    # -1e30 sentinels included — zeros would NOT be pristine here)
+    fresh = make_store(XLSTM_CFG, 1, 32, backend="recurrent")
+    got, want = _leaf_rows(eng.store.cache, 0), _leaf_rows(fresh.cache, 0)
+    for name in want:
+        np.testing.assert_array_equal(
+            np.asarray(got[name]), np.asarray(want[name]),
+            err_msg=f"retired slot leaf {name} not pristine")
+    # the re-leased slot serves exactly like a fresh engine
+    r1 = eng.submit(prompts[1], 5)
+    eng.run_until_complete()
+    eng2 = Engine(XLSTM_CFG, xlstm_params,
+                  EngineConfig(max_slots=1, max_seq_len=32))
+    r1_fresh = eng2.submit(prompts[1], 5)
+    eng2.run_until_complete()
+    assert r1.tokens == r1_fresh.tokens
+    eng.close()
+    eng2.close()
+
+
+def test_hybrid_serves_end_to_end():
+    """zamba2 (mamba conv/ssm state + shared-attention KV rows) serves through
+    the same engine via the recurrent backend, staggered == sequential."""
+    hp = init_model(HYBRID_CFG, jax.random.PRNGKey(3))
+    prompts = _prompts([5, 9, 4], cfg=HYBRID_CFG)
+    gens = [4, 3, 5]
+    staggered = _staggered(hp, prompts, gens, cfg=HYBRID_CFG)
+    sequential = _sequential(hp, prompts, gens, cfg=HYBRID_CFG)
+    assert staggered == sequential
+
+
+def test_memory_stats_surface(params):
+    """memory_stats flows from the store through engine.stats() to the
+    human-readable report line."""
+    eng = Engine(CFG, params, EngineConfig(max_slots=2, max_seq_len=32,
+                                           cache_backend="paged",
+                                           block_size=8))
+    eng.submit(_prompts([6])[0], 4)
+    eng.step()
+    ms = eng.stats()["cache"]
+    assert ms["backend"] == "paged" and ms["blocks_used"] > 0
+    assert ms["bytes"] == eng.store.nbytes() > 0
+    line = format_memory_stats(ms)
+    assert "paged" in line and "blocks" in line
+    eng.run_until_complete()
+    assert eng.stats()["cache"]["blocks_used"] == 0
+    eng.close()
+    contiguous = format_memory_stats(make_store(CFG, 2, 32).memory_stats())
+    assert "contiguous" in contiguous
