@@ -46,11 +46,13 @@ from common import emit
 
 def run_cell(cfg, params, *, slots: int, stagger: int, n_requests: int,
              prompt_len: int, gen: int, backend: str = "auto",
-             block_size: int = 16, n_blocks=None, max_seq_len=None):
+             block_size: int = 16, n_blocks=None, max_seq_len=None,
+             paged_native=False, prefill_chunk=None, buckets=None):
     engine = Engine(cfg, params, EngineConfig(
         max_slots=slots, max_queue=n_requests,
         max_seq_len=max_seq_len or (prompt_len + gen), cache_backend=backend,
-        block_size=block_size, n_blocks=n_blocks))
+        block_size=block_size, n_blocks=n_blocks, paged_native=paged_native,
+        prefill_chunk=prefill_chunk, buckets=buckets))
     rng = np.random.default_rng(0)
     reqs = []
     for _ in range(n_requests):
@@ -145,6 +147,127 @@ def paged_memory_report(cfg, params, *, slots: int, prompt_len: int, gen: int,
     return report
 
 
+def paged_native_report(cfg, params, *, slots: int, prompt_len: int, gen: int,
+                        block_size: int, chunk: int, long_prompt: int,
+                        out_path: str) -> dict:
+    """The block-native claim, measured: (1) the same short-prompt mix served
+    through the paged gather-bridge and the block-native decode — tokens
+    asserted bit-identical — recording each mode's PEAK decode working set.
+    The bridge's peak is pool + the all-layer gather view; native mode's
+    store-level view is gone (decode_view_bytes == 0), but the jnp
+    block-native path still gathers ONE layer's rows transiently inside the
+    layer scan (view_bytes / n_layers), so its honest peak is pool +
+    per-layer gather; only the Pallas kernel path (paged_kernel=True) works
+    from block-sized VMEM tiles alone, reported as kernel_peak_decode_bytes.
+    (2) A long prompt (wider than every fused bucket) admitted via the
+    chunked prefill, recording its TTFT against single-shot fused admission
+    of the same prompt (tokens asserted bit-identical) and the peak prefill
+    score-matrix bytes each mode materializes (B*H*S*S f32 single-shot vs
+    B*H*chunk*S chunked — the quadratic term that caps admissible prompt
+    length)."""
+    req_len = prompt_len + gen
+    n_requests = 2 * slots
+
+    s_b, ttft_b, toks_b = run_cell(
+        cfg, params, slots=slots, stagger=0, n_requests=n_requests,
+        prompt_len=prompt_len, gen=gen, backend="paged",
+        block_size=block_size)
+    s_n, ttft_n, toks_n = run_cell(
+        cfg, params, slots=slots, stagger=0, n_requests=n_requests,
+        prompt_len=prompt_len, gen=gen, backend="paged",
+        block_size=block_size, paged_native=True)
+    assert toks_b == toks_n, "block-native decode diverged from gather bridge"
+    assert s_n["cache"]["decode_view_bytes"] == 0
+
+    # long-prompt admission: fused buckets capped at `chunk`, so the long
+    # prompt can only enter through the chunked path
+    long_seq = long_prompt + gen
+    s_lc, ttft_lc, toks_lc = run_cell(
+        cfg, params, slots=1, stagger=0, n_requests=1,
+        prompt_len=long_prompt, gen=gen, max_seq_len=long_seq,
+        buckets=(chunk,), prefill_chunk=chunk)
+    s_lf, ttft_lf, toks_lf = run_cell(
+        cfg, params, slots=1, stagger=0, n_requests=1,
+        prompt_len=long_prompt, gen=gen, max_seq_len=long_seq)
+    assert toks_lc == toks_lf, "chunked prefill diverged from single-shot"
+
+    import math
+    from repro.serving import bucket_for, default_buckets
+    bucket = math.ceil(long_prompt / chunk) * chunk          # chunked engine
+    fused_bucket = bucket_for(long_prompt, default_buckets(long_seq))
+    score_fused = 4 * cfg.n_heads * fused_bucket * fused_bucket  # B=1, f32
+    score_chunked = 4 * cfg.n_heads * chunk * bucket
+    report = {
+        "benchmark": "paged_native",
+        "arch": cfg.name,
+        "kv_cache_dtype": cfg.kv_cache_dtype,
+        "slots": slots,
+        "prompt_len": prompt_len,
+        "gen": gen,
+        "block_size": block_size,
+        "requests": n_requests,
+        "bit_identical_tokens": True,
+        "decode": {
+            "bridge": {
+                "pool_bytes": s_b["cache"]["bytes"],
+                "decode_view_bytes": s_b["cache"]["decode_view_bytes"],
+                "peak_decode_bytes": (s_b["cache"]["bytes"]
+                                      + s_b["cache"]["decode_view_bytes"]),
+                "ttft_ms": ttft_b,
+                "sustained_tok_s": s_b["sustained_tok_s"],
+            },
+            "native": {
+                "pool_bytes": s_n["cache"]["bytes"],
+                "decode_view_bytes": 0,
+                # the jnp block-native path gathers one layer's rows
+                # transiently inside the layer scan
+                "per_layer_gather_bytes":
+                    s_b["cache"]["decode_view_bytes"] // cfg.n_layers,
+                "peak_decode_bytes": (
+                    s_n["cache"]["bytes"]
+                    + s_b["cache"]["decode_view_bytes"] // cfg.n_layers),
+                # the Pallas kernel path holds only block-sized VMEM tiles
+                "kernel_peak_decode_bytes": s_n["cache"]["bytes"],
+                "ttft_ms": ttft_n,
+                "sustained_tok_s": s_n["sustained_tok_s"],
+                "table_uploads": s_n["cache"]["table_uploads"],
+            },
+            "native_over_bridge_peak_bytes": (
+                (s_n["cache"]["bytes"]
+                 + s_b["cache"]["decode_view_bytes"] // cfg.n_layers)
+                / (s_b["cache"]["bytes"] + s_b["cache"]["decode_view_bytes"])),
+        },
+        "long_prompt": {
+            "prompt_len": long_prompt,
+            "prefill_chunk": chunk,
+            "bucket": bucket,
+            "fused": {"ttft_ms": ttft_lf,
+                      "bucket": fused_bucket,
+                      "score_matrix_bytes": score_fused},
+            "chunked": {"ttft_ms": ttft_lc,
+                        "score_matrix_bytes": score_chunked},
+            "score_bytes_ratio": score_chunked / score_fused,
+        },
+    }
+    emit("paged_native_peak_decode_bytes",
+         report["decode"]["native"]["peak_decode_bytes"],
+         f"bridge_peak={report['decode']['bridge']['peak_decode_bytes']}B "
+         f"ratio={report['decode']['native_over_bridge_peak_bytes']:.2f}")
+    emit("chunked_prefill_score_bytes",
+         score_chunked,
+         f"fused={score_fused}B ratio={report['long_prompt']['score_bytes_ratio']:.3f} "
+         f"ttft_chunked={ttft_lc:.0f}ms ttft_fused={ttft_lf:.0f}ms")
+    Path(out_path).parent.mkdir(parents=True, exist_ok=True)
+    Path(out_path).write_text(json.dumps(report, indent=2) + "\n")
+    print(f"# native peak decode {report['decode']['native']['peak_decode_bytes']}B "
+          f"vs bridge {report['decode']['bridge']['peak_decode_bytes']}B "
+          f"({report['decode']['native_over_bridge_peak_bytes']:.2f}x), "
+          f"tokens bit-identical; long-prompt score matrix "
+          f"{score_chunked}B vs {score_fused}B")
+    print(f"# wrote {out_path}")
+    return report
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tinyllama-1.1b")
@@ -158,6 +281,16 @@ def main(argv=None) -> int:
     ap.add_argument("--paged-report", default="",
                     help="write the paged-vs-contiguous memory JSON here "
                          "and skip the throughput sweep")
+    ap.add_argument("--paged-native-report", default="",
+                    help="write the block-native-vs-bridge decode working "
+                         "set + chunked long-prompt TTFT JSON here and skip "
+                         "the throughput sweep")
+    ap.add_argument("--prefill-chunk", type=int, default=16,
+                    help="chunk width for the long-prompt cell of "
+                         "--paged-native-report")
+    ap.add_argument("--long-prompt", type=int, default=48,
+                    help="long-prompt length for --paged-native-report "
+                         "(must exceed --prefill-chunk)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch).smoke().replace(quantize=args.quantize)
@@ -172,6 +305,24 @@ def main(argv=None) -> int:
                 cfg, params, slots=4, prompt_len=args.prompt_len,
                 gen=args.gen, block_size=args.block_size,
                 out_path=args.paged_report)
+            return 0
+
+        if args.paged_native_report:
+            if args.long_prompt <= args.prefill_chunk:
+                ap.error(f"--long-prompt {args.long_prompt} must exceed "
+                         f"--prefill-chunk {args.prefill_chunk}, or the "
+                         "'chunked' cell would measure the fused path")
+            long_seq = args.long_prompt + args.gen
+            if (long_seq // args.prefill_chunk) * args.prefill_chunk < args.long_prompt:
+                ap.error(f"--long-prompt {args.long_prompt} does not fit a "
+                         f"chunk-multiple bucket within prompt+gen "
+                         f"{long_seq} (chunk {args.prefill_chunk}); raise "
+                         "--gen or align the prompt to the chunk width")
+            paged_native_report(
+                cfg, params, slots=4, prompt_len=args.prompt_len,
+                gen=args.gen, block_size=args.block_size,
+                chunk=args.prefill_chunk, long_prompt=args.long_prompt,
+                out_path=args.paged_native_report)
             return 0
 
         for slots in (1, 2, 4, 8):

@@ -1,0 +1,137 @@
+"""Pallas TPU kernel: block-native paged decode attention.
+
+The paged serving cache (serving/store.py ``PagedKVStore``) keeps K/V in a
+pool of fixed-size blocks — leaves ``(n_blocks, block_size, KV, hd)`` — and
+maps each decode slot's sequence positions through a per-slot block table:
+position ``p`` of slot ``b`` lives in pool cell
+``(tables[b, p // block_size], p % block_size)``. PR 3's decode bridged this
+layout by gathering every slot's blocks into a transient contiguous
+``(B, S, KV, hd)`` view per step — correct, but the view is exactly the
+working set paging exists to avoid. This kernel attends over the pool
+*in place*:
+
+Block-table addressing scheme
+  * grid ``(B, MB)`` — one program per (slot, table entry). The block table
+    and per-slot write indices ride in scalar-prefetch memory
+    (``PrefetchScalarGridSpec``), so the input ``BlockSpec`` index map can
+    address HBM *through the table*: program ``(b, j)`` DMAs pool block
+    ``tables[b, j]`` into VMEM — never a gathered copy of the whole row, and
+    blocks the table doesn't name are never touched.
+  * table entries past a slot's lease point at the reserved null block 0;
+    their positions ``j*bs + t`` exceed the slot's causal horizon
+    ``index[b]``, so the kernel masks them before the softmax and their
+    weight is exactly 0 — null-block contents can never leak into a slot.
+  * GQA: query heads are folded as ``(KV, rep, hd)`` against the pool's KV
+    heads inside VMEM — the pool is never expanded to ``n_heads``.
+  * softmax is the online (flash-style) rescaling accumulated across the MB
+    grid steps in VMEM scratch: running max ``m``, normalizer ``l``, and the
+    unnormalized output ``acc``, finalized at ``j == MB - 1``.
+
+Peak per-step working set: one ``(block_size, KV, hd)`` K and V tile plus
+``(H, hd)`` accumulators per program — the pool stays the only HBM-resident
+cache object (``memory_stats()["decode_view_bytes"] == 0``).
+
+Numerics: the online softmax is mathematically the row softmax but not
+bitwise identical to the jnp full-row reduction, so the engine's
+bit-identity oracle (native == gather-bridge == contiguous,
+tests/test_serving.py) runs on the jnp block-native path in
+``models/attention.py paged_decode_attention``; this kernel is the TPU fast
+path behind ``EngineConfig.paged_kernel`` and is validated against the
+gather reference to float tolerance (interpret mode on CPU CI).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(tables_ref, index_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *, bs: int, n_tbl: int,
+                  sm_scale: float):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    idx = index_ref[b]
+    kpos = j * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)[0]
+    valid = kpos <= idx                                   # causal horizon
+    q = q_ref[0].astype(jnp.float32)                      # (H, hd)
+    k = k_ref[0].astype(jnp.float32)                      # (bs, KV, hd)
+    v = v_ref[0].astype(jnp.float32)
+    H, hd = q.shape
+    KV = k.shape[1]
+    rep = H // KV
+    q3 = q.reshape(KV, rep, hd)                           # GQA fold, no expand
+    s = jnp.einsum("grd,tgd->grt", q3, k) * sm_scale      # (KV, rep, bs)
+    s = jnp.where(valid[None, None, :], s, NEG_INF).reshape(H, bs)
+    m_prev = m_ref[...][:, :1]                            # (H, 1)
+    l_prev = l_ref[...][:, :1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    # explicit zero at masked positions: a fully-masked block (past the
+    # lease) must contribute nothing even while m is still at NEG_INF
+    p = jnp.where(valid[None, :], jnp.exp(s - m_new), 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, axis=-1, keepdims=True)
+    pv = jnp.einsum("grt,tgd->grd", p.reshape(KV, rep, bs), v).reshape(H, hd)
+    acc_ref[...] = acc_ref[...] * corr + pv
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(j == n_tbl - 1)
+    def _done():
+        o_ref[0] = (acc_ref[...] / l_ref[...][:, :1]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention(
+    q: jax.Array,          # (B, H, hd) current-token queries
+    k_pool: jax.Array,     # (n_blocks, block_size, KV, hd)
+    v_pool: jax.Array,
+    tables: jax.Array,     # (B, MB) int32 per-slot block tables
+    index: jax.Array,      # (B,) int32 causal horizons (current positions)
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """Single-token attention over the block pool through the tables.
+    Returns (B, H, hd) f32. ``interpret=True`` runs the kernel on CPU (the
+    fast-tier CI path)."""
+    B, H, hd = q.shape
+    _, bs, KV, _ = k_pool.shape
+    MB = tables.shape[1]
+    assert H % KV == 0, (H, KV)
+    kernel = functools.partial(_paged_kernel, bs=bs, n_tbl=MB,
+                               sm_scale=hd ** -0.5)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(B, MB),
+            in_specs=[
+                pl.BlockSpec((1, H, hd), lambda b, j, tbl, idx: (b, 0, 0)),
+                pl.BlockSpec((1, bs, KV, hd),
+                             lambda b, j, tbl, idx: (tbl[b, j], 0, 0, 0)),
+                pl.BlockSpec((1, bs, KV, hd),
+                             lambda b, j, tbl, idx: (tbl[b, j], 0, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, H, hd), lambda b, j, tbl, idx: (b, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((H, 128), jnp.float32),    # running max m
+                pltpu.VMEM((H, 128), jnp.float32),    # normalizer l
+                pltpu.VMEM((H, hd), jnp.float32),     # unnormalized output
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, H, hd), jnp.float32),
+        interpret=interpret,
+    )(tables, index, q, k_pool, v_pool)

@@ -23,7 +23,12 @@ The cache sits behind the SlotStore protocol (serving/store.py):
 ``--cache-backend paged`` leases fixed-size blocks from a pool
 (``--block-size``, ``--n-blocks``) with admission backpressure when the pool
 runs dry, and ``auto`` picks contiguous for dense/moe and the recurrent-state
-backend for ssm/hybrid archs (xlstm/zamba2 serve end-to-end now). The
+backend for ssm/hybrid archs (xlstm/zamba2 serve end-to-end now). With
+``--paged-native`` decode attends over the block pool through the per-slot
+tables — no transient gather view, ``decode_view_bytes == 0`` — and
+``--paged-kernel`` routes the contraction through the Pallas paged-attention
+kernel. ``--prefill-chunk W`` admits prompts wider than the fused buckets
+through the chunked prefill scan (peak score memory W*S, not S^2). The
 end-of-run report prints ``memory_stats()`` for the selected backend.
 """
 
@@ -81,11 +86,28 @@ def main(argv=None) -> int:
     ap.add_argument("--n-blocks", type=int, default=0,
                     help="paged backend: pool size in blocks (0 = full "
                          "slots x max-seq capacity)")
+    ap.add_argument("--paged-native", action="store_true",
+                    help="paged backend: block-native decode — attend over "
+                         "the block pool through the tables, no transient "
+                         "gather view (decode_view_bytes == 0)")
+    ap.add_argument("--paged-kernel", action="store_true",
+                    help="with --paged-native: route the attention "
+                         "contraction through the Pallas paged-attention "
+                         "kernel (interpret mode off-TPU)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked prefill width for long prompts: buckets "
+                         "wider than this admit via the chunked scan "
+                         "(peak score memory chunk*S instead of S^2; "
+                         "0 = single-shot fused prefill only)")
     ap.add_argument("--model-parallel", type=int, default=1)
     args = ap.parse_args(argv)
     for name in ("requests", "prompt_len", "gen", "slots", "max_queue"):
         if getattr(args, name) < 1:
             ap.error(f"--{name.replace('_', '-')} must be >= 1")
+    if (args.paged_native or args.paged_kernel) and args.cache_backend != "paged":
+        ap.error("--paged-native/--paged-kernel require --cache-backend paged")
+    if args.paged_kernel and not args.paged_native:
+        ap.error("--paged-kernel requires --paged-native")
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -116,7 +138,10 @@ def main(argv=None) -> int:
             max_slots=args.slots, max_queue=args.max_queue,
             max_seq_len=args.prompt_len + args.gen,
             cache_backend=args.cache_backend, block_size=args.block_size,
-            n_blocks=args.n_blocks or None))
+            n_blocks=args.n_blocks or None,
+            paged_native=args.paged_native,
+            paged_kernel=args.paged_kernel,
+            prefill_chunk=args.prefill_chunk or None))
         requests = []
         for i in range(args.requests):
             requests.append(engine.submit(prompts[i], args.gen, strict=True))

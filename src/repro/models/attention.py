@@ -7,9 +7,17 @@
                  KV cache; softmax reductions over the sharded seq dim are
                  GSPMD-partitioned (SP for the 32k/500k decode cells)
 
-plus ``prefill_attention_with_kv`` — the fused serving-admission path: decode-
-mirrored full-sequence attention that also emits the cache-layout K/V entries
-(float or int8+scales) so one prefill forward can seed a serving slot.
+plus the serving-admission and paged-serving variants:
+  * ``prefill_attention_with_kv`` — the fused admission path: decode-mirrored
+    full-sequence attention that also emits the cache-layout K/V entries
+    (float or int8+scales) so one prefill forward can seed a serving slot
+  * ``chunked_prefill_attention_with_kv`` — the long-prompt admission path:
+    one fixed-width chunk attending over the accumulated rows, (B,H,W,S)
+    scores instead of (B,H,S,S), bit-identical to the single-shot path
+  * ``paged_decode_attention`` — block-native decode over the paged block
+    pool through per-slot tables (no gather-bridge view), bit-identical to
+    ``decode_attention`` on the gathered view; optional Pallas kernel path
+    (kernels/paged_attention.py)
 
 Sharding: q/k/v heads constrained to the ``model`` axis when
 ``cfg.shard_heads`` (TP); KV caches shard (batch->data, heads->model) and for
@@ -294,6 +302,73 @@ def prefill_attention_with_kv(
     return (out,) + entries
 
 
+def chunked_prefill_attention_with_kv(
+    p: Dict,
+    x: jax.Array,                 # (B, W, D) one prompt chunk's activations
+    cfg: ArchConfig,
+    *,
+    positions: jax.Array,         # (B, W) absolute positions of this chunk
+    chunk_start,                  # () int32 — first absolute position (traced)
+    k_acc: jax.Array,             # (B, S, KV, hd) cache-layout accumulator
+    v_acc: jax.Array,
+    k_sc_acc: Optional[jax.Array] = None,   # (B, S, KV) int8-KV scales
+    v_sc_acc: Optional[jax.Array] = None,
+    int8_kv: bool = False,
+) -> Tuple[jax.Array, ...]:
+    """One chunk of the chunked prefill-with-cache: project this chunk's
+    K/V into the accumulated cache rows at ``chunk_start`` and attend the
+    chunk's queries over everything written so far — already-written chunks
+    plus the chunk itself, under the absolute causal mask.
+
+    Returns ``(out, k_acc, v_acc)`` (+ scale accumulators on the int8 path)
+    with the accumulators updated in place (``dynamic_update_slice``).
+
+    Bit-identity with :func:`prefill_attention_with_kv` (the single-shot
+    fused path) is the contract, and it is structural: the accumulator rows
+    carry exactly the single-shot path's cache-dtype entries at written
+    positions and zeros beyond the writing frontier; scores against the
+    unwritten tail are masked to NEG_INF by the same absolute causal mask
+    (``kpos <= qpos``: every unwritten position is in some future chunk,
+    hence past every current query), so each query's softmax row is the
+    single-shot row — same length S, same values, exact-zero tail — and the
+    value contraction adds exact-zero terms for the tail. The score matrix
+    is (B, H, W, S) per chunk instead of (B, H, S, S): peak prefill memory
+    drops from quadratic to linear in S, which is what lets 32k-class
+    prompts admit (models/serve.py ``prefill_with_cache_chunked``)."""
+    B, W, _ = x.shape
+    S = k_acc.shape[1]
+    q, k_new, v_new = _project_qkv(p, x, cfg, positions, None)
+    if int8_kv:
+        k_q, v_q, k_sc, v_sc = _quantize_kv(k_new, v_new)
+        k_acc = jax.lax.dynamic_update_slice(k_acc, k_q, (0, chunk_start, 0, 0))
+        v_acc = jax.lax.dynamic_update_slice(v_acc, v_q, (0, chunk_start, 0, 0))
+        k_sc_acc = jax.lax.dynamic_update_slice(k_sc_acc, k_sc, (0, chunk_start, 0))
+        v_sc_acc = jax.lax.dynamic_update_slice(v_sc_acc, v_sc, (0, chunk_start, 0))
+        k_full = k_acc.astype(jnp.float32) * k_sc_acc[..., None]
+        v_full = v_acc.astype(jnp.float32) * v_sc_acc[..., None]
+        k = _expand_kv(k_full.astype(x.dtype), cfg.n_heads)
+        v = _expand_kv(v_full.astype(x.dtype), cfg.n_heads)
+    else:
+        cache_dt = L.cdtype(cfg)
+        k_acc = jax.lax.dynamic_update_slice(
+            k_acc, k_new.astype(cache_dt), (0, chunk_start, 0, 0))
+        v_acc = jax.lax.dynamic_update_slice(
+            v_acc, v_new.astype(cache_dt), (0, chunk_start, 0, 0))
+        k = _expand_kv(k_acc, cfg.n_heads)
+        v = _expand_kv(v_acc, cfg.n_heads)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * (cfg.hd ** -0.5)
+    qpos = chunk_start + jnp.arange(W)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    s = jnp.where((kpos <= qpos)[None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", w, v.astype(jnp.float32)).astype(x.dtype)
+    out = L.pdot(o.reshape(B, W, cfg.n_heads * cfg.hd), p["wo"], cfg)
+    if int8_kv:
+        return out, k_acc, v_acc, k_sc_acc, v_sc_acc
+    return out, k_acc, v_acc
+
+
 def project_kv_for_cross(p: Dict, enc_out: jax.Array, cfg: ArchConfig):
     """Pre-compute cross-attention K/V from encoder output (cached at prefill)."""
     B, S, _ = enc_out.shape
@@ -429,3 +504,101 @@ def decode_attention(
     if int8_cache:
         return out, cache_k, cache_v, ks, vs
     return out, cache_k, cache_v
+
+
+def paged_decode_attention(
+    p: Dict,
+    x: jax.Array,                 # (B, 1, D) current token
+    pool_k: jax.Array,            # (n_blocks, block_size, KV, hd) — ONE layer's pool
+    pool_v: jax.Array,
+    tables: jax.Array,            # (B, MB) int32 per-slot block tables
+    index: jax.Array,             # (B,) int32 per-slot positions
+    cfg: ArchConfig,
+    *,
+    positions: Optional[jax.Array] = None,
+    positions3: Optional[jax.Array] = None,
+    cache_scales: Optional[Tuple[jax.Array, jax.Array]] = None,  # (NB,bs,KV) x2
+    use_kernel: bool = False,
+) -> Tuple[jax.Array, ...]:
+    """Block-native single-token attention: the paged pool stays in block
+    layout end to end. The new token's K/V is scattered straight into its
+    slot's current pool cell ``(tables[b, index[b] // bs], index[b] % bs)``
+    and attention runs against the table-addressed blocks — no store-level
+    ``gather_block_kv`` view of all layers is ever materialized
+    (``PagedKVStore`` native mode passes the pool through unchanged and
+    reports ``decode_view_bytes: 0``).
+
+    Bit-identity with the gather-bridge decode is the contract: this path
+    gathers exactly one layer's table-addressed rows transiently inside the
+    layer body and then computes byte-for-byte the math of
+    :func:`decode_attention` on them (same einsum shapes, same length-S
+    softmax rows, same masks), so native tokens equal bridge tokens equal
+    contiguous tokens (tests/test_serving.py). Rows whose index ran past the
+    slot extent (idle/retired slots) clamp into their zeroed table — the
+    reserved null block 0 — mirroring the bridge writeback's clamped null
+    write; the null block is never read unmasked.
+
+    ``use_kernel`` routes the attention contraction through the Pallas
+    kernel (kernels/paged_attention.py) — truly block-granular HBM traffic,
+    online softmax (float-equivalent, not bit-exact; float-KV only, the
+    int8 path keeps the jnp contraction). Off-TPU the kernel runs in
+    interpret mode, which is how CPU CI exercises it.
+
+    Returns ``(out, pool_k, pool_v)`` (+ scale pools on the int8 path)."""
+    B = x.shape[0]
+    bs = pool_k.shape[1]
+    MB = tables.shape[1]
+    S = MB * bs
+    rows = jnp.arange(B)
+    index = jnp.asarray(index)
+    q, k_new, v_new = _project_qkv(p, x, cfg, positions, positions3)
+    pos = jnp.minimum(index, S - 1)          # idle rows: index can run on
+    phys = tables[rows, pos // bs]           # zeroed table -> null block 0
+    off = pos % bs
+    int8_cache = cache_scales is not None
+    if int8_cache:
+        pks, pvs = cache_scales
+        k_q, v_q, k_sc, v_sc = _quantize_kv(k_new, v_new)
+        pool_k = pool_k.at[phys, off].set(k_q[:, 0])
+        pool_v = pool_v.at[phys, off].set(v_q[:, 0])
+        pks = pks.at[phys, off].set(k_sc[:, 0])
+        pvs = pvs.at[phys, off].set(v_sc[:, 0])
+    else:
+        pool_k = pool_k.at[phys, off].set(k_new[:, 0].astype(pool_k.dtype))
+        pool_v = pool_v.at[phys, off].set(v_new[:, 0].astype(pool_v.dtype))
+
+    if use_kernel and not int8_cache:
+        from repro.kernels.paged_attention import (
+            paged_decode_attention as _pallas_paged)
+        o = _pallas_paged(
+            q[:, 0].astype(jnp.float32), pool_k, pool_v,
+            tables.astype(jnp.int32), index.astype(jnp.int32),
+            interpret=jax.default_backend() != "tpu")
+        o = o[:, None].astype(x.dtype)        # (B, 1, H, hd)
+    else:
+        # per-layer transient gather of this layer's table-addressed rows,
+        # then exactly decode_attention's math — the bit-identity oracle
+        flat = tables.reshape(-1)
+        k_rows = jnp.take(pool_k, flat, axis=0).reshape(B, S, *pool_k.shape[2:])
+        v_rows = jnp.take(pool_v, flat, axis=0).reshape(B, S, *pool_v.shape[2:])
+        if int8_cache:
+            ks = jnp.take(pks, flat, axis=0).reshape(B, S, *pks.shape[2:])
+            vs = jnp.take(pvs, flat, axis=0).reshape(B, S, *pvs.shape[2:])
+            k_full = k_rows.astype(jnp.float32) * ks[..., None]
+            v_full = v_rows.astype(jnp.float32) * vs[..., None]
+            k = _expand_kv(k_full.astype(x.dtype), cfg.n_heads)
+            v = _expand_kv(v_full.astype(x.dtype), cfg.n_heads)
+        else:
+            k = _expand_kv(k_rows, cfg.n_heads)
+            v = _expand_kv(v_rows, cfg.n_heads)
+        s = jnp.einsum("bqhd,bkhd->bhqk",
+                       q.astype(jnp.float32), k.astype(jnp.float32))
+        s = s * (cfg.hd ** -0.5)
+        valid = jnp.arange(S)[None, None, None, :] <= index[:, None, None, None]
+        s = jnp.where(valid, s, NEG_INF)
+        w = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", w, v.astype(jnp.float32)).astype(x.dtype)
+    out = L.pdot(o.reshape(B, 1, cfg.n_heads * cfg.hd), p["wo"], cfg)
+    if int8_cache:
+        return out, pool_k, pool_v, pks, pvs
+    return out, pool_k, pool_v

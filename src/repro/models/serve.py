@@ -149,6 +149,99 @@ def prefill_with_cache(params: Dict, cfg: ArchConfig, batch: Dict) -> Tuple[jax.
     return logits, kv
 
 
+def prefill_with_cache_chunked(params: Dict, cfg: ArchConfig,
+                               tokens: jax.Array, last_index: jax.Array,
+                               chunk: int) -> Tuple[jax.Array, Dict]:
+    """Chunked admission prefill (dense/moe/vlm): run the right-padded prompt
+    bucket through the stack ``chunk`` tokens at a time — a ``lax.scan`` over
+    chunks, each attending over everything already written plus itself
+    (models/attention.py ``chunked_prefill_attention_with_kv``) — and return
+    ``(first_tokens, kv)`` with kv in cache layout, the same contract as the
+    single-shot :func:`prefill_with_cache` step.
+
+    The point is the score matrix: single-shot fused prefill materializes
+    (B, H, S, S) f32 scores, which caps the admissible prompt length at
+    whatever S^2 fits; here the peak is (B, H, chunk, S) — linear in S — so
+    32k-class prompts admit through the same engine (serving/engine.py
+    ``prefill_chunk``). Emitted K/V entries, first tokens, and every token
+    decoded from a cache seeded with them are BIT-IDENTICAL to the
+    single-shot path (structurally: identical per-position projections,
+    length-S softmax rows with exact-zero masked tails, and exact-zero
+    value-contraction terms beyond the writing frontier — asserted in
+    tests/test_serving.py). MoE layers route row-isolated and dropless, so a
+    token's expert assignment is independent of which chunk carried it.
+
+    The vocab projection runs ONCE, after the scan, on each row's carried
+    ``last_index`` hidden state ((B, 1, V)) — never per chunk and never
+    (B, S, V), so admission pays exactly one row of logits per request.
+    mrope configs are rejected upstream (Engine construction): the chunked
+    scan does not thread positions3."""
+    B, S = tokens.shape
+    if S % chunk:
+        raise ValueError(f"chunk {chunk} must divide the bucket length {S}")
+    n_chunks = S // chunk
+    int8_kv = cfg.kv_cache_dtype == "int8" and cfg.family in ("dense", "moe", "vlm")
+    cdt = jnp.int8 if int8_kv else L.cdtype(cfg)
+    nl = cfg.n_layers
+    kv = {"k": jnp.zeros((nl, B, S, cfg.n_kv, cfg.hd), cdt),
+          "v": jnp.zeros((nl, B, S, cfg.n_kv, cfg.hd), cdt)}
+    if int8_kv:
+        kv["k_scale"] = jnp.full((nl, B, S, cfg.n_kv), 1e-12, jnp.float32)
+        kv["v_scale"] = jnp.full((nl, B, S, cfg.n_kv), 1e-12, jnp.float32)
+    names = ("k", "v", "k_scale", "v_scale") if int8_kv else ("k", "v")
+    last_x0 = jnp.zeros((B, cfg.d_model), L.cdtype(cfg))
+
+    def chunk_body(carry, c):
+        kv, last_x = carry
+        start = c * chunk
+        tok_c = jax.lax.dynamic_slice_in_dim(tokens, start, chunk, axis=1)
+        positions = start + jnp.broadcast_to(
+            jnp.arange(chunk, dtype=jnp.int32), (B, chunk))
+        # mirror _embed_in: cast the table before the gather
+        x = params["embed"].astype(L.cdtype(cfg))[tok_c]
+        x = shd.with_sharding(x, shd.batch_spec(None, None))
+
+        def layer_body(xc, inp):
+            if int8_kv:
+                lp, kl, vl, ksl, vsl = inp
+            else:
+                lp, kl, vl = inp
+                ksl = vsl = None
+            h = L.apply_norm(lp["ln1"], xc, cfg)
+            res = A.chunked_prefill_attention_with_kv(
+                lp["attn"], h, cfg, positions=positions, chunk_start=start,
+                k_acc=kl, v_acc=vl, k_sc_acc=ksl, v_sc_acc=vsl,
+                int8_kv=int8_kv)
+            xc = xc + res[0]
+            h = L.apply_norm(lp["ln2"], xc, cfg)
+            if cfg.family == "moe":
+                y, _ = MOE.apply_moe(lp["moe"], h, cfg, row_isolated=True)
+            else:
+                y = L.apply_mlp(lp["mlp"], h, cfg)
+            return xc + y, res[1:]
+
+        xs = tuple([params["layers"]] + [kv[n] for n in names])
+        xc, new = jax.lax.scan(layer_body, x, xs,
+                               unroll=True if cfg.scan_unroll else 1)
+        kv = dict(zip(names, new))
+        # carry each row's last-prompt-position hidden state; the vocab
+        # projection happens once, after the scan
+        rel = last_index - start
+        in_chunk = (rel >= 0) & (rel < chunk)
+        idx = jnp.clip(rel, 0, chunk - 1)
+        row = jnp.take_along_axis(
+            xc, jnp.broadcast_to(idx[:, None, None],
+                                 (B, 1, xc.shape[-1])), axis=1)[:, 0]
+        last_x = jnp.where(in_chunk[:, None], row, last_x)
+        return (kv, last_x), None
+
+    (kv, last_x), _ = jax.lax.scan(chunk_body, (kv, last_x0),
+                                   jnp.arange(n_chunks))
+    logits = M._logits(params, cfg, last_x[:, None, :])     # (B, 1, V)
+    first = jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
+    return first, kv
+
+
 def prefill_recurrent(params: Dict, cfg: ArchConfig, tokens: jax.Array,
                       last_index: jax.Array, max_seq_len: int
                       ) -> Tuple[jax.Array, Dict]:
@@ -359,3 +452,73 @@ def decode(params: Dict, cfg: ArchConfig, cache: Dict, batch: Dict) -> Tuple[jax
         return M._logits(params, cfg, x), cache
 
     raise ValueError(cfg.family)
+
+
+def decode_paged(params: Dict, cfg: ArchConfig, cache: Dict, batch: Dict,
+                 *, use_kernel: bool = False) -> Tuple[jax.Array, Dict]:
+    """Block-native single-token decode over the paged pool (dense/moe/vlm):
+    ``cache`` is the ``init_paged_cache`` pytree — k/v pools
+    (L, n_blocks, bs, KV, hd), per-slot tables (B, MB), per-slot index (B,) —
+    and is returned in the same layout: no store-level gather view exists in
+    this path (serving/store.py ``PagedKVStore`` native mode passes the pool
+    straight through). Each layer writes the new token's K/V into its pool
+    cell through the tables and attends block-natively
+    (models/attention.py ``paged_decode_attention``); tokens are
+    bit-identical to the gather-bridge decode, which remains the reference
+    oracle. ``use_kernel`` selects the Pallas kernel for the attention
+    contraction (float-KV; interpret mode off-TPU)."""
+    if cfg.family not in ("dense", "moe", "vlm"):
+        raise ValueError(
+            f"paged decode is a dense-family path, not {cfg.family}")
+    tokens = batch["tokens"]
+    B = tokens.shape[0]
+    index = cache["index"]                        # (B,) per-slot positions
+    tables = cache["tables"]
+    positions = index[:, None].astype(jnp.int32)
+    positions3 = batch.get("positions3")
+    if cfg.rope_kind == "mrope" and positions3 is None:
+        positions3 = jnp.broadcast_to(
+            index[None, :, None], (3, B, 1)).astype(jnp.int32)
+
+    x = params["embed"][tokens].astype(L.cdtype(cfg))
+    x = shd.with_sharding(x, shd.batch_spec(None, None))
+    int8_kv = "k_scale" in cache
+
+    def body(carry, inp):
+        x = carry
+        if int8_kv:
+            lp, pk, pv, pks, pvs = inp
+            h = L.apply_norm(lp["ln1"], x, cfg)
+            o, pk, pv, pks, pvs = A.paged_decode_attention(
+                lp["attn"], h, pk, pv, tables, index, cfg,
+                positions=positions, positions3=positions3,
+                cache_scales=(pks, pvs), use_kernel=use_kernel)
+        else:
+            lp, pk, pv = inp
+            h = L.apply_norm(lp["ln1"], x, cfg)
+            o, pk, pv = A.paged_decode_attention(
+                lp["attn"], h, pk, pv, tables, index, cfg,
+                positions=positions, positions3=positions3,
+                use_kernel=use_kernel)
+        x = x + o
+        h = L.apply_norm(lp["ln2"], x, cfg)
+        if cfg.family == "moe":
+            y, _ = MOE.apply_moe(lp["moe"], h, cfg, active=batch.get("active"))
+        else:
+            y = L.apply_mlp(lp["mlp"], h, cfg)
+        out_pools = (pk, pv, pks, pvs) if int8_kv else (pk, pv)
+        return x + y, out_pools
+
+    xs = ((params["layers"], cache["k"], cache["v"],
+           cache["k_scale"], cache["v_scale"])
+          if int8_kv else (params["layers"], cache["k"], cache["v"]))
+    x, new_pools = jax.lax.scan(body, x, xs,
+                                unroll=True if cfg.scan_unroll else 1)
+    if int8_kv:
+        k_new, v_new, ks_new, vs_new = new_pools
+        cache = dict(cache, k=k_new, v=v_new, k_scale=ks_new,
+                     v_scale=vs_new, index=index + 1)
+    else:
+        k_new, v_new = new_pools
+        cache = dict(cache, k=k_new, v=v_new, index=index + 1)
+    return M._logits(params, cfg, x), cache

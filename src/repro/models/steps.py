@@ -5,9 +5,14 @@
   make_prefill_step(cfg) — full-sequence forward returning last-token logits
   make_prefill_with_cache_step(cfg) — bucketed serving prefill returning
                            (first_tokens, per-layer K/V in cache layout)
+  make_chunked_prefill_step(cfg, chunk) — same contract, scanning the bucket
+                           chunk tokens at a time (long-prompt admission:
+                           linear-in-S peak score memory)
   make_recurrent_prefill_step(cfg, max_seq_len) — masked-scan admission
                            prefill for ssm/hybrid recurrent-state slots
   make_decode_step(cfg)  — one-token decode against the KV/state cache
+  make_paged_decode_step(cfg) — block-native one-token decode over the paged
+                           block pool through per-slot tables (no gather view)
   input_specs(cfg,shape) — ShapeDtypeStruct stand-ins + shardings per cell
                            (the assignment's no-allocation dry-run inputs)
 
@@ -107,9 +112,35 @@ def make_recurrent_prefill_step(cfg: ArchConfig, max_seq_len: int) -> Callable:
     return prefill_step
 
 
+def make_chunked_prefill_step(cfg: ArchConfig, chunk: int) -> Callable:
+    """Chunked admission step (serving, long prompts): same
+    (params, tokens, last_index) -> (first_tokens, kv) contract as
+    ``make_prefill_with_cache_step``, but scanning the bucket ``chunk``
+    tokens at a time so peak prefill memory is (B, H, chunk, S) instead of
+    the single-shot (B, H, S, S) score matrix — bit-identical output
+    (models/serve.py ``prefill_with_cache_chunked``)."""
+    def prefill_step(params, tokens, last_index):
+        return SV.prefill_with_cache_chunked(params, cfg, tokens, last_index,
+                                             chunk)
+    return prefill_step
+
+
 def make_decode_step(cfg: ArchConfig) -> Callable:
     def decode_step(params, cache, batch):
         logits, cache = SV.decode(params, cfg, cache, batch)
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1)
+        return next_tok, cache
+    return decode_step
+
+
+def make_paged_decode_step(cfg: ArchConfig, use_kernel: bool = False) -> Callable:
+    """Block-native decode step (serving, paged store in native mode): the
+    cache argument is the block pool + tables + per-slot index, returned in
+    the same layout — no gather-bridge view (models/serve.py
+    ``decode_paged``)."""
+    def decode_step(params, cache, batch):
+        logits, cache = SV.decode_paged(params, cfg, cache, batch,
+                                        use_kernel=use_kernel)
         next_tok = jnp.argmax(logits[:, -1, :], axis=-1)
         return next_tok, cache
     return decode_step

@@ -38,6 +38,17 @@ per-slot block tables; ``lease`` returning False is admission backpressure
 when the pool runs dry), and ``recurrent`` (per-slot mamba/xlstm state rows —
 ssm and hybrid families serve through the same engine, admitted by a
 masked-scan prefill that is one dispatch per bucket like the dense path).
+The paged store additionally runs block-native (``paged_native=True``): the
+decode step receives the pool + tables directly and attends in place — no
+gather-bridge view, peak decode working set = the pool — bit-identical to
+the bridge, with an optional Pallas kernel path (``paged_kernel=True``).
+Long prompts admit via chunked prefill (``prefill_chunk=W``): buckets wider
+than W scan the prompt W tokens at a time, peak score memory (B, H, W, S)
+instead of (B, H, S, S), bit-identical to single-shot fused prefill — so the
+admissible prompt length is no longer capped by the quadratic score matrix.
+A request deferred by the store lease while zero slots are active can never
+make progress; ``step`` raises a diagnostic immediately instead of spinning
+``max_steps`` no-ops (the fits-vs-lease drift guard).
 
 Scope: token-input dense/moe/ssm/hybrid families. encdec/vlm (embeds input)
 serving is a ROADMAP item.
@@ -97,30 +108,51 @@ class EngineConfig:
     cache_backend: str = "auto"            # auto | contiguous | paged | recurrent
     block_size: int = 16                   # paged: tokens per KV block
     n_blocks: Optional[int] = None         # paged: pool size (None = full capacity)
+    paged_native: bool = False             # paged: block-native decode (no
+                                           # gather-bridge view; decode attends
+                                           # over the pool through the tables)
+    paged_kernel: bool = False             # native: route the attention
+                                           # contraction through the Pallas
+                                           # kernel (float-KV; interpret off-TPU)
+    prefill_chunk: Optional[int] = None    # dense: chunked prefill width —
+                                           # buckets wider than this admit via
+                                           # the chunked scan (peak score
+                                           # memory W*S, not S^2), lifting the
+                                           # long-prompt admission cap
 
 
 @functools.lru_cache(maxsize=None)
-def _jitted_steps(cfg: ArchConfig, kind: str, max_seq_len: int = 0):
+def _jitted_steps(cfg: ArchConfig, kind: str, max_seq_len: int = 0,
+                  native: bool = False, kernel: bool = False, chunk: int = 0):
     """Compiled step fns shared across Engine instances of the same
-    (config, store kind) — rebuilding an engine (tests, benchmark sweeps)
-    reuses XLA executables. ``max_seq_len`` keys the cache ONLY for the
-    recurrent backend (its prefill scan allocates the state cache at that
-    length); dense/moe callers pass 0 so engines with different seq budgets
-    keep sharing one set of compiled executables. Dense-family prefill is the fused
-    prefill-with-cache step: right-padded bucket batch in, (first_tokens,
-    per-layer K/V in cache layout) out — causal attention means pad tokens
-    after a row's prompt never reach its logits or its K/V rows, so a small
-    fixed bucket set is exact for any pad content. Recurrent-family prefill is
-    the masked scan of the decode body (same contract, state rows out). The
-    decode step is the SAME for every backend — paged layout translation
-    happens inside the store's decode_cache/swap bridge, which is what makes
-    paged decode bit-identical to contiguous."""
+    (config, store kind, decode/prefill mode) — rebuilding an engine (tests,
+    benchmark sweeps) reuses XLA executables. ``max_seq_len`` keys the cache
+    ONLY for the recurrent backend (its prefill scan allocates the state
+    cache at that length); dense/moe callers pass 0 so engines with
+    different seq budgets keep sharing one set of compiled executables.
+    Dense-family prefill is the fused prefill-with-cache step: right-padded
+    bucket batch in, (first_tokens, per-layer K/V in cache layout) out —
+    causal attention means pad tokens after a row's prompt never reach its
+    logits or its K/V rows, so a small fixed bucket set is exact for any pad
+    content. ``chunk`` additionally builds the chunked prefill step (same
+    contract, (B, H, chunk, S) peak score memory) for the long-prompt
+    buckets. Recurrent-family prefill is the masked scan of the decode body
+    (same contract, state rows out). The decode step is shared across
+    contiguous/paged-bridge backends — paged layout translation happens
+    inside the store's decode_cache/swap bridge, which is what makes paged
+    decode bit-identical to contiguous; ``native`` compiles the block-native
+    decode instead (pool in, pool out — models/serve.py decode_paged), which
+    is bit-identical to the bridge by construction."""
     if kind == "recurrent":
         prefill = jax.jit(ST.make_recurrent_prefill_step(cfg, max_seq_len))
     else:
         prefill = jax.jit(ST.make_prefill_with_cache_step(cfg))
-    decode = jax.jit(ST.make_decode_step(cfg), donate_argnums=(1,))
-    return prefill, decode
+    prefill_chunked = (jax.jit(ST.make_chunked_prefill_step(cfg, chunk))
+                       if chunk else None)
+    decode_fn = (ST.make_paged_decode_step(cfg, use_kernel=kernel)
+                 if native else ST.make_decode_step(cfg))
+    decode = jax.jit(decode_fn, donate_argnums=(1,))
+    return prefill, prefill_chunked, decode
 
 
 class _Ready:
@@ -155,7 +187,39 @@ class Engine:
         self.cfg = cfg
         self.params = params
         self.ecfg = engine_cfg or EngineConfig()
+        if self.ecfg.paged_kernel and not self.ecfg.paged_native:
+            raise ValueError("paged_kernel requires paged_native=True")
+        if self.ecfg.paged_native and self.ecfg.cache_backend != "paged":
+            raise ValueError(
+                f"paged_native requires cache_backend='paged', got "
+                f"{self.ecfg.cache_backend!r}")
         buckets = self.ecfg.buckets or default_buckets(self.ecfg.max_seq_len)
+        chunk = self.ecfg.prefill_chunk
+        if chunk:
+            if cfg.family in RECURRENT_FAMILIES:
+                raise ValueError(
+                    "prefill_chunk applies to the dense-family score-matrix "
+                    f"prefill, not the recurrent scan ({cfg.family})")
+            if cfg.rope_kind == "mrope":
+                raise ValueError(
+                    "prefill_chunk does not support mrope position encoding "
+                    "(the chunked scan does not thread positions3)")
+            if not 1 <= chunk <= self.ecfg.max_seq_len:
+                raise ValueError(
+                    f"prefill_chunk {chunk} must be in [1, max_seq_len "
+                    f"{self.ecfg.max_seq_len}]")
+            # buckets at most one chunk wide keep the single-shot fused step;
+            # beyond that, admission goes through chunk-multiple buckets and
+            # the chunked scan — which is what lifts the admissible prompt
+            # length past the widest fused bucket
+            fused = tuple(b for b in buckets if b <= chunk)
+            chunked = tuple(
+                k * chunk for k in range(1, self.ecfg.max_seq_len // chunk + 1)
+                if k * chunk > max(fused, default=0))
+            self._chunked_buckets = frozenset(chunked)
+            buckets = tuple(sorted(set(fused) | set(chunked)))
+        else:
+            self._chunked_buckets = frozenset()
         if max(buckets) > self.ecfg.max_seq_len:
             # a bucket wider than the slot rows could admit prompts whose
             # fused K/V block cannot be scattered into the cache
@@ -166,10 +230,13 @@ class Engine:
         self.store: SlotStore = make_store(
             cfg, self.ecfg.max_slots, self.ecfg.max_seq_len,
             backend=self.ecfg.cache_backend,
-            block_size=self.ecfg.block_size, n_blocks=self.ecfg.n_blocks)
-        self._prefill, self._decode = _jitted_steps(
+            block_size=self.ecfg.block_size, n_blocks=self.ecfg.n_blocks,
+            native=self.ecfg.paged_native)
+        self._prefill, self._prefill_chunked, self._decode = _jitted_steps(
             cfg, self.store.kind,
-            self.ecfg.max_seq_len if self.store.kind == "recurrent" else 0)
+            self.ecfg.max_seq_len if self.store.kind == "recurrent" else 0,
+            native=self.ecfg.paged_native, kernel=self.ecfg.paged_kernel,
+            chunk=chunk or 0)
         self._owns_opq = opq is None and self.ecfg.use_opq
         self.opq = (OPQ() if self._owns_opq else opq) if self.ecfg.use_opq else None
         self._params_buf = Buffer(params, name="params")
@@ -253,25 +320,36 @@ class Engine:
             self.metrics.admissions_deferred += 1
         return ok
 
-    def _admit(self) -> None:
+    def _admit(self) -> int:
         """Fused admission: ONE dispatched prefill forward per bucket batch
         (first token + cache payload out — per-layer K/V for dense families,
         post-prompt state rows for recurrent ones) and ONE batched donated
         scatter into the leased slot rows — zero B=1 replay decodes, seeding
         cost O(1) instructions in prompt length. All buckets of the round are
-        dispatched before the first wait, so they overlap on the OPQ lanes."""
+        dispatched before the first wait, so they overlap on the OPQ lanes.
+        Buckets wider than ``prefill_chunk`` dispatch the chunked prefill
+        step instead (long prompts — linear-in-S peak score memory, same
+        contract and bit-identical output). Returns the number of requests
+        admitted this round (step() uses 0 to detect a zero-progress
+        deferral with an idle engine)."""
         pending = []
+        admitted = 0
         for bucket, pairs in self.scheduler.plan_admissions(self._try_lease):
+            admitted += len(pairs)
             toks = np.zeros((len(pairs), bucket), np.int32)
             last = np.zeros((len(pairs),), np.int32)
             for i, (_, req) in enumerate(pairs):
                 toks[i, :len(req.prompt)] = req.prompt
                 last[i] = len(req.prompt) - 1
                 req.metrics.admitted_s = now()
+            chunked = bucket in self._chunked_buckets
+            step_fn = self._prefill_chunked if chunked else self._prefill
+            flag = (f"prefill_chunked/{bucket}" if chunked
+                    else f"prefill/{bucket}")
             fut = self._dispatch_async(
-                lambda p, t, li: self._prefill(p, t, li),
+                lambda p, t, li, fn=step_fn: fn(p, t, li),
                 self._params_buf, Buffer(toks, name=f"prefill{bucket}"),
-                Buffer(last), flags=f"prefill/{bucket}")
+                Buffer(last), flags=flag)
             pending.append((pairs, last, fut))
         for pairs, last, fut in pending:
             t0 = now()
@@ -291,6 +369,7 @@ class Engine:
                 self.metrics.observe_tokens(1)
                 if self._finished(req):       # done at the prefill token:
                     self._retire(slot)        # reset scrubs the seeded row
+        return admitted
 
     def _seed_admitted(self, pairs, kv) -> None:
         """Seed every leased row of one admission bucket from the fused
@@ -340,7 +419,23 @@ class Engine:
     def step(self) -> None:
         """One engine iteration: join waiting requests into free slots, then
         one batched decode step for whatever is in flight."""
-        self._admit()
+        admitted = self._admit()
+        if (admitted == 0 and not self.scheduler.active
+                and self.scheduler.waiting):
+            # zero-progress state: the queue head was deferred by the store
+            # lease while NOTHING is in flight — no retire can ever free
+            # capacity, so every further step would be an identical no-op.
+            # (fits() should have bounced such a request at submit; this
+            # guards the submit-time-reject vs lease-time-defer line against
+            # drift, which previously burned max_steps idle iterations.)
+            head = self.scheduler.waiting[0]
+            raise RuntimeError(
+                f"admission livelock: request {head.id} "
+                f"(prompt={len(head.prompt)} tok, "
+                f"max_new_tokens={head.max_new_tokens}) was deferred by the "
+                f"{self.store.kind} store's lease with zero active slots — "
+                f"no retire can free capacity for it; "
+                f"store: {self.store.memory_stats()}")
         # occupancy sampled before the decode's retires, so slots busy this
         # step count even when their request finishes in it
         n_active = self.scheduler.n_active

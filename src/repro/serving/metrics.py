@@ -131,11 +131,14 @@ def format_memory_stats(ms: Dict) -> str:
     the end-of-run report line (launch/serve.py) and log decoration."""
     kib = ms.get("bytes", 0) / 1024.0
     if ms.get("backend") == "paged":
-        view_kib = ms.get("decode_view_bytes", 0) / 1024.0
+        if ms.get("native"):
+            tail = "block-native decode (no transient view)"
+        else:
+            view_kib = ms.get("decode_view_bytes", 0) / 1024.0
+            tail = f"+{view_kib:.1f} KiB transient decode view"
         return (f"paged: {kib:.1f} KiB pool | block={ms['block_size']} tok | "
                 f"{ms['blocks_used']}/{ms['blocks_total']} blocks used "
-                f"({ms['blocks_free']} free) | "
-                f"+{view_kib:.1f} KiB transient decode view")
+                f"({ms['blocks_free']} free) | {tail}")
     per_slot = ms.get("bytes_per_slot", 0) / 1024.0
     return (f"{ms.get('backend', '?')}: {kib:.1f} KiB "
             f"({per_slot:.1f} KiB/slot x {ms.get('slots', 0)} slots)")

@@ -40,12 +40,21 @@ Backends
                       blocks, so the pool can be far smaller than
                       ``n_slots * max_seq_len`` rows — more concurrent short
                       requests per byte, with admission backpressure when the
-                      pool runs dry. Decode gathers each slot's blocks into a
-                      contiguous view (``attention.gather_block_kv``, a
-                      jnp.take over the block axis), runs the SAME compiled
-                      decode step as the contiguous backend, and scatters the
-                      one written entry per row back into block layout — which
-                      is what makes paged decode bit-identical to contiguous.
+                      pool runs dry. Two decode bridges: the GATHER bridge
+                      (default) gathers each slot's blocks into a contiguous
+                      view (``attention.gather_block_kv``, a jnp.take over
+                      the block axis), runs the SAME compiled decode step as
+                      the contiguous backend, and scatters the one written
+                      entry per row back into block layout — which is what
+                      makes paged decode bit-identical to contiguous; NATIVE
+                      mode (``native=True``) skips the view entirely and
+                      hands the pool itself to the block-native decode step
+                      (models/serve.py ``decode_paged``), which writes and
+                      attends through the tables in place — same tokens, and
+                      the peak decode working set is the pool alone
+                      (``decode_view_bytes: 0``). Block-table uploads are
+                      batched: leases mutate a host mirror, synced to device
+                      once per admission round (``table_uploads``).
   RecurrentStateStore per-slot recurrent state rows (mamba conv/ssm, xlstm
                       mLSTM/sLSTM hidden states, plus the hybrid family's attn
                       K/V) with pristine reset — makes ssm/hybrid families
@@ -399,7 +408,8 @@ class PagedKVStore(SlotStore):
     kind = "paged"
 
     def __init__(self, cfg: ArchConfig, n_slots: int, max_seq_len: int,
-                 *, block_size: int = 16, n_blocks: Optional[int] = None):
+                 *, block_size: int = 16, n_blocks: Optional[int] = None,
+                 native: bool = False):
         if cfg.family not in DENSE_FAMILIES:
             raise ValueError(
                 f"PagedKVStore supports dense-family caches, not {cfg.family}")
@@ -415,11 +425,21 @@ class PagedKVStore(SlotStore):
         self.n_blocks = full if n_blocks is None else n_blocks
         if not 2 <= self.n_blocks:
             raise ValueError(f"n_blocks must be >= 2, got {self.n_blocks}")
+        # native: decode_cache/swap hand the pool straight to/from the
+        # block-native decode step (models/serve.py decode_paged) — no
+        # gather-bridge view, decode_view_bytes == 0
+        self.native = native
         super().__init__(cfg, n_slots, max_seq_len)
         # block 0 reserved as the null block; free blocks hand out low ids first
         self._free: List[int] = list(range(1, self.n_blocks))[::-1]
         self._leased: Dict[int, List[int]] = {}
         self._tables = np.zeros((n_slots, self.blocks_per_slot), np.int32)
+        # table uploads are batched: leases mutate only the host mirror and
+        # mark it dirty; _sync_tables uploads ONCE when the device next needs
+        # the tables (decode/gather) — one upload per admission round instead
+        # of one per lease. table_uploads is the regression counter.
+        self._tables_dirty = False
+        self.table_uploads = 0
 
     def alloc(self) -> Dict:
         return SV.init_paged_cache(self.cfg, self.n_slots, self.n_blocks,
@@ -445,8 +465,17 @@ class PagedKVStore(SlotStore):
         self._leased[slot] = blocks
         self._tables[slot, :] = 0
         self._tables[slot, :need] = blocks
-        self.cache = dict(self.cache, tables=jnp.asarray(self._tables))
+        # host mirror only — the device copy syncs lazily (one upload per
+        # admission round, not one per lease; admission writes themselves
+        # address blocks through the host mirror)
+        self._tables_dirty = True
         return True
+
+    def _sync_tables(self) -> None:
+        if self._tables_dirty:
+            self.cache = dict(self.cache, tables=jnp.asarray(self._tables))
+            self.table_uploads += 1
+            self._tables_dirty = False
 
     # ------------------------------------------------------------- lifecycle
 
@@ -492,15 +521,25 @@ class PagedKVStore(SlotStore):
     # ---------------------------------------------------------- decode bridge
 
     def decode_cache(self) -> Dict:
-        """Gather every slot's blocks into the contiguous view the shared
-        decode step consumes — layout translation lives HERE, the decode math
-        (and its compiled program) is byte-for-byte the contiguous backend's."""
+        """Native mode: the pool pytree itself (blocks + tables + index) —
+        the block-native decode step attends through the tables in place.
+        Bridge mode: gather every slot's blocks into the contiguous view the
+        shared decode step consumes — layout translation lives HERE, the
+        decode math (and its compiled program) is byte-for-byte the
+        contiguous backend's."""
+        self._sync_tables()
+        if self.native:
+            return self.cache
         return _paged_gather(self.cache)
 
-    def swap(self, new_view: Dict) -> None:
-        self.cache = _paged_writeback(self.cache, new_view)
+    def swap(self, new_cache: Dict) -> None:
+        if self.native:
+            self.cache = new_cache                # pool in, pool out
+        else:
+            self.cache = _paged_writeback(self.cache, new_cache)
 
     def gather_view(self) -> Dict:
+        self._sync_tables()
         return _paged_gather(self.cache)
 
     # ------------------------------------------------------------------ info
@@ -508,12 +547,18 @@ class PagedKVStore(SlotStore):
     def memory_stats(self) -> Dict:
         used = sum(len(b) for b in self._leased.values())
         total = self.n_blocks - 1                           # null block excluded
-        # the persistent allocation is the pool ("bytes"); each decode step
-        # additionally materializes a TRANSIENT contiguous view of
-        # n_slots x max_seq_len rows (the gather bridge that buys exact
-        # bit-identity with the contiguous decode program) — reported
-        # separately so operators size devices for pool + view, not pool alone
-        view_bytes = sum(
+        # the persistent allocation is the pool ("bytes"). In bridge mode
+        # each decode step additionally materializes a TRANSIENT contiguous
+        # view of n_slots x max_seq_len rows (the gather bridge that buys
+        # exact bit-identity with the contiguous decode program) — reported
+        # separately so operators size devices for pool + view, not pool
+        # alone. In native mode no STORE-level view exists — the decode step
+        # attends over the pool in place (models/serve.py decode_paged) and
+        # decode_view_bytes is 0; the jnp native path still gathers one
+        # layer's rows transiently inside the layer scan (view/n_layers),
+        # and the Pallas kernel path works from block-sized VMEM tiles alone
+        # (per-step peaks recorded in reports/BENCH_paged_native.json).
+        view_bytes = 0 if self.native else sum(
             leaf.dtype.itemsize
             * leaf.shape[0] * self.n_slots * self.max_seq_len
             * int(np.prod(leaf.shape[3:], dtype=np.int64))
@@ -521,12 +566,14 @@ class PagedKVStore(SlotStore):
             if name not in ("index", "tables"))
         return {
             "backend": self.kind,
+            "native": self.native,
             "bytes": self.nbytes(),
             "decode_view_bytes": view_bytes,
             "block_size": self.block_size,
             "blocks_total": total,
             "blocks_free": len(self._free),
             "blocks_used": used,
+            "table_uploads": self.table_uploads,
             "slots": self.n_slots,
         }
 
@@ -560,17 +607,25 @@ class RecurrentStateStore(SlotStore):
 
 def make_store(cfg: ArchConfig, n_slots: int, max_seq_len: int,
                backend: str = "auto", *, block_size: int = 16,
-               n_blocks: Optional[int] = None) -> SlotStore:
+               n_blocks: Optional[int] = None,
+               native: bool = False) -> SlotStore:
     """Factory: build the SlotStore backend for a config. ``backend="auto"``
-    picks contiguous for dense-family archs and recurrent for ssm/hybrid."""
+    picks contiguous for dense-family archs and recurrent for ssm/hybrid.
+    ``native`` (paged only) selects the block-native decode bridge: the pool
+    is handed to the decode step in block layout, no gather view."""
     if backend == "auto":
         backend = ("recurrent" if cfg.family in RECURRENT_FAMILIES
                    else "contiguous")
+    if native and backend != "paged":
+        raise ValueError(
+            f"native (block-native decode) requires the paged backend, "
+            f"got {backend!r}")
     if backend == "contiguous":
         return ContiguousKVStore(cfg, n_slots, max_seq_len)
     if backend == "paged":
         return PagedKVStore(cfg, n_slots, max_seq_len,
-                            block_size=block_size, n_blocks=n_blocks)
+                            block_size=block_size, n_blocks=n_blocks,
+                            native=native)
     if backend == "recurrent":
         return RecurrentStateStore(cfg, n_slots, max_seq_len)
     raise ValueError(

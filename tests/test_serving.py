@@ -622,6 +622,314 @@ def test_hybrid_serves_end_to_end():
     assert staggered == sequential
 
 
+# ===========================================================================
+# block-native paged decode + chunked long-prompt admission
+# ===========================================================================
+
+@pytest.mark.parametrize("family,kv_dtype", [
+    ("dense", "bfloat16"), ("dense", "int8"), ("moe", "bfloat16"),
+])
+def test_paged_native_decode_bit_identical_to_bridge(
+        params, moe_params, family, kv_dtype):
+    """The block-native contract: decode attending over the pool through the
+    block tables (no gather view) produces bit-identical tokens to the
+    gather-bridge path — for float, int8-per-token-scale, and MoE cache
+    formats — the bridge stays available as the reference oracle, and native
+    mode's peak decode working set is the pool alone
+    (memory_stats decode_view_bytes == 0)."""
+    base, p = (CFG, params) if family == "dense" else (MOE_CFG, moe_params)
+    cfg = base.replace(kv_cache_dtype=kv_dtype)
+    prompts = _prompts([5, 9, 4, 7])
+    gens = [6, 5, 8, 3]
+    toks_b = _staggered(p, prompts, gens, cfg=cfg, cache_backend="paged",
+                        block_size=8)
+    toks_n = _staggered(p, prompts, gens, cfg=cfg, cache_backend="paged",
+                        block_size=8, paged_native=True)
+    assert toks_n == toks_b                       # bit-identical, not allclose
+
+    # working-set accounting: bridge reports the transient view, native 0
+    eng_b = Engine(cfg, p, EngineConfig(max_slots=2, max_seq_len=32,
+                                        cache_backend="paged", block_size=8))
+    eng_n = Engine(cfg, p, EngineConfig(max_slots=2, max_seq_len=32,
+                                        cache_backend="paged", block_size=8,
+                                        paged_native=True))
+    for e in (eng_b, eng_n):
+        e.submit(prompts[0], gens[0])
+        e.step()
+    ms_b, ms_n = eng_b.stats()["cache"], eng_n.stats()["cache"]
+    assert ms_b["decode_view_bytes"] > 0
+    assert ms_n["decode_view_bytes"] == 0
+    assert ms_n["bytes"] == ms_b["bytes"]         # same resident pool
+    # seeded + decoded cache contents agree on every valid position
+    view_b, view_n = eng_b.store.gather_view(), eng_n.store.gather_view()
+    for slot, req in eng_b.scheduler.active.items():
+        n = eng_b.store.slot_index(slot)
+        for name in ("k", "v", "k_scale", "v_scale"):
+            if name not in view_b:
+                continue
+            np.testing.assert_array_equal(
+                np.asarray(view_b[name][:, slot, :n]),
+                np.asarray(view_n[name][:, slot, :n]),
+                err_msg=f"native cache leaf {name!r} diverged ({kv_dtype})")
+    eng_b.close()
+    eng_n.close()
+
+
+def test_paged_native_requires_paged_backend(params):
+    with pytest.raises(ValueError, match="paged"):
+        Engine(CFG, params, EngineConfig(max_slots=2, max_seq_len=32,
+                                         paged_native=True))
+    with pytest.raises(ValueError, match="paged_native"):
+        Engine(CFG, params, EngineConfig(max_slots=2, max_seq_len=32,
+                                         cache_backend="paged",
+                                         paged_kernel=True))
+    with pytest.raises(ValueError, match="paged"):
+        make_store(CFG, 2, 32, backend="contiguous", native=True)
+
+
+@pytest.mark.parametrize("family,kv_dtype", [
+    ("dense", "bfloat16"), ("dense", "int8"), ("moe", "bfloat16"),
+])
+def test_chunked_prefill_bit_identical_to_fused(params, moe_params, family,
+                                                kv_dtype):
+    """The chunked-admission guarantee: prompts admitted through the chunked
+    prefill scan (fixed-width chunks attending over everything already
+    written) produce the bit-identical first token, seeded cache, and decode
+    continuation of the single-shot fused prefill — for float and int8-KV
+    cache formats, and for MoE (row-isolated dropless routing makes a
+    token's expert assignment independent of which chunk carried it)."""
+    base, p = (CFG, params) if family == "dense" else (MOE_CFG, moe_params)
+    cfg = base.replace(kv_cache_dtype=kv_dtype)
+    prompts = _prompts([5, 9, 4, 20])             # buckets 16, 16, 16, 32
+    gens = [6, 5, 8, 3]
+    ecfg_f = EngineConfig(max_slots=2, max_seq_len=32)
+    ecfg_c = EngineConfig(max_slots=2, max_seq_len=32, prefill_chunk=8)
+    eng_f = Engine(cfg, p, ecfg_f)
+    eng_c = Engine(cfg, p, ecfg_c)
+    reqs_f = [eng_f.submit(pr, g) for pr, g in zip(prompts, gens)]
+    reqs_c = [eng_c.submit(pr, g) for pr, g in zip(prompts, gens)]
+    eng_f._admit()
+    eng_c._admit()
+    # freshly admitted rows bit-equal on every leaf (pad tails included)
+    for name in eng_f.kv.cache:
+        np.testing.assert_array_equal(
+            np.asarray(eng_f.kv.cache[name]), np.asarray(eng_c.kv.cache[name]),
+            err_msg=f"chunk-seeded cache leaf {name!r} diverged ({kv_dtype})")
+    eng_f.run_until_complete()
+    eng_c.run_until_complete()
+    assert ([list(r.tokens) for r in reqs_c]
+            == [list(r.tokens) for r in reqs_f])  # bit-identical, not allclose
+    # the audit trail shows chunked instructions carried the wide buckets
+    flags = eng_c.stats()["opq"]["flags"]
+    assert any(f.startswith("prefill_chunked/") for f in flags)
+    eng_f.close()
+    eng_c.close()
+
+
+def test_long_prompt_admits_via_chunking(params):
+    """The admission cap lifts: a prompt wider than every fused bucket is
+    rejected by the single-shot engine but admits through chunk-multiple
+    buckets when prefill_chunk is set — and decodes exactly the tokens of
+    serving it alone through an unconstrained engine."""
+    long_prompt = _prompts([20])[0]
+    eng_nochunk = Engine(CFG, params, EngineConfig(max_slots=2, max_seq_len=32,
+                                                   buckets=(8,)))
+    assert eng_nochunk.submit(long_prompt, 5) is None    # 20 > max bucket 8
+    eng_nochunk.close()
+
+    eng = Engine(CFG, params, EngineConfig(max_slots=2, max_seq_len=32,
+                                           buckets=(8,), prefill_chunk=8))
+    r = eng.submit(long_prompt, 5)
+    assert r is not None                                  # > max bucket: admits
+    eng.run_until_complete()
+    assert r.tokens == _pure_sequential_decode(CFG, params, long_prompt, 5, 32)
+    eng.close()
+
+    # chunked + paged-native compose: the long prompt seeds block layout
+    eng_p = Engine(CFG, params, EngineConfig(max_slots=2, max_seq_len=32,
+                                             buckets=(8,), prefill_chunk=8,
+                                             cache_backend="paged",
+                                             block_size=8, paged_native=True))
+    rp = eng_p.submit(long_prompt, 5)
+    eng_p.run_until_complete()
+    assert rp.tokens == r.tokens
+    assert eng_p.stats()["cache"]["decode_view_bytes"] == 0
+    eng_p.close()
+
+
+def test_chunked_prefill_rejects_bad_config(params):
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        Engine(CFG, params, EngineConfig(max_slots=2, max_seq_len=32,
+                                         prefill_chunk=64))   # > max_seq_len
+    with pytest.raises(ValueError, match="recurrent"):
+        xp = init_model(XLSTM_CFG, jax.random.PRNGKey(2))
+        Engine(XLSTM_CFG, xp, EngineConfig(max_slots=2, max_seq_len=32,
+                                           prefill_chunk=8))
+    with pytest.raises(ValueError, match="mrope"):
+        Engine(CFG.replace(rope_kind="mrope"), params,
+               EngineConfig(max_slots=2, max_seq_len=32, prefill_chunk=8))
+
+
+def test_paged_lease_batches_table_uploads(params):
+    """Regression (store.py lease): leases mutate only the host table mirror;
+    the device copy uploads ONCE per admission round when decode next needs
+    it — not once per lease."""
+    store = make_store(CFG, 4, 32, backend="paged", block_size=8)
+    assert store.table_uploads == 0
+    for slot in range(3):
+        assert store.lease(slot, 8, 8)
+    assert store.table_uploads == 0               # three leases, zero uploads
+    store.decode_cache()
+    assert store.table_uploads == 1               # one batched upload
+    store.decode_cache()
+    assert store.table_uploads == 1               # clean: no re-upload
+    assert store.lease(3, 8, 8)
+    store.gather_view()
+    assert store.table_uploads == 2
+    # the device copy the sync produced matches the host mirror
+    np.testing.assert_array_equal(np.asarray(store.cache["tables"]),
+                                  store._tables)
+
+    # engine-level: a 3-request admission round costs one upload, and a
+    # full serving run stays at one upload per admission round
+    eng = Engine(CFG, params, EngineConfig(max_slots=4, max_seq_len=32,
+                                           cache_backend="paged",
+                                           block_size=8))
+    for pr in _prompts([5, 9, 4]):
+        eng.submit(pr, 4)
+    eng.step()
+    assert eng.store.table_uploads == 1
+    eng.run_until_complete()
+    assert eng.store.table_uploads == 1           # no further admission rounds
+    eng.close()
+
+
+def test_engine_zero_progress_raises_immediately(params):
+    """Satellite regression (engine.py run_until_complete): a queue head
+    deferred by the store lease while zero slots are active can never make
+    progress — the engine must raise a diagnostic immediately instead of
+    spinning max_steps no-op iterations."""
+    eng = Engine(CFG, params, EngineConfig(max_slots=2, max_seq_len=32,
+                                           cache_backend="paged",
+                                           block_size=8))
+    # simulate fits/lease drift: fits admits at submit, lease then refuses
+    eng.store.lease = lambda *a, **kw: False
+    req = eng.submit(_prompts([8])[0], 4)
+    assert req is not None
+    with pytest.raises(RuntimeError, match="livelock") as ei:
+        eng.run_until_complete()
+    # the diagnostic names the stuck request and the pool state
+    assert f"request {req.id}" in str(ei.value)
+    assert "blocks_free" in str(ei.value)
+    eng.close()
+
+
+def test_paged_fits_boundary_pool_smaller_than_slot_table(params):
+    """fits() clamps against min(n_blocks - 1, blocks_per_slot): with a pool
+    SMALLER than one slot's table, a request needing exactly the whole pool
+    (n_blocks - 1 blocks) must admit, one block more must bounce at submit —
+    the line that keeps submit-reject and lease-defer from drifting into the
+    livelock fits() exists to prevent."""
+    # blocks_per_slot = 32/8 = 4, pool = 3 usable blocks < 4
+    store = make_store(CFG, 2, 32, backend="paged", block_size=8, n_blocks=4)
+    assert store.fits(16, 8)                      # 3 blocks == n_blocks - 1
+    assert store.lease(0, 16, 8)                  # and lease agrees
+    store.reset(0)
+    assert not store.fits(17, 8)                  # 4 blocks > pool: reject
+    assert not store.fits(32, 0)                  # whole table, pool too small
+
+    eng = Engine(CFG, params, EngineConfig(max_slots=2, max_seq_len=32,
+                                           cache_backend="paged",
+                                           block_size=8, n_blocks=4))
+    assert eng.submit(_prompts([17])[0], 8) is None       # can never lease
+    ok = eng.submit(_prompts([16])[0], 8)                 # exactly the pool
+    assert ok is not None
+    eng.run_until_complete()                      # completes, no livelock
+    assert ok.metrics.n_generated == 8
+    eng.close()
+
+
+def test_paged_fits_boundary_table_caps_below_pool():
+    """The other side of the clamp: a pool larger than one slot's table must
+    still reject requests wider than the table (they could never be mapped),
+    even with plenty of free blocks."""
+    # blocks_per_slot = 2, pool = 8 usable blocks
+    store = make_store(CFG, 2, 16, backend="paged", block_size=8, n_blocks=9)
+    assert store.fits(8, 8)                       # 2 blocks == table width
+    assert not store.fits(16, 8)                  # 3 blocks > table width
+    assert store.lease(0, 8, 8)
+    assert not store.lease(1, 16, 8)              # lease agrees with fits
+
+
+try:
+    from hypothesis import given, settings as hyp_settings, strategies as hyp_st
+except ImportError:                                    # clean container
+    from _hypothesis_fallback import (
+        given, settings as hyp_settings, st as hyp_st)
+
+
+@hyp_settings(max_examples=5, deadline=None)   # each example builds 14 stores
+@given(hyp_st.integers(min_value=0, max_value=2**31 - 1))
+def test_pristine_equals_init_cache_every_family_leaf(seed):
+    """Property: ``pristine_value``/``_PRISTINE`` (store.py) is bit-equal to
+    ``models/serve.py init_cache``'s empty fill for EVERY leaf of EVERY
+    servable family's store — and a slot retired after arbitrary payload
+    writes is restored to exactly that pattern, including the paged backend's
+    block scrub. Guards the two definitions of "empty" against drift."""
+    from repro.serving.store import pristine_value
+
+    rng = np.random.default_rng(seed)
+    cases = [
+        (CFG, "contiguous"), (CFG.replace(kv_cache_dtype="int8"), "contiguous"),
+        (MOE_CFG, "contiguous"), (CFG, "paged"),
+        (CFG.replace(kv_cache_dtype="int8"), "paged"),
+        (XLSTM_CFG, "recurrent"), (HYBRID_CFG, "recurrent"),
+    ]
+    for cfg, backend in cases:
+        store = make_store(cfg, 2, 16, backend=backend, block_size=8)
+        fresh = jax.tree_util.tree_flatten_with_path(store.cache)[0]
+        # 1) a fresh alloc is the pristine pattern everywhere
+        for path, leaf in fresh:
+            name = _leaf_name_str(path)
+            if name == "tables":
+                continue
+            np.testing.assert_array_equal(
+                np.asarray(leaf),
+                np.full(leaf.shape, pristine_value(name), leaf.dtype),
+                err_msg=f"{cfg.family}/{backend} init leaf {name!r} is not "
+                        f"the pristine_value fill")
+        # 2) write a random payload into slot 0, retire, compare to fresh
+        store.lease(0, 8, 8)
+
+        def junk_row(path, l):
+            name = _leaf_name_str(path)
+            if name in ("index", "tables"):
+                return jnp.zeros((1,), jnp.int32)      # ignored by write_slot
+            return jnp.asarray(rng.integers(1, 5, (l.shape[0], 1) + l.shape[2:])
+                               .astype(l.dtype))
+
+        src = jax.tree_util.tree_map_with_path(junk_row, store.cache)
+        store.write_slot(0, src, n_valid=8)
+        store.reset(0)
+        ref = make_store(cfg, 2, 16, backend=backend, block_size=8)
+        got = jax.tree_util.tree_flatten_with_path(store.cache)[0]
+        want = jax.tree_util.tree_flatten_with_path(ref.cache)[0]
+        for (path, g), (_, w) in zip(got, want):
+            name = _leaf_name_str(path)
+            np.testing.assert_array_equal(
+                np.asarray(g), np.asarray(w),
+                err_msg=f"{cfg.family}/{backend} leaf {name!r} not pristine "
+                        f"after retire (seed {seed})")
+
+
+def _leaf_name_str(path) -> str:
+    for p in reversed(path):
+        key = getattr(p, "key", getattr(p, "name", ""))
+        if key:
+            return str(key)
+    return ""
+
+
 def test_memory_stats_surface(params):
     """memory_stats flows from the store through engine.stats() to the
     human-readable report line."""
