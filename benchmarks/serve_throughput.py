@@ -19,6 +19,14 @@ memory cell instead: the same short-prompt mix served by both backends
 contiguous footprint — the JSON records cache bytes per admitted concurrent
 request for each backend and the admission-backpressure counters, the
 regression record for reports/BENCH_paged.json and the CI artifact.
+
+``--router-report PATH`` runs the multi-host cell instead: the same request
+mix served through the Router at 1/2/4 hosts (sessions cycling so the
+second lap of arrivals pins by cache affinity), with a mid-run drain of
+host 0 on every multi-host cell — tokens asserted bit-identical to the
+single-engine run across the drain/handoff — recording wall-clock fleet
+throughput, affinity hits, spills, and handoff counts per host count: the
+regression record for reports/BENCH_router.json and the CI artifact.
 """
 
 from __future__ import annotations
@@ -40,6 +48,7 @@ from repro.launch.mesh import make_smoke_mesh
 from repro.launch.serve import _quant_predicate
 from repro.models import init_model
 from repro.serving.engine import Engine, EngineConfig
+from repro.serving.router import Router, RouterConfig
 
 from common import emit
 
@@ -268,6 +277,111 @@ def paged_native_report(cfg, params, *, slots: int, prompt_len: int, gen: int,
     return report
 
 
+def router_report(cfg, params, *, hosts_swept=(1, 2, 4), slots: int,
+                  prompt_len: int, gen: int, requests: int, drain_at: int,
+                  out_path: str) -> dict:
+    """The multi-host claim, measured: one request mix served through the
+    Router at increasing host counts, sessions cycling over the host count
+    so the second lap of arrivals pins to the host already holding that
+    session's blocks. Every multi-host cell drains host 0 mid-run — its
+    queued work re-places and its long in-flight generations hand off — and
+    each cell's stitched token streams are asserted bit-identical to the
+    1-host run, so scale-out and elastic restarts cost zero output
+    fidelity. Records wall-clock fleet tok/s and the placement ledger
+    (affinity hits / spills / handoffs) per host count."""
+    import time
+
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, (prompt_len,), dtype=np.int32)
+               for _ in range(requests)]
+
+    # warmup: compile the prefill/decode executables (shared across every
+    # cell's engines via the engine step cache) so cells measure serving,
+    # not XLA
+    warm = Router(cfg, params, EngineConfig(
+        max_slots=slots, max_queue=requests,
+        max_seq_len=prompt_len + gen), RouterConfig(n_hosts=1))
+    for p in prompts[:2]:
+        warm.submit(p, gen, strict=True)
+        warm.step()
+    warm.run_until_complete()
+    warm.close()
+
+    cells = []
+    baseline_tokens = None
+    for n_hosts in hosts_swept:
+        router = Router(cfg, params, EngineConfig(
+            max_slots=slots, max_queue=requests,
+            max_seq_len=prompt_len + gen),
+            RouterConfig(n_hosts=n_hosts, handoff_threshold=0))
+        fleet_steps = 0
+        t0 = time.perf_counter()
+        reqs = []
+        for i, p in enumerate(prompts):
+            reqs.append(router.submit(p, gen, session=str(i % n_hosts),
+                                      strict=True))
+            router.step()
+            fleet_steps += 1
+            if n_hosts > 1 and fleet_steps == drain_at:
+                router.drain(0)
+        while router.has_work():
+            router.step()
+            fleet_steps += 1
+            if n_hosts > 1 and fleet_steps == drain_at:
+                router.drain(0)
+        wall_s = time.perf_counter() - t0
+        toks = [list(r.tokens) for r in reqs]
+        if baseline_tokens is None:
+            baseline_tokens = toks
+        else:
+            assert toks == baseline_tokens, (
+                f"{n_hosts}-host tokens diverged from single-host "
+                f"(drain at step {drain_at})")
+        s = router.stats()
+        r = s["router"]
+        cells.append({
+            "hosts": n_hosts,
+            "drained_host": 0 if n_hosts > 1 else None,
+            "drain_at_step": drain_at if n_hosts > 1 else None,
+            "wall_s": wall_s,
+            "fleet_tok_s": requests * gen / wall_s,
+            "placed": r["placed"],
+            "affinity_hits": r["affinity_hits"],
+            "spills": r["spills"],
+            "handoffs": r["handoffs"],
+            "requeued": r["requeued"],
+            "completed_per_host": [h["completed"] for h in s["per_host"]],
+            "preempted_per_host": [h["preempted"] for h in s["per_host"]],
+        })
+        router.close()
+
+    report = {
+        "benchmark": "router_multi_host",
+        "arch": cfg.name,
+        "kv_cache_dtype": cfg.kv_cache_dtype,
+        "slots_per_host": slots,
+        "prompt_len": prompt_len,
+        "gen": gen,
+        "requests": requests,
+        "bit_identical_tokens": True,
+        "cells": cells,
+    }
+    base = cells[0]["fleet_tok_s"]
+    for c in cells:
+        emit(f"router_h{c['hosts']}", 1e6 / max(c["fleet_tok_s"], 1e-9),
+             f"fleet={c['fleet_tok_s']:.1f}tok/s "
+             f"speedup={c['fleet_tok_s'] / base:.2f}x "
+             f"affinity={c['affinity_hits']} spills={c['spills']} "
+             f"handoffs={c['handoffs']}")
+    Path(out_path).parent.mkdir(parents=True, exist_ok=True)
+    Path(out_path).write_text(json.dumps(report, indent=2) + "\n")
+    print(f"# router: {len(cells)} host-count cells, tokens bit-identical "
+          f"across scale-out AND a mid-run drain/handoff on every "
+          f"multi-host cell")
+    print(f"# wrote {out_path}")
+    return report
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tinyllama-1.1b")
@@ -291,6 +405,13 @@ def main(argv=None) -> int:
     ap.add_argument("--long-prompt", type=int, default=48,
                     help="long-prompt length for --paged-native-report "
                          "(must exceed --prefill-chunk)")
+    ap.add_argument("--router-report", default="",
+                    help="write the multi-host router JSON (scale-out sweep "
+                         "+ mid-run drain/handoff, tokens asserted "
+                         "bit-identical) here and skip the throughput sweep")
+    ap.add_argument("--drain-at", type=int, default=3,
+                    help="fleet step at which --router-report drains host 0 "
+                         "in every multi-host cell")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch).smoke().replace(quantize=args.quantize)
@@ -299,6 +420,13 @@ def main(argv=None) -> int:
         params = init_model(cfg, jax.random.PRNGKey(0))
         if args.quantize == "serve":
             params = tz.quantize_params(params, predicate=_quant_predicate)
+
+        if args.router_report:
+            router_report(
+                cfg, params, slots=2, prompt_len=args.prompt_len,
+                gen=args.gen, requests=args.requests,
+                drain_at=args.drain_at, out_path=args.router_report)
+            return 0
 
         if args.paged_report:
             paged_memory_report(

@@ -30,6 +30,16 @@ tables — no transient gather view, ``decode_view_bytes == 0`` — and
 kernel. ``--prefill-chunk W`` admits prompts wider than the fused buckets
 through the chunked prefill scan (peak score memory W*S, not S^2). The
 end-of-run report prints ``memory_stats()`` for the selected backend.
+
+``--hosts N`` serves the same traffic through the multi-host Router
+(serving/router.py): N engines, cache-affinity placement (requests cycle
+through N sessions here, so repeat sessions pin to the host holding their
+blocks), load-aware spill, and — with ``--drain-at K`` — a drain of host 0
+after K fleet steps, handing its in-flight generations off to the other
+hosts mid-run (tokens provably unchanged; see docs/serving.md).
+
+Every flag is documented operator-style in docs/serving.md, which
+tests/test_docs.py keeps in lockstep with this parser.
 """
 
 from __future__ import annotations
@@ -46,7 +56,8 @@ from repro.distributed import sharding as shd
 from repro.launch.mesh import make_smoke_mesh
 from repro.models import init_model
 from repro.serving.engine import Engine, EngineConfig
-from repro.serving.metrics import format_memory_stats
+from repro.serving.metrics import format_memory_stats, format_router_stats
+from repro.serving.router import Router, RouterConfig
 
 
 def _quant_predicate(path, leaf):
@@ -64,7 +75,9 @@ def _quant_predicate(path, leaf):
     return (name == "lm_head" or name.startswith("w")) and name not in skip
 
 
-def main(argv=None) -> int:
+def build_parser() -> argparse.ArgumentParser:
+    """The serve CLI surface — kept at module level so tests/test_docs.py can
+    assert every flag here is documented in docs/serving.md and vice versa."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tinyllama-1.1b")
     ap.add_argument("--smoke", action="store_true")
@@ -99,7 +112,72 @@ def main(argv=None) -> int:
                          "wider than this admit via the chunked scan "
                          "(peak score memory chunk*S instead of S^2; "
                          "0 = single-shot fused prefill only)")
+    ap.add_argument("--hosts", type=int, default=1,
+                    help="simulated hosts: 1 = a single engine; >1 serves "
+                         "through the multi-host Router (one engine per "
+                         "host, cache-affinity placement + load-aware "
+                         "spill; serving/router.py)")
+    ap.add_argument("--drain-at", type=int, default=0,
+                    help="with --hosts > 1: drain host 0 after this many "
+                         "fleet steps — queued requests re-place, long "
+                         "in-flight generations hand off to other hosts "
+                         "(0 = never drain)")
     ap.add_argument("--model-parallel", type=int, default=1)
+    return ap
+
+
+def _serve_fleet(cfg, params, ecfg, prompts, args) -> int:
+    """The --hosts > 1 path: the same traffic through the multi-host Router.
+    Requests cycle over ``hosts`` session keys so the second lap of arrivals
+    pins to the hosts already holding those sessions' blocks (affinity
+    hits); ``--drain-at K`` drains host 0 after K fleet steps, exercising
+    queued-requeue + in-flight handoff mid-run."""
+    router = Router(cfg, params, ecfg, RouterConfig(n_hosts=args.hosts))
+    requests = []
+    fleet_steps = 0
+
+    def tick(n):
+        nonlocal fleet_steps
+        for _ in range(n):
+            router.step()
+            fleet_steps += 1
+            if args.drain_at and fleet_steps == args.drain_at:
+                router.drain(0)
+                print(f"[serve] draining host 0 at fleet step {fleet_steps}",
+                      flush=True)
+
+    for i in range(args.requests):
+        requests.append(router.submit(prompts[i], args.gen,
+                                      session=str(i % args.hosts),
+                                      strict=True))
+        tick(args.stagger_steps)
+    while router.has_work():
+        tick(1)
+
+    for r in requests:
+        trail = "->".join(str(h) for h in r.hosts)
+        handed = " (handoff)" if len(r.hosts) > 1 else ""
+        print(f"[serve] req {r.id}: prompt {len(r.prompt)} tok | "
+              f"host {trail}{handed} | {r.n_generated} tok", flush=True)
+    s = router.stats()
+    print(f"[serve] router: {format_router_stats(s)}", flush=True)
+    for h, hs in enumerate(s["per_host"]):
+        o = hs.get("opq", {})
+        drained = " [drained]" if router.is_drained(h) else ""
+        print(f"[serve] host {h}{drained}: {hs['completed']} done | "
+              f"{hs['decode_steps']} decode steps | "
+              f"{hs['preempted']} preempted, {hs['evicted']} evicted | "
+              f"cache {format_memory_stats(hs['cache'])} | "
+              f"opq {o.get('issued', 0)} instr, "
+              f"{o.get('affinity_hits', 0)} affinity hits", flush=True)
+    print(f"[serve] sample generation (req 0): {requests[0].tokens}",
+          flush=True)
+    router.close()
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = build_parser()
     args = ap.parse_args(argv)
     for name in ("requests", "prompt_len", "gen", "slots", "max_queue"):
         if getattr(args, name) < 1:
@@ -108,6 +186,11 @@ def main(argv=None) -> int:
         ap.error("--paged-native/--paged-kernel require --cache-backend paged")
     if args.paged_kernel and not args.paged_native:
         ap.error("--paged-kernel requires --paged-native")
+    if args.hosts < 1:
+        ap.error("--hosts must be >= 1")
+    if args.drain_at and args.hosts < 2:
+        ap.error("--drain-at needs --hosts >= 2 (handoff requires another "
+                 "host to admit the drained work)")
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -134,14 +217,19 @@ def main(argv=None) -> int:
         prompts = rng.integers(0, cfg.vocab, (args.requests, args.prompt_len),
                                dtype=np.int32)
 
-        engine = Engine(cfg, params, EngineConfig(
+        ecfg = EngineConfig(
             max_slots=args.slots, max_queue=args.max_queue,
             max_seq_len=args.prompt_len + args.gen,
             cache_backend=args.cache_backend, block_size=args.block_size,
             n_blocks=args.n_blocks or None,
             paged_native=args.paged_native,
             paged_kernel=args.paged_kernel,
-            prefill_chunk=args.prefill_chunk or None))
+            prefill_chunk=args.prefill_chunk or None)
+
+        if args.hosts > 1:
+            return _serve_fleet(cfg, params, ecfg, prompts, args)
+
+        engine = Engine(cfg, params, ecfg)
         requests = []
         for i in range(args.requests):
             requests.append(engine.submit(prompts[i], args.gen, strict=True))

@@ -4,6 +4,11 @@ Public cache surface: the :class:`SlotStore` protocol (store.py) with
 ``ContiguousKVStore`` / ``PagedKVStore`` / ``RecurrentStateStore`` backends
 and the ``make_store(cfg, n_slots, max_seq_len, backend=...)`` factory.
 ``KVSlotManager`` survives as a deprecated shim over ContiguousKVStore.
+
+Multi-host: :class:`Router` (router.py) fronts one Engine per simulated host
+with cache-affinity placement, load-aware spill, and drain/handoff — the OPQ
+affinity policy extended across hosts. See docs/architecture.md for the
+layer map.
 """
 
 from repro.serving.engine import (          # noqa: F401
@@ -11,7 +16,10 @@ from repro.serving.engine import (          # noqa: F401
 )
 from repro.serving.kv import KVSlotManager              # noqa: F401  (deprecated)
 from repro.serving.metrics import (          # noqa: F401
-    EngineMetrics, RequestMetrics, format_memory_stats,
+    EngineMetrics, RequestMetrics, format_memory_stats, format_router_stats,
+)
+from repro.serving.router import (           # noqa: F401
+    Router, RouterConfig, RouterRequest,
 )
 from repro.serving.scheduler import Scheduler, bucket_for, default_buckets  # noqa: F401
 from repro.serving.store import (            # noqa: F401

@@ -77,6 +77,10 @@ class RequestState(enum.Enum):
     QUEUED = "queued"
     RUNNING = "running"
     DONE = "done"
+    PREEMPTED = "preempted"    # pulled mid-flight by a drain handoff: the
+                               # slot was retired, the tokens generated so
+                               # far stand, and a continuation request on
+                               # another engine carries the remainder
 
 
 @dataclasses.dataclass
@@ -99,26 +103,85 @@ class Request:
 
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
-    max_slots: int = 4                     # in-flight decode batch width
-    max_queue: int = 64                    # admission control: FIFO bound
-    max_seq_len: int = 64                  # per-slot seq budget (prompt + gen)
-    buckets: Optional[Tuple[int, ...]] = None   # prefill pad lengths
-    eos_id: Optional[int] = None           # early finish token (None = length-only)
-    use_opq: bool = True                   # dispatch through the OPQ runtime
-    cache_backend: str = "auto"            # auto | contiguous | paged | recurrent
-    block_size: int = 16                   # paged: tokens per KV block
-    n_blocks: Optional[int] = None         # paged: pool size (None = full capacity)
-    paged_native: bool = False             # paged: block-native decode (no
-                                           # gather-bridge view; decode attends
-                                           # over the pool through the tables)
-    paged_kernel: bool = False             # native: route the attention
-                                           # contraction through the Pallas
-                                           # kernel (float-KV; interpret off-TPU)
-    prefill_chunk: Optional[int] = None    # dense: chunked prefill width —
-                                           # buckets wider than this admit via
-                                           # the chunked scan (peak score
-                                           # memory W*S, not S^2), lifting the
-                                           # long-prompt admission cap
+    """Per-engine serving knobs. Operator-facing documentation (including the
+    CLI flag each field maps to) lives in ``docs/serving.md``.
+
+    max_slots
+        Width of the in-flight decode batch — the number of requests that
+        decode concurrently. Each slot leases one cache row (or block set)
+        from the SlotStore for its whole residency.
+    max_queue
+        Admission control: the bound on the waiting FIFO. ``submit`` rejects
+        (returns None, or raises :class:`QueueFull` with ``strict=True``)
+        once this many requests are queued — backpressure at the door rather
+        than unbounded buffering.
+    max_seq_len
+        Per-slot sequence budget: a request's ``prompt + max_new_tokens``
+        must fit in it. Sizes the contiguous rows / the paged slot tables /
+        the recurrent prefill scan length.
+    buckets
+        Prefill pad lengths. Prompts are right-padded up to the smallest
+        bucket that holds them so same-bucket arrivals share one prefill
+        forward and the number of compiled prefill shapes is bounded by
+        ``len(buckets)``, not by traffic. ``None`` = powers of two from 16
+        capped at ``max_seq_len`` (scheduler.default_buckets). A bucket wider
+        than ``max_seq_len`` is rejected at construction.
+    eos_id
+        Early-finish token id: a request retires when it emits this token
+        (or at ``max_new_tokens``, whichever first). ``None`` = length-only.
+    use_opq
+        Dispatch every device step through the OPQ runtime (buffer affinity +
+        backup-task straggler mitigation). ``False`` runs steps eagerly —
+        tests/microbenchmarks only; the OPQ instruction-flag audit trail
+        (``stats()["opq"]``) disappears with it.
+    cache_backend
+        SlotStore backend: ``auto`` | ``contiguous`` | ``paged`` |
+        ``recurrent`` (serving/store.py). ``auto`` picks contiguous for
+        dense/moe archs and recurrent for ssm/hybrid.
+    block_size
+        Paged backend only: tokens per KV block. Must divide
+        ``max_seq_len`` (the gathered view must be exactly ``max_seq_len``
+        long — the bit-identity contract with the contiguous decode program).
+    n_blocks
+        Paged backend only: block-pool size INCLUDING the reserved null
+        block 0. ``None`` sizes the pool to full capacity
+        (``max_slots * max_seq_len / block_size`` + the null block); smaller
+        pools trade admission backpressure for resident bytes
+        (reports/BENCH_paged.json).
+    paged_native
+        Paged backend only (added PR 4): block-native decode. The decode
+        step receives the pool + tables and writes/attends through them in
+        place — no transient gather-bridge view
+        (``memory_stats()["decode_view_bytes"] == 0``), tokens bit-identical
+        to the bridge, which remains the reference oracle.
+    paged_kernel
+        With ``paged_native`` (added PR 4): route the attention contraction
+        through the Pallas paged-attention kernel
+        (kernels/paged_attention.py — scalar-prefetch block-table addressing
+        + online softmax, block-sized VMEM working set). Float-KV only; runs
+        in interpret mode off-TPU, which is how CPU CI exercises it.
+    prefill_chunk
+        Dense families only (added PR 4): chunked prefill width W. Buckets
+        wider than W admit through a ``lax.scan`` of W-token chunks — peak
+        prefill score memory (B, H, W, S) instead of (B, H, S, S) — and the
+        bucket set extends past the fused buckets by multiples of W up to
+        ``max_seq_len``, lifting the long-prompt admission cap. Bit-identical
+        to single-shot fused prefill. Rejected for recurrent families (their
+        masked-scan prefill is already linear) and mrope position encoding.
+    """
+
+    max_slots: int = 4
+    max_queue: int = 64
+    max_seq_len: int = 64
+    buckets: Optional[Tuple[int, ...]] = None
+    eos_id: Optional[int] = None
+    use_opq: bool = True
+    cache_backend: str = "auto"
+    block_size: int = 16
+    n_blocks: Optional[int] = None
+    paged_native: bool = False
+    paged_kernel: bool = False
+    prefill_chunk: Optional[int] = None
 
 
 @functools.lru_cache(maxsize=None)
@@ -276,24 +339,38 @@ class Engine:
 
     # ------------------------------------------------------------- admission
 
+    def would_accept(self, prompt_len: int, max_new_tokens: int) -> bool:
+        """The submit-time admission predicate, side-effect free: whether a
+        request of this shape would pass the door right now (queue bound, seq
+        budget, bucket cap, store total-capacity ``fits``). The multi-host
+        router asks this before placing or handing off a request so a
+        rejection never costs a preemption (serving/router.py)."""
+        return not (self.scheduler.queue_depth >= self.ecfg.max_queue
+                    or prompt_len < 1
+                    or max_new_tokens < 1
+                    or prompt_len + max_new_tokens > self.ecfg.max_seq_len
+                    # custom buckets may cap below max_seq_len: reject at the
+                    # door, not mid-admission after a slot was leased
+                    or prompt_len > max(self.scheduler.buckets)
+                    # a request exceeding the store's TOTAL capacity (e.g.
+                    # more paged blocks than the pool holds) could never be
+                    # leased: deferring it would livelock the queue head
+                    or not self.store.fits(prompt_len, max_new_tokens))
+
+    def lease_headroom(self, prompt_len: int, max_new_tokens: int) -> bool:
+        """Whether the store could lease this request RIGHT NOW (free paged
+        blocks vs. ``fits``'s total-capacity check). False means admission
+        would defer on backpressure — the router's cue to spill the request
+        to another host instead of head-of-line blocking behind a dry pool."""
+        return self.store.available_now(prompt_len, max_new_tokens)
+
     def submit(self, prompt: Sequence[int], max_new_tokens: int,
                *, strict: bool = False) -> Optional[Request]:
         """Admission control at the door: a bounded queue and a hard per-slot
         sequence budget. Returns the Request, or None when rejected
         (QueueFull when ``strict``)."""
         prompt = np.asarray(prompt, dtype=np.int32).reshape(-1)
-        reject = (self.scheduler.queue_depth >= self.ecfg.max_queue
-                  or len(prompt) == 0
-                  or max_new_tokens < 1
-                  or len(prompt) + max_new_tokens > self.ecfg.max_seq_len
-                  # custom buckets may cap below max_seq_len: reject at the
-                  # door, not mid-admission after a slot was leased
-                  or len(prompt) > max(self.scheduler.buckets)
-                  # a request exceeding the store's TOTAL capacity (e.g. more
-                  # paged blocks than the pool holds) could never be leased:
-                  # deferring it would livelock the queue head forever
-                  or not self.store.fits(len(prompt), max_new_tokens))
-        if reject:
+        if not self.would_accept(len(prompt), max_new_tokens):
             self.metrics.rejected += 1
             if strict:
                 raise QueueFull(
@@ -415,6 +492,43 @@ class Engine:
         req.metrics.finish_s = now()
         self.metrics.completed += 1
         self.completed.append(req)
+
+    # ------------------------------------------------------------ drain hooks
+    # The multi-host router (serving/router.py) drains an engine by (1) no
+    # longer placing traffic on it, (2) pulling its not-yet-admitted queue
+    # with evict_queued, and (3) preempting long in-flight generations for
+    # re-admission elsewhere. Both hooks operate at step boundaries only —
+    # nothing is ever interrupted mid-dispatch.
+
+    def evict_queued(self) -> List[Request]:
+        """Pull every not-yet-admitted request out of the waiting FIFO, in
+        order, leaving in-flight slots untouched. The requests hold no cache
+        state yet (admission is what leases and seeds a slot), so the caller
+        can re-submit them anywhere verbatim."""
+        out = list(self.scheduler.waiting)
+        self.scheduler.waiting.clear()
+        for req in out:
+            req.state = RequestState.PREEMPTED
+        self.metrics.evicted += len(out)
+        return out
+
+    def preempt(self, req_id: int) -> Request:
+        """Remove an in-flight request at a step boundary: retire its slot,
+        scrub its cache rows, and return it with the tokens it generated so
+        far (>= 1 — admission produced the first). Greedy decode is
+        deterministic, so a continuation submitted elsewhere with
+        ``prompt + tokens`` as its prompt regenerates the EXACT remaining
+        stream — the fused prefill-with-cache seeding path is bit-identical
+        to decode replay, which is what makes drain handoff lossless
+        (asserted in tests/test_router.py)."""
+        for slot, req in self.scheduler.active.items():
+            if req.id == req_id:
+                self.scheduler.retire(slot)
+                self.store.reset(slot)
+                req.state = RequestState.PREEMPTED
+                self.metrics.preempted += 1
+                return req
+        raise KeyError(f"request {req_id} is not in flight on this engine")
 
     def step(self) -> None:
         """One engine iteration: join waiting requests into free slots, then

@@ -74,6 +74,12 @@ class EngineMetrics:
     rejected: int = 0
     admissions_deferred: int = 0               # store lease refusals (paged
                                                # block-pool backpressure)
+    evicted: int = 0                           # queued requests pulled by a
+                                               # router drain (never admitted
+                                               # here; re-placed elsewhere)
+    preempted: int = 0                         # in-flight requests handed off
+                                               # by a router drain (slot
+                                               # retired, tokens stand)
     completed: int = 0
     tokens_generated: int = 0                  # prefill first-tokens + decode
     decode_steps: int = 0
@@ -113,6 +119,8 @@ class EngineMetrics:
             "submitted": self.submitted,
             "rejected": self.rejected,
             "admissions_deferred": self.admissions_deferred,
+            "evicted": self.evicted,
+            "preempted": self.preempted,
             "completed": self.completed,
             "tokens_generated": self.tokens_generated,
             "decode_steps": self.decode_steps,
@@ -124,6 +132,22 @@ class EngineMetrics:
             "mean_queue_depth": self.queue_depth_sum / max(self.steps, 1),
             "mean_occupancy": self.occupancy_sum / max(self.steps, 1),
         }
+
+
+def format_router_stats(stats: Dict) -> str:
+    """One-line fleet summary from ``Router.stats()`` — placement counters in
+    the same shape OPQ reports per-lane scheduling (placed/affinity_hits, the
+    cross-host analog of issued/affinity_hits) plus drain/handoff activity —
+    the launch/serve.py multi-host report line."""
+    r = stats["router"]
+    f = stats["fleet"]
+    drained = f" | draining={r['draining']}" if r.get("draining") else ""
+    return (f"{r['hosts']} hosts | {r['placed']} placed "
+            f"({r['affinity_hits']} affinity hits, {r['spills']} spills) | "
+            f"{r['drains']} drains -> {r['handoffs']} handoffs + "
+            f"{r['requeued']} requeued | fleet: {f['completed']} done, "
+            f"{f['tokens_generated']} tok, {f['sustained_tok_s']:.1f} tok/s"
+            f"{drained}")
 
 
 def format_memory_stats(ms: Dict) -> str:

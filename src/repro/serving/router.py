@@ -1,0 +1,369 @@
+"""Multi-host serving router: the OPQ placement policy, one level up.
+
+GPTPU's runtime places tile instructions on the accelerator already holding
+their input buffer (affinity) and falls back to the least-loaded lane
+(core/opq.py ``_pick_lane``); Jouppi et al. make the same argument at rack
+scale — serving utilization comes from scheduling work onto the accelerator
+that already holds the data. This module applies that policy across
+*simulated hosts*: a :class:`Router` fronts N :class:`~repro.serving.engine.
+Engine` instances (one per host, each with its own OPQ runtime and SlotStore),
+and places whole requests the way OPQ places instructions:
+
+  * **cache-affinity placement** — requests carry an affinity key (an
+    explicit ``session``, or a hash of the prompt ids); a key's requests pin
+    to the host whose SlotStore served it last — the host holding its leased
+    blocks — and the hit is counted exactly the way OPQ counts per-lane
+    affinity (``stats()["router"]["placed"/"affinity_hits"]`` mirrors
+    ``opq.stats["issued"/"affinity_hits"]``).
+  * **load-aware spill** — when the pinned host cannot take the request NOW
+    (paged block pool dry — ``Engine.lease_headroom`` — or its queue/door
+    rejects), the router places it on the least-loaded accepting host
+    instead of head-of-line blocking the fleet behind one dry pool, counts a
+    ``spill``, and re-pins the key to where the blocks actually leased.
+    First-seen keys go least-loaded, the OPQ FCFS fallback.
+  * **drain/handoff** — ``drain(host)`` stops placing traffic on an engine
+    and empties it without losing or changing a single token: queued
+    requests are pulled (``Engine.evict_queued``) and re-placed verbatim;
+    in-flight requests with more than ``handoff_threshold`` tokens left are
+    preempted (``Engine.preempt``) and re-admitted on another host as a
+    continuation — ``prompt + tokens generated so far`` through the normal
+    fused prefill-with-cache seeding path, which is bit-identical to decode
+    replay, so the stitched stream equals an undrained run bit-for-bit
+    (asserted in tests/test_router.py). Short remainders just finish in
+    place on the draining engine. Once ``is_drained``, the host can restart
+    elastically and return via ``undrain``.
+
+Determinism: every engine is batch-invariant (staggered == sequential,
+engine.py) and greedy decode is a pure function of the token prefix, so ANY
+placement — spills, handoffs, mid-run drains included — yields bit-identical
+tokens to serving the same requests one at a time on a single engine. The
+router can therefore never trade correctness for load balance.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import zlib
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.serving.engine import (
+    Engine, EngineConfig, QueueFull, Request, RequestState,
+)
+from repro.serving.metrics import now
+
+
+@dataclasses.dataclass(frozen=True)
+class RouterConfig:
+    """Fleet-level knobs (per-engine knobs stay in EngineConfig).
+
+    n_hosts
+        Engines the router fronts — one per simulated host, each with its
+        own OPQ runtime and SlotStore.
+    handoff_threshold
+        ``drain(host)``: in-flight requests with MORE than this many tokens
+        still to generate are preempted and re-admitted on another host;
+        at/below it they finish on the draining engine (a handoff costs one
+        continuation prefill — not worth it for a tail of a few tokens).
+    """
+
+    n_hosts: int = 2
+    handoff_threshold: int = 4
+
+
+@dataclasses.dataclass
+class RouterRequest:
+    """The fleet-level request: engine requests are per-segment internals
+    (a handoff retires one and opens another); ``tokens`` is the stitched
+    stream and ``hosts`` the placement trail (len > 1 == handed off)."""
+
+    id: int
+    prompt: np.ndarray
+    max_new_tokens: int
+    session: Optional[str]
+    arrival_s: float
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    hosts: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    finish_s: Optional[float] = None
+
+    @property
+    def n_generated(self) -> int:
+        return len(self.tokens)
+
+
+class Router:
+    """See module docstring. Typical use::
+
+        router = Router(cfg, params, EngineConfig(max_slots=4),
+                        RouterConfig(n_hosts=2))
+        req = router.submit(prompt_ids, max_new_tokens=16, session="user-7")
+        router.drain(0)                       # elastic restart of host 0
+        router.run_until_complete()
+        print(req.tokens, router.stats()["router"])
+    """
+
+    def __init__(self, cfg: ArchConfig, params,
+                 engine_cfg: EngineConfig = None,
+                 router_cfg: RouterConfig = None):
+        self.rcfg = router_cfg or RouterConfig()
+        if self.rcfg.n_hosts < 1:
+            raise ValueError(f"n_hosts must be >= 1, got {self.rcfg.n_hosts}")
+        if self.rcfg.handoff_threshold < 0:
+            raise ValueError("handoff_threshold must be >= 0")
+        # one engine per host; compiled steps are shared across them via the
+        # _jitted_steps cache, so N hosts costs N caches, not N XLA compiles
+        self.engines: List[Engine] = [
+            Engine(cfg, params, engine_cfg)
+            for _ in range(self.rcfg.n_hosts)]
+        self._draining: Set[int] = set()
+        self._affinity: Dict[str, int] = {}        # key -> host of last lease
+        self._live: Dict[Tuple[int, int], RouterRequest] = {}
+        self._harvested: List[int] = [0] * self.rcfg.n_hosts
+        self._req_ids = itertools.count()
+        self.completed: List[RouterRequest] = []
+        # the OPQ-shaped placement ledger: placed/affinity_hits is the
+        # cross-host analog of opq.stats issued/affinity_hits
+        self.counters: Dict[str, int] = {
+            "placed": 0, "affinity_hits": 0, "spills": 0, "rejected": 0,
+            "drains": 0, "handoffs": 0, "requeued": 0,
+        }
+
+    # ------------------------------------------------------------- placement
+
+    def _key(self, prompt: np.ndarray, session: Optional[str]) -> str:
+        """The affinity key: an explicit session pins a user's requests
+        together; otherwise identical prompts hash together (prefix-cache
+        affinity in spirit — the host already holds those K/V blocks)."""
+        if session is not None:
+            return f"s:{session}"
+        return f"p:{zlib.crc32(np.ascontiguousarray(prompt).tobytes()):#x}"
+
+    def _load(self, host: int) -> int:
+        e = self.engines[host]
+        return e.scheduler.queue_depth + e.scheduler.n_active
+
+    def _place(self, key: str, prompt_len: int, max_new_tokens: int,
+               exclude: Set[int] = frozenset()
+               ) -> Optional[Tuple[int, bool, bool]]:
+        """Pick a host for a request: pinned host first (affinity), else
+        least-loaded accepting host (FCFS fallback; a bypassed pin counts as
+        a spill). Returns (host, affinity_hit, spilled), or None when no
+        host can ever take it. Mirrors opq.OPQ._pick_lane one level up."""
+        alive = [h for h in range(self.rcfg.n_hosts)
+                 if h not in self._draining and h not in exclude]
+        if not alive:
+            return None
+        pinned = self._affinity.get(key)
+        spilled = False
+        if pinned is not None and pinned in alive:
+            e = self.engines[pinned]
+            if (e.would_accept(prompt_len, max_new_tokens)
+                    and e.lease_headroom(prompt_len, max_new_tokens)):
+                return pinned, True, False
+            # the pinned host's pool is dry (or its door rejects): shed the
+            # request rather than queue the fleet behind one host
+            spilled = True
+        accepting = [h for h in sorted(alive, key=self._load)
+                     if self.engines[h].would_accept(prompt_len,
+                                                     max_new_tokens)]
+        if not accepting:
+            return None
+        # prefer a host that can lease immediately; fall back to queueing on
+        # the least-loaded door if every pool is dry right now
+        ready = [h for h in accepting
+                 if self.engines[h].lease_headroom(prompt_len,
+                                                   max_new_tokens)]
+        pick = (ready or accepting)[0]
+        if pick == pinned:
+            # every pool is dry and the least-loaded door is the pin itself:
+            # the request lands where its pin points, so the ledger records a
+            # (queued) affinity hit, not a spill
+            return pinned, True, False
+        return pick, False, spilled
+
+    def submit(self, prompt: Sequence[int], max_new_tokens: int, *,
+               session: Optional[str] = None,
+               strict: bool = False) -> Optional[RouterRequest]:
+        """Place one request on the fleet. Returns the RouterRequest, or
+        None when every host rejects it (QueueFull when ``strict``) — the
+        same door contract as Engine.submit."""
+        prompt = np.asarray(prompt, dtype=np.int32).reshape(-1)
+        key = self._key(prompt, session)
+        placed = self._place(key, len(prompt), max_new_tokens)
+        ereq = None
+        if placed is not None:
+            host, hit, spilled = placed
+            ereq = self.engines[host].submit(prompt, max_new_tokens)
+        if ereq is None:
+            self.counters["rejected"] += 1
+            if strict:
+                raise QueueFull(
+                    f"no host accepts prompt={len(prompt)} + "
+                    f"gen={max_new_tokens} "
+                    f"(draining={sorted(self._draining)})")
+            return None
+        self.counters["placed"] += 1
+        self.counters["affinity_hits"] += int(hit)
+        self.counters["spills"] += int(spilled)
+        self._affinity[key] = host                 # pin to where the lease is
+        rreq = RouterRequest(id=next(self._req_ids), prompt=prompt,
+                             max_new_tokens=max_new_tokens, session=session,
+                             arrival_s=now(), hosts=[host])
+        self._live[(host, ereq.id)] = rreq
+        return rreq
+
+    # ------------------------------------------------------------ drain/handoff
+
+    def drain(self, host: int) -> None:
+        """Stop admitting to ``host`` and empty it without losing a token:
+        re-place its queued requests, hand off in-flight generations longer
+        than ``handoff_threshold`` as continuations (``prompt + tokens so
+        far`` re-admitted through the normal seeding path — bit-identical to
+        not draining), and let short tails finish in place. The engine keeps
+        stepping until its slots empty (``is_drained``); ``undrain`` returns
+        it to the placement pool after an elastic restart."""
+        if not 0 <= host < self.rcfg.n_hosts:
+            raise ValueError(f"no host {host} (n_hosts={self.rcfg.n_hosts})")
+        if host in self._draining:
+            return
+        self._draining.add(host)
+        self.counters["drains"] += 1
+        eng = self.engines[host]
+        # queued requests hold no cache state: re-place them verbatim. A
+        # request no other host can take goes back to the draining engine's
+        # queue — drain blocks NEW traffic, not work already accepted.
+        for ereq in eng.evict_queued():
+            rreq = self._live.pop((host, ereq.id), None)
+            if rreq is None:
+                # submitted to the engine directly, not router-placed: put it
+                # back in the engine's own queue untouched (same Request
+                # object, so the direct caller's handle still completes)
+                ereq.state = RequestState.QUEUED
+                eng.scheduler.enqueue(ereq)
+                continue
+            self._reroute(rreq, np.asarray(ereq.prompt),
+                          ereq.max_new_tokens, fallback=eng)
+        # in-flight: hand off the long generations, finish the short tails
+        for slot in sorted(eng.scheduler.active):
+            ereq = eng.scheduler.active[slot]
+            rreq = self._live.get((host, ereq.id))
+            if rreq is None:
+                continue                           # direct submit: finish here
+            remaining = ereq.max_new_tokens - len(ereq.tokens)
+            if remaining <= self.rcfg.handoff_threshold:
+                continue
+            done_tokens = rreq.tokens + ereq.tokens
+            cont_prompt = np.concatenate(
+                [rreq.prompt, np.asarray(done_tokens, np.int32)])
+            target = self._place(self._key(rreq.prompt, rreq.session),
+                                 len(cont_prompt), remaining,
+                                 exclude={host})
+            if target is None:
+                continue                           # nowhere to go: finish here
+            eng.preempt(ereq.id)
+            del self._live[(host, ereq.id)]
+            rreq.tokens.extend(ereq.tokens)
+            self._submit_segment(rreq, target[0], cont_prompt, remaining)
+            self.counters["handoffs"] += 1
+
+    def _reroute(self, rreq: RouterRequest, prompt: np.ndarray,
+                 max_new_tokens: int, fallback: Engine) -> None:
+        placed = self._place(self._key(rreq.prompt, rreq.session),
+                             len(prompt), max_new_tokens)
+        host = (self.engines.index(fallback) if placed is None
+                else placed[0])
+        self._submit_segment(rreq, host, prompt, max_new_tokens)
+        self.counters["requeued"] += 1
+
+    def _submit_segment(self, rreq: RouterRequest, host: int,
+                        prompt: np.ndarray, max_new_tokens: int) -> None:
+        ereq = self.engines[host].submit(prompt, max_new_tokens, strict=True)
+        self._live[(host, ereq.id)] = rreq
+        rreq.hosts.append(host)
+        self._affinity[self._key(rreq.prompt, rreq.session)] = host
+
+    def is_drained(self, host: int) -> bool:
+        """Draining AND empty — safe to restart the host process."""
+        return host in self._draining and not self.engines[host].has_work()
+
+    def undrain(self, host: int) -> None:
+        """Return a (restarted) host to the placement pool."""
+        self._draining.discard(host)
+
+    # --------------------------------------------------------------- stepping
+
+    def step(self) -> None:
+        """One fleet iteration: step every engine that has work (draining
+        engines included — they must finish what they hold), then harvest
+        completions into the fleet-level requests."""
+        for host, eng in enumerate(self.engines):
+            if eng.has_work():
+                eng.step()
+            self._harvest(host)
+
+    def _harvest(self, host: int) -> None:
+        eng = self.engines[host]
+        while self._harvested[host] < len(eng.completed):
+            ereq = eng.completed[self._harvested[host]]
+            self._harvested[host] += 1
+            rreq = self._live.pop((host, ereq.id), None)
+            if rreq is None:
+                continue                   # not router-placed (direct submit)
+            rreq.tokens.extend(ereq.tokens)
+            rreq.done = True
+            rreq.finish_s = now()
+            self.completed.append(rreq)
+
+    def has_work(self) -> bool:
+        return any(e.has_work() for e in self.engines)
+
+    def run_until_complete(self, max_steps: int = 100_000
+                           ) -> List[RouterRequest]:
+        steps = 0
+        while self.has_work():
+            self.step()
+            steps += 1
+            if steps > max_steps:
+                raise RuntimeError(
+                    f"fleet did not drain in {max_steps} steps")
+        return self.completed
+
+    # ---------------------------------------------------------------- summary
+
+    def stats(self) -> Dict:
+        """Fleet telemetry, three levels down: ``router`` (the placement
+        ledger — placed/affinity_hits/spills in the OPQ per-lane shape, plus
+        drain/handoff counts), ``fleet`` (engine counters summed across
+        hosts), and ``per_host`` (each engine's full ``stats()``, its own
+        OPQ affinity/backup counters included)."""
+        per_host = [e.stats() for e in self.engines]
+        fleet_keys = ("submitted", "rejected", "admissions_deferred",
+                      "evicted", "preempted", "completed", "tokens_generated",
+                      "decode_steps", "prefill_batches", "prefill_tokens")
+        fleet = {k: sum(h[k] for h in per_host) for k in fleet_keys}
+        # fleet rate over the FLEET's first->last token span — summing
+        # per-host rates would overstate it whenever host spans differ
+        # (e.g. a host drained early has a short span and a high rate)
+        firsts = [e.metrics.first_token_s for e in self.engines
+                  if e.metrics.first_token_s is not None]
+        lasts = [e.metrics.last_token_s for e in self.engines
+                 if e.metrics.last_token_s is not None]
+        span = (max(lasts) - min(firsts)) if firsts else 0.0
+        fleet["sustained_tok_s"] = (
+            fleet["tokens_generated"] / span if span > 0
+            else float("inf") if fleet["tokens_generated"] else 0.0)
+        return {
+            "router": dict(self.counters, hosts=self.rcfg.n_hosts,
+                           draining=sorted(self._draining),
+                           completed=len(self.completed)),
+            "fleet": fleet,
+            "per_host": per_host,
+        }
+
+    def close(self) -> None:
+        for e in self.engines:
+            e.close()

@@ -278,6 +278,9 @@ class SlotStore(abc.ABC):
     Subclasses implement ``alloc`` and ``write_slots``; the row-generic
     lifecycle (write_slot / reset / decode bridge) is shared."""
 
+    #: Backend identifier ("contiguous" | "paged" | "recurrent") — keys the
+    #: engine's compiled-step cache and the ``memory_stats()["backend"]``
+    #: telemetry field.
     kind: str = "abstract"
 
     def __init__(self, cfg: ArchConfig, n_slots: int, max_seq_len: int):
@@ -309,6 +312,17 @@ class SlotStore(abc.ABC):
         scheduler then leaves the request queued, FIFO order intact."""
         return True
 
+    def available_now(self, prompt_len: int, max_new_tokens: int) -> bool:
+        """Whether a ``lease`` for this request would succeed RIGHT NOW,
+        without reserving anything — ``fits`` asks about total capacity,
+        this asks about current occupancy. The multi-host router uses it as
+        the spill signal: a pinned host whose pool is dry should shed the
+        request to the least-loaded host instead of queueing behind the
+        backpressure (serving/router.py). Default True: the contiguous and
+        recurrent backends bound admission by free slots, which the
+        scheduler owns, not by store occupancy."""
+        return self.fits(prompt_len, max_new_tokens)
+
     # ------------------------------------------------------------- lifecycle
 
     @abc.abstractmethod
@@ -331,8 +345,8 @@ class SlotStore(abc.ABC):
         assert 0 <= slot < self.n_slots
         self.cache = _reset_row(self.cache, jnp.int32(slot))
 
-    # Back-compat alias for the KVSlotManager era.
     def reset_slot(self, slot: int) -> None:
+        """Back-compat alias for :meth:`reset` from the KVSlotManager era."""
         self.reset(slot)
 
     # ---------------------------------------------------------- decode bridge
@@ -353,13 +367,27 @@ class SlotStore(abc.ABC):
     # ------------------------------------------------------------------ info
 
     def slot_index(self, slot: int) -> int:
+        """The slot's current write position (== valid sequence length for
+        K/V backends): 0 for a pristine slot, the prompt length right after
+        admission, advancing by one per decode step. Device sync per call —
+        inspection/tests, not the decode hot path."""
         return int(self.cache["index"][slot])
 
     def nbytes(self) -> int:
+        """Total RESIDENT bytes of the backing cache pytree (every leaf,
+        block tables and index planes included). Transient decode-time
+        allocations — e.g. the paged gather-bridge view — are NOT in here;
+        see ``memory_stats()["decode_view_bytes"]``."""
         return sum(leaf.size * leaf.dtype.itemsize
                    for leaf in jax.tree.leaves(self.cache))
 
     def memory_stats(self) -> Dict:
+        """Occupancy/byte telemetry dict for this backend — always carries
+        ``backend`` and ``bytes`` (resident allocation); backends add their
+        own keys (paged: block occupancy, ``decode_view_bytes``,
+        ``table_uploads``). Surfaced as ``Engine.stats()["cache"]`` and
+        rendered one-line by ``metrics.format_memory_stats``; field-by-field
+        documentation lives in docs/serving.md."""
         b = self.nbytes()
         return {"backend": self.kind, "bytes": b,
                 "bytes_per_slot": b // max(self.n_slots, 1),
@@ -456,6 +484,12 @@ class PagedKVStore(SlotStore):
         # never deferred (lease would refuse it forever — livelock)
         return (self._blocks_needed(prompt_len, max_new_tokens)
                 <= min(self.n_blocks - 1, self.blocks_per_slot))
+
+    def available_now(self, prompt_len: int, max_new_tokens: int) -> bool:
+        # the router's spill signal: lease would refuse (pool dry) even
+        # though fits() says the request is servable in principle
+        need = self._blocks_needed(prompt_len, max_new_tokens)
+        return need <= len(self._free) and need <= self.blocks_per_slot
 
     def lease(self, slot: int, prompt_len: int, max_new_tokens: int) -> bool:
         need = self._blocks_needed(prompt_len, max_new_tokens)

@@ -1,0 +1,357 @@
+"""Multi-host router invariants (serving/router.py):
+
+  * bit-identity  — staggered multi-host serving (affinity placement, spills,
+                    AND a mid-run drain/handoff) produces exactly the tokens
+                    of single-engine sequential serving, for dense, int8-KV,
+                    and MoE cache formats
+  * drain/handoff — drain() re-places queued requests, hands off long
+                    in-flight generations through the continuation path
+                    (prompt + tokens so far, the fused prefill-with-cache
+                    seeding), finishes short tails in place, and the host
+                    reports is_drained once empty; undrain() restores it
+  * affinity      — same-session requests pin to the host holding their
+                    blocks, counted the way OPQ counts per-lane affinity
+                    (placed/affinity_hits); first-seen keys go least-loaded
+  * spill         — a pinned host with a dry paged pool sheds the request to
+                    the least-loaded host (counted) instead of queueing the
+                    fleet behind the backpressure
+  * drain hooks   — Engine.evict_queued / preempt / would_accept /
+                    lease_headroom operate at step boundaries and never
+                    touch in-flight slots they shouldn't
+  * stats         — the three-level stats() surface (router ledger, fleet
+                    sums, per-host engine stats incl. per-lane OPQ counters)
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import get_config
+from repro.models import init_model
+from repro.serving import (
+    Engine, EngineConfig, QueueFull, RequestState, Router, RouterConfig,
+    format_router_stats,
+)
+
+CFG = get_config("tinyllama-1.1b").smoke()
+MOE_CFG = get_config("moonshot-v1-16b-a3b").smoke()
+RNG = np.random.default_rng(11)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_model(CFG, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def moe_params():
+    return init_model(MOE_CFG, jax.random.PRNGKey(1))
+
+
+def _prompts(lens, cfg=CFG):
+    return [RNG.integers(0, cfg.vocab, (l,), dtype=np.int32) for l in lens]
+
+
+def _sequential(params, prompts, gens, cfg=CFG, **ecfg_kw):
+    """Reference: one engine, one request at a time, drained in between."""
+    kw = dict(max_slots=2, max_seq_len=32)
+    kw.update(ecfg_kw)
+    eng = Engine(cfg, params, EngineConfig(**kw))
+    outs = []
+    for p, g in zip(prompts, gens):
+        req = eng.submit(p, g)
+        eng.run_until_complete()
+        outs.append(list(req.tokens))
+    eng.close()
+    return outs
+
+
+def _fleet_staggered(params, prompts, gens, cfg=CFG, *, n_hosts=2,
+                     drain_at=None, handoff_threshold=0, sessions=None,
+                     **ecfg_kw):
+    """Mixed multi-host traffic: staggered arrivals, optional mid-run drain
+    of host 0. Returns (token streams, router stats, request objects)."""
+    router = Router(cfg, params,
+                    EngineConfig(max_slots=2, max_seq_len=32, **ecfg_kw),
+                    RouterConfig(n_hosts=n_hosts,
+                                 handoff_threshold=handoff_threshold))
+    reqs = []
+    step = 0
+    for i, (p, g) in enumerate(zip(prompts, gens)):
+        sess = sessions[i] if sessions else str(i % n_hosts)
+        reqs.append(router.submit(p, g, session=sess, strict=True))
+        router.step()
+        step += 1
+        if drain_at is not None and step == drain_at:
+            router.drain(0)
+    router.run_until_complete()
+    outs = [list(r.tokens) for r in reqs]
+    stats = router.stats()
+    router.close()
+    return outs, stats, reqs
+
+
+@pytest.mark.parametrize("family,kv_dtype", [
+    ("dense", "bfloat16"), ("dense", "int8"), ("moe", "bfloat16"),
+])
+def test_multi_host_bit_identical_to_sequential(params, moe_params, family,
+                                                kv_dtype):
+    """The headline router invariant: requests spread across hosts by
+    affinity/load — including a mid-run drain() that hands host 0's
+    in-flight generations off to host 1 — produce exactly the tokens each
+    request would produce alone on a single engine, for the float, int8-KV,
+    and MoE cache formats."""
+    base, p = (CFG, params) if family == "dense" else (MOE_CFG, moe_params)
+    cfg = base.replace(kv_cache_dtype=kv_dtype)
+    prompts = _prompts([5, 9, 4, 7], cfg=cfg)
+    gens = [8, 6, 8, 5]
+    sequential = _sequential(p, prompts, gens, cfg=cfg)
+
+    plain, s_plain, _ = _fleet_staggered(p, prompts, gens, cfg=cfg)
+    assert plain == sequential                    # bit-identical, not allclose
+
+    drained, s_drain, reqs = _fleet_staggered(p, prompts, gens, cfg=cfg,
+                                              drain_at=2)
+    assert drained == sequential                  # ... across drain/handoff
+    assert s_drain["router"]["handoffs"] >= 1     # the drain really handed off
+    assert any(len(r.hosts) > 1 for r in reqs)
+
+
+def test_drain_handoff_stitches_streams_and_empties_host(params):
+    """drain() mechanics, step by step: host 0's in-flight request hands off
+    mid-generation (slot retired, preempted counted), its queued request
+    re-places, the stitched stream is exactly the undrained one, and the
+    host reports is_drained once empty — then undrain() returns it to the
+    placement pool."""
+    prompts = _prompts([6, 5, 4])
+    gens = [10, 8, 6]
+    sequential = _sequential(params, prompts, gens)
+
+    router = Router(CFG, params, EngineConfig(max_slots=1, max_seq_len=32),
+                    RouterConfig(n_hosts=2, handoff_threshold=0))
+    # host 0: one decoding + one queued behind the single slot
+    r0 = router.submit(prompts[0], gens[0], session="a")
+    router.step()
+    router.step()
+    r1 = router.submit(prompts[1], gens[1], session="a")   # affinity: host 0
+    r2 = router.submit(prompts[2], gens[2], session="b")   # least-loaded: 1
+    assert [r.hosts[0] for r in (r0, r1, r2)] == [0, 0, 1]
+    eng0 = router.engines[0]
+    assert eng0.scheduler.n_active == 1 and eng0.scheduler.queue_depth == 1
+
+    router.drain(0)
+    # the in-flight request was preempted with >= 1 token standing, the
+    # queued one was evicted and re-placed — host 0 holds nothing
+    assert eng0.metrics.preempted == 1 and eng0.metrics.evicted == 1
+    assert not eng0.has_work() and router.is_drained(0)
+    s = router.stats()["router"]
+    assert s["handoffs"] == 1 and s["requeued"] == 1 and s["drains"] == 1
+    assert len(r0.tokens) >= 1 and not r0.done    # segment 1 stands, not done
+
+    router.run_until_complete()
+    assert [list(r.tokens) for r in (r0, r1, r2)] == sequential
+    assert r0.hosts == [0, 1]                     # the handoff trail
+    assert r1.hosts == [0, 1]                     # evicted -> re-placed
+
+    # elastic restart: undrain returns the host to the placement pool
+    router.undrain(0)
+    r3 = router.submit(_prompts([4])[0], 4)
+    assert r3.hosts == [0]                        # least-loaded again
+    router.run_until_complete()
+    assert len(r3.tokens) == 4
+    router.close()
+
+
+def test_drain_short_tail_finishes_in_place(params):
+    """handoff_threshold: a request with at most that many tokens left rides
+    out the drain on the draining engine (a continuation prefill isn't worth
+    a few tail tokens) — and still finishes bit-identically."""
+    prompts = _prompts([6])
+    gens = [4]
+    sequential = _sequential(params, prompts, gens)
+    router = Router(CFG, params, EngineConfig(max_slots=2, max_seq_len=32),
+                    RouterConfig(n_hosts=2, handoff_threshold=8))
+    r = router.submit(prompts[0], gens[0])
+    router.step()                                 # 1 token in, 3 < 8 remain
+    router.drain(0)
+    assert router.stats()["router"]["handoffs"] == 0
+    assert router.engines[0].has_work()           # finishing in place
+    router.run_until_complete()
+    assert [list(r.tokens)] == sequential
+    assert r.hosts == [0]
+    assert router.is_drained(0)
+    router.close()
+
+
+def test_affinity_pins_sessions_and_counts_like_opq(params):
+    """Same-session requests pin to the host that served the session last;
+    hits are ledgered the way OPQ ledgers lane affinity (placed /
+    affinity_hits). Distinct fresh sessions spread by load."""
+    prompts = _prompts([4, 4, 4, 4])
+    router = Router(CFG, params, EngineConfig(max_slots=4, max_seq_len=32),
+                    RouterConfig(n_hosts=2))
+    ra = router.submit(prompts[0], 4, session="a")     # fresh: least-loaded
+    rb = router.submit(prompts[1], 4, session="b")     # fresh: the other host
+    ra2 = router.submit(prompts[2], 4, session="a")    # pin: a's host
+    rb2 = router.submit(prompts[3], 4, session="b")    # pin: b's host
+    assert ra.hosts != rb.hosts                        # load spread the fleet
+    assert ra2.hosts == ra.hosts and rb2.hosts == rb.hosts
+    s = router.stats()["router"]
+    assert s["placed"] == 4 and s["affinity_hits"] == 2 and s["spills"] == 0
+    # no session: identical prompts hash to the same affinity key (rh1's
+    # key is fresh — only rh2's placement is a hit)
+    rh1 = router.submit(prompts[0], 4)
+    rh2 = router.submit(prompts[0], 4)
+    assert rh1.hosts == rh2.hosts
+    assert router.stats()["router"]["affinity_hits"] == 3
+    router.run_until_complete()
+    router.close()
+
+
+def test_spill_on_dry_pinned_pool(params):
+    """Load-aware spill: the pinned host's paged pool is fully leased, so the
+    next same-session request sheds to the least-loaded host (spill counted,
+    pin moves with the blocks) instead of queueing behind the dry pool —
+    and the fleet decodes both concurrently."""
+    # pool: 2 usable blocks of 8 = exactly one 8+8 request per host
+    ecfg = EngineConfig(max_slots=2, max_seq_len=16, cache_backend="paged",
+                        block_size=8, n_blocks=3)
+    router = Router(CFG, params, ecfg, RouterConfig(n_hosts=2))
+    p = _prompts([8, 8])
+    r0 = router.submit(p[0], 8, session="a")
+    router.step()                                  # host 0's pool: dry
+    assert not router.engines[r0.hosts[0]].lease_headroom(8, 8)
+    r1 = router.submit(p[1], 8, session="a")       # pinned to a dry host
+    s = router.stats()["router"]
+    assert r1.hosts[0] != r0.hosts[0]              # spilled off the pin
+    assert s["spills"] == 1 and s["affinity_hits"] == 0
+    router.step()
+    # both decode concurrently — nobody waited for host 0's retire
+    assert all(e.scheduler.n_active == 1 for e in router.engines)
+    router.run_until_complete()
+    assert [list(r0.tokens), list(r1.tokens)] == _sequential(
+        params, p, [8, 8], cache_backend="paged", block_size=8, n_blocks=3,
+        max_seq_len=16, max_slots=2)
+    router.close()
+
+
+def test_router_rejects_when_no_host_accepts(params):
+    """The fleet door: a request no host can serve bounces (None, QueueFull
+    when strict), counted on the router ledger, and draining every host
+    closes the door entirely."""
+    router = Router(CFG, params, EngineConfig(max_slots=2, max_seq_len=16),
+                    RouterConfig(n_hosts=2))
+    assert router.submit(_prompts([8])[0], 20) is None     # over every budget
+    with pytest.raises(QueueFull):
+        router.submit(_prompts([8])[0], 20, strict=True)
+    ok = router.submit(_prompts([8])[0], 4)
+    assert ok is not None
+    router.drain(0)
+    router.drain(1)                                # whole fleet draining
+    assert router.submit(_prompts([4])[0], 4) is None
+    assert router.stats()["router"]["rejected"] == 3
+    router.run_until_complete()
+    assert len(ok.tokens) == 4
+    router.close()
+
+
+def test_drain_tolerates_direct_engine_submits(params):
+    """Requests submitted to an engine directly (bypassing the router) are
+    not router-placed; drain() must not crash on them — queued ones go back
+    to that engine's own queue (same Request object, so the caller's handle
+    completes) and in-flight ones finish in place."""
+    router = Router(CFG, params, EngineConfig(max_slots=1, max_seq_len=32),
+                    RouterConfig(n_hosts=2, handoff_threshold=0))
+    eng0 = router.engines[0]
+    d_active = eng0.submit(_prompts([5])[0], 6)    # direct: will hold the slot
+    router.step()
+    d_queued = eng0.submit(_prompts([4])[0], 4)    # direct: waits behind it
+    router.drain(0)                                # must not raise
+    assert router.stats()["router"]["handoffs"] == 0
+    assert eng0.scheduler.queue_depth == 1         # re-enqueued, not dropped
+    router.run_until_complete()
+    assert d_active.done and d_queued.done
+    assert len(d_active.tokens) == 6 and len(d_queued.tokens) == 4
+    router.close()
+
+
+def test_router_config_validation(params):
+    with pytest.raises(ValueError, match="n_hosts"):
+        Router(CFG, params, router_cfg=RouterConfig(n_hosts=0))
+    with pytest.raises(ValueError, match="handoff_threshold"):
+        Router(CFG, params,
+               router_cfg=RouterConfig(n_hosts=1, handoff_threshold=-1))
+    router = Router(CFG, params, EngineConfig(max_slots=1, max_seq_len=16),
+                    RouterConfig(n_hosts=1))
+    with pytest.raises(ValueError, match="no host"):
+        router.drain(5)
+    router.close()
+
+
+def test_engine_drain_hooks(params):
+    """The Engine-level hooks the router composes: would_accept mirrors
+    submit's door without side effects, evict_queued empties only the FIFO,
+    preempt retires only the named request's slot and scrubs its rows."""
+    eng = Engine(CFG, params, EngineConfig(max_slots=1, max_seq_len=32))
+    assert eng.would_accept(4, 4)
+    assert not eng.would_accept(4, 40)            # over the seq budget
+    assert not eng.would_accept(0, 4)
+    assert eng.lease_headroom(4, 4)               # contiguous: always now
+
+    r_active = eng.submit(_prompts([5])[0], 8)
+    eng.step()                                    # r_active holds the slot
+    r_q1 = eng.submit(_prompts([4])[0], 4)
+    r_q2 = eng.submit(_prompts([6])[0], 4)
+    evicted = eng.evict_queued()
+    assert evicted == [r_q1, r_q2]                # FIFO order preserved
+    assert all(r.state == RequestState.PREEMPTED for r in evicted)
+    assert eng.scheduler.queue_depth == 0
+    assert eng.scheduler.n_active == 1            # in-flight untouched
+
+    tokens_before = list(r_active.tokens)
+    preempted = eng.preempt(r_active.id)
+    assert preempted is r_active
+    assert preempted.tokens == tokens_before      # tokens stand
+    assert eng.scheduler.n_active == 0
+    assert eng.store.slot_index(0) == 0           # slot scrubbed
+    assert eng.metrics.preempted == 1 and eng.metrics.evicted == 2
+    with pytest.raises(KeyError):
+        eng.preempt(r_active.id)                  # no longer in flight
+    eng.close()
+
+
+def test_paged_available_now_tracks_occupancy(params):
+    """available_now (the spill signal) is occupancy-aware where fits is
+    total-capacity-aware: a fully-leased pool still fits the request class
+    but cannot lease it now; a retire flips it back."""
+    from repro.serving import make_store
+    store = make_store(CFG, 2, 16, backend="paged", block_size=8, n_blocks=3)
+    assert store.fits(8, 8) and store.available_now(8, 8)
+    assert store.lease(0, 8, 8)
+    assert store.fits(8, 8)                       # still servable in principle
+    assert not store.available_now(8, 8)          # but not right now
+    store.reset(0)
+    assert store.available_now(8, 8)
+
+
+def test_router_stats_three_levels(params):
+    """stats() carries the placement ledger (OPQ-shaped), fleet sums that
+    reconcile with per-host engine counters, and each host's own stats
+    (per-lane OPQ affinity included); format_router_stats renders it."""
+    prompts = _prompts([5, 9, 4, 7])
+    gens = [6, 5, 8, 3]
+    _, s, _ = _fleet_staggered(params, prompts, gens, drain_at=2)
+    assert s["router"]["hosts"] == 2 and s["router"]["draining"] == [0]
+    assert s["router"]["placed"] == 4
+    assert s["router"]["completed"] == 4
+    assert len(s["per_host"]) == 2
+    for key in ("completed", "tokens_generated", "decode_steps",
+                "preempted", "evicted"):
+        assert s["fleet"][key] == sum(h[key] for h in s["per_host"])
+    assert s["fleet"]["tokens_generated"] == sum(gens)
+    # every host dispatched through its own OPQ runtime
+    assert all(h["opq"]["issued"] > 0 for h in s["per_host"]
+               if h["decode_steps"] > 0)
+    line = format_router_stats(s)
+    assert "2 hosts" in line and "affinity" in line and "handoffs" in line
