@@ -27,6 +27,15 @@ host 0 on every multi-host cell — tokens asserted bit-identical to the
 single-engine run across the drain/handoff — recording wall-clock fleet
 throughput, affinity hits, spills, and handoff counts per host count: the
 regression record for reports/BENCH_router.json and the CI artifact.
+
+``--prefix-report PATH`` runs the shared-prefix radix-cache cell instead:
+the same request count served at 0% / 50% / 90% shared-prefix traffic
+through a prefix-cache engine (tokens asserted bit-identical to a
+prefix-cache-OFF paged engine at every share), recording per-cell TTFT and
+the prefill work actually dispatched (block-size chunk units — cached
+chunks are leased by refcount and skipped). Prefill dispatches are asserted
+strictly decreasing as the share rises: the regression record for
+reports/BENCH_prefix.json and the CI artifact.
 """
 
 from __future__ import annotations
@@ -382,6 +391,121 @@ def router_report(cfg, params, *, hosts_swept=(1, 2, 4), slots: int,
     return report
 
 
+def prefix_report(cfg, params, *, prompt_len: int, gen: int, block_size: int,
+                  requests: int, out_path: str) -> dict:
+    """The shared-prefix claim, measured: the same request count served at
+    0% / 50% / 90% shared-prefix traffic through a prefix-cache engine. At
+    each share the first request is cold (it populates the radix trie); the
+    rest lease the cached preamble blocks by refcount and run chunked
+    prefill only over the suffix, so the prefill work actually dispatched —
+    counted in block-size chunk units — drops as the share rises, and TTFT
+    drops with it. Every cell's token streams are asserted bit-identical to
+    a prefix-cache-OFF paged engine serving the same prompts: the reused
+    cache bits cost zero output fidelity. Chunk units are hard-asserted
+    strictly decreasing across shares; TTFT is recorded but not asserted
+    (wall-clock on shared CI is noisy)."""
+    import time
+
+    rng = np.random.default_rng(0)
+    max_seq = prompt_len + gen
+    bps = max_seq // block_size
+
+    def make_prompts(share_pct):
+        shared = int(round(prompt_len * share_pct / 100.0))
+        preamble = rng.integers(0, cfg.vocab, (shared,), dtype=np.int32)
+        return [np.concatenate([
+            preamble,
+            rng.integers(0, cfg.vocab, (prompt_len - shared,),
+                         dtype=np.int32)]) for _ in range(requests)]
+
+    def make_engine(prefix):
+        return Engine(cfg, params, EngineConfig(
+            max_slots=2, max_queue=requests, max_seq_len=max_seq,
+            cache_backend="paged", block_size=block_size,
+            n_blocks=3 * bps + 1, prefix_cache=prefix))
+
+    # warmup: compile the fused-prefill, suffix-prefill and decode
+    # executables (shared across every cell's engines via the engine step
+    # cache) so cells measure serving, not XLA
+    warm = make_engine(True)
+    for p in make_prompts(90)[:2]:
+        warm.submit(p, gen, strict=True)
+        warm.run_until_complete()
+    warm.close()
+
+    cells = []
+    prev_dispatch = None
+    for share in (0, 50, 90):
+        prompts = make_prompts(share)
+        hot = make_engine(True)
+        cold = make_engine(False)
+        toks_hot, toks_cold, ttfts = [], [], []
+        chunks_after_first = 0
+        for i, p in enumerate(prompts):
+            rh = hot.submit(p, gen, strict=True)
+            hot.run_until_complete()
+            rc = cold.submit(p, gen, strict=True)
+            cold.run_until_complete()
+            toks_hot.append(list(rh.tokens))
+            toks_cold.append(list(rc.tokens))
+            ttfts.append(rh.metrics.ttft_s)
+            if i == 0:
+                chunks_after_first = hot.metrics.prefill_chunks
+        assert toks_hot == toks_cold, (
+            f"prefix-hit tokens diverged from prefix-cache-off serving at "
+            f"{share}% shared-prefix traffic")
+        s = hot.stats()
+        # prefill work per WARM request (requests 2..N — request 1 always
+        # pays the cold full-prompt prefill that populates the trie)
+        dispatch = ((s["prefill_chunks"] - chunks_after_first)
+                    / (requests - 1))
+        if prev_dispatch is not None:
+            assert dispatch < prev_dispatch, (
+                f"prefill dispatches did not drop as shared-prefix share "
+                f"rose to {share}%: {dispatch} >= {prev_dispatch}")
+        prev_dispatch = dispatch
+        cells.append({
+            "share_pct": share,
+            "shared_prefix_tokens": int(round(prompt_len * share / 100.0)),
+            "prefill_chunk_units_per_warm_request": dispatch,
+            "prefill_chunk_units_total": s["prefill_chunks"],
+            "prefix_hits": s["prefix_hits"],
+            "prefix_blocks_reused": s["prefix_blocks_reused"],
+            "prefix_tokens_reused": s["prefix_tokens_reused"],
+            "cow_forks": s["cache"]["cow_forks"],
+            "prefix_evictions": s["cache"]["prefix_evictions"],
+            "cold_ttft_ms": 1e3 * ttfts[0],
+            "warm_ttft_ms": 1e3 * float(np.mean(ttfts[1:])),
+        })
+        hot.close()
+        cold.close()
+
+    report = {
+        "benchmark": "prefix_cache",
+        "arch": cfg.name,
+        "kv_cache_dtype": cfg.kv_cache_dtype,
+        "block_size": block_size,
+        "prompt_len": prompt_len,
+        "gen": gen,
+        "requests": requests,
+        "bit_identical_tokens": True,
+        "cells": cells,
+    }
+    for c in cells:
+        emit(f"prefix_s{c['share_pct']}", 1e3 * c["warm_ttft_ms"],
+             f"chunks/warm-req={c['prefill_chunk_units_per_warm_request']:.1f} "
+             f"hits={c['prefix_hits']} reused={c['prefix_blocks_reused']} "
+             f"ttft={c['warm_ttft_ms']:.1f}ms")
+    Path(out_path).parent.mkdir(parents=True, exist_ok=True)
+    Path(out_path).write_text(json.dumps(report, indent=2) + "\n")
+    trend = " -> ".join(
+        f"{c['prefill_chunk_units_per_warm_request']:.1f}" for c in cells)
+    print(f"# prefix: chunk units per warm request {trend} across shares "
+          f"0/50/90%, tokens bit-identical to prefix-cache-off")
+    print(f"# wrote {out_path}")
+    return report
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tinyllama-1.1b")
@@ -412,6 +536,16 @@ def main(argv=None) -> int:
     ap.add_argument("--drain-at", type=int, default=3,
                     help="fleet step at which --router-report drains host 0 "
                          "in every multi-host cell")
+    ap.add_argument("--prefix-report", default="",
+                    help="write the shared-prefix radix-cache JSON (TTFT + "
+                         "prefill chunk units dispatched at 0/50/90%% shared "
+                         "traffic, tokens asserted bit-identical to "
+                         "prefix-cache-off) here and skip the throughput "
+                         "sweep")
+    ap.add_argument("--prefix-prompt-len", type=int, default=40,
+                    help="prompt length for --prefix-report (its own flag: "
+                         "the shares 0/50/90%% must land on distinct "
+                         "full-block prefix lengths)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch).smoke().replace(quantize=args.quantize)
@@ -420,6 +554,18 @@ def main(argv=None) -> int:
         params = init_model(cfg, jax.random.PRNGKey(0))
         if args.quantize == "serve":
             params = tz.quantize_params(params, predicate=_quant_predicate)
+
+        if args.prefix_report:
+            if args.prefix_prompt_len % args.block_size:
+                ap.error(f"--prefix-prompt-len {args.prefix_prompt_len} must "
+                         f"be a multiple of --block-size {args.block_size} "
+                         "so the 0/50/90% shares land on distinct full-block "
+                         "prefix lengths")
+            prefix_report(
+                cfg, params, prompt_len=args.prefix_prompt_len, gen=8,
+                block_size=args.block_size, requests=max(args.requests, 4),
+                out_path=args.prefix_report)
+            return 0
 
         if args.router_report:
             router_report(

@@ -176,6 +176,46 @@ def prefill_with_cache_chunked(params: Dict, cfg: ArchConfig,
     (B, S, V), so admission pays exactly one row of logits per request.
     mrope configs are rejected upstream (Engine construction): the chunked
     scan does not thread positions3."""
+    first, kv = _chunked_prefill(params, cfg, tokens, last_index, chunk,
+                                 kv0=None, start_chunk=0)
+    return first, kv
+
+
+def prefill_with_cache_suffix(params: Dict, cfg: ArchConfig,
+                              tokens: jax.Array, last_index: jax.Array,
+                              chunk: int, kv0: Dict,
+                              start_chunk: jax.Array) -> Tuple[jax.Array, Dict]:
+    """Suffix admission prefill (shared-prefix cache hits): resume the
+    chunked scan mid-prompt. ``kv0`` seeds the K/V accumulators with cached
+    prefix entries gathered from the leased blocks (serving/store.py
+    ``gather_prefix_rows``) and the scan runs only chunks
+    ``start_chunk..n_chunks-1`` — TTFT for a hot prefix is O(suffix), the
+    skipped chunks having been PAID FOR by whichever cold admission cached
+    them.
+
+    Bit-identity with a cold admission holds structurally: the seeded
+    accumulator entries are the very bits the cold chunked scan would have
+    written (the cache stores the scan's own output, and the lease matched
+    the token ids that produced them); every recomputed chunk attends over
+    length-S rows with exact-zero masked tails, identical math to the cold
+    scan's corresponding chunk. ``start_chunk`` is a traced scalar — one
+    compiled executable per (B, bucket) serves every prefix length — and is
+    floored by the engine at the batch minimum so no row skips a chunk it
+    actually needs. The vocab projection still runs once, on the carried
+    ``last_index`` hidden state, which the engine guarantees lives at or
+    after the start chunk (``prefill_start <= prompt_len - 1``)."""
+    return _chunked_prefill(params, cfg, tokens, last_index, chunk,
+                            kv0=kv0, start_chunk=start_chunk)
+
+
+def _chunked_prefill(params: Dict, cfg: ArchConfig, tokens: jax.Array,
+                     last_index: jax.Array, chunk: int,
+                     kv0, start_chunk) -> Tuple[jax.Array, Dict]:
+    """Shared body of the chunked and suffix prefill steps: one chunk-body,
+    scanned from chunk 0 with zeroed accumulators (cold) or fori_loop'd from
+    ``start_chunk`` with cache-seeded accumulators (prefix hit) — the per-
+    chunk math is the same trace either way, which is what keeps the two
+    paths bit-identical chunk for chunk."""
     B, S = tokens.shape
     if S % chunk:
         raise ValueError(f"chunk {chunk} must divide the bucket length {S}")
@@ -183,12 +223,18 @@ def prefill_with_cache_chunked(params: Dict, cfg: ArchConfig,
     int8_kv = cfg.kv_cache_dtype == "int8" and cfg.family in ("dense", "moe", "vlm")
     cdt = jnp.int8 if int8_kv else L.cdtype(cfg)
     nl = cfg.n_layers
-    kv = {"k": jnp.zeros((nl, B, S, cfg.n_kv, cfg.hd), cdt),
-          "v": jnp.zeros((nl, B, S, cfg.n_kv, cfg.hd), cdt)}
-    if int8_kv:
-        kv["k_scale"] = jnp.full((nl, B, S, cfg.n_kv), 1e-12, jnp.float32)
-        kv["v_scale"] = jnp.full((nl, B, S, cfg.n_kv), 1e-12, jnp.float32)
     names = ("k", "v", "k_scale", "v_scale") if int8_kv else ("k", "v")
+    if kv0 is None:
+        kv = {"k": jnp.zeros((nl, B, S, cfg.n_kv, cfg.hd), cdt),
+              "v": jnp.zeros((nl, B, S, cfg.n_kv, cfg.hd), cdt)}
+        if int8_kv:
+            kv["k_scale"] = jnp.full((nl, B, S, cfg.n_kv), 1e-12, jnp.float32)
+            kv["v_scale"] = jnp.full((nl, B, S, cfg.n_kv), 1e-12, jnp.float32)
+    else:
+        kv = {n: kv0[n].astype(
+            jnp.int8 if n in ("k", "v") and int8_kv else
+            (jnp.float32 if n.endswith("_scale") else cdt))
+            for n in names}
     last_x0 = jnp.zeros((B, cfg.d_model), L.cdtype(cfg))
 
     def chunk_body(carry, c):
@@ -233,10 +279,18 @@ def prefill_with_cache_chunked(params: Dict, cfg: ArchConfig,
             xc, jnp.broadcast_to(idx[:, None, None],
                                  (B, 1, xc.shape[-1])), axis=1)[:, 0]
         last_x = jnp.where(in_chunk[:, None], row, last_x)
-        return (kv, last_x), None
+        return kv, last_x
 
-    (kv, last_x), _ = jax.lax.scan(chunk_body, (kv, last_x0),
-                                   jnp.arange(n_chunks))
+    if kv0 is None:
+        (kv, last_x), _ = jax.lax.scan(
+            lambda carry, c: (chunk_body(carry, c), None),
+            (kv, last_x0), jnp.arange(n_chunks))
+    else:
+        # traced start bound: fori_loop runs chunks start_chunk..n_chunks-1,
+        # one compiled program for every prefix length of this (B, S) shape
+        kv, last_x = jax.lax.fori_loop(
+            start_chunk, n_chunks,
+            lambda c, carry: chunk_body(carry, c), (kv, last_x0))
     logits = M._logits(params, cfg, last_x[:, None, :])     # (B, 1, V)
     first = jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
     return first, kv

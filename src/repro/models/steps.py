@@ -125,6 +125,21 @@ def make_chunked_prefill_step(cfg: ArchConfig, chunk: int) -> Callable:
     return prefill_step
 
 
+def make_suffix_prefill_step(cfg: ArchConfig, chunk: int) -> Callable:
+    """Suffix admission step (serving, shared-prefix cache hits): the chunked
+    prefill resumed mid-prompt. Takes the usual (params, tokens, last_index)
+    plus ``kv0`` (cache-layout accumulators pre-seeded with the leased prefix
+    blocks' entries, serving/store.py ``gather_prefix_rows``) and a traced
+    ``start_chunk`` — chunks before it are skipped outright, so a hot-prefix
+    admission pays O(suffix) prefill while emitting tokens and K/V
+    bit-identical to a cold one (models/serve.py
+    ``prefill_with_cache_suffix``)."""
+    def prefill_step(params, tokens, last_index, kv0, start_chunk):
+        return SV.prefill_with_cache_suffix(params, cfg, tokens, last_index,
+                                            chunk, kv0, start_chunk)
+    return prefill_step
+
+
 def make_decode_step(cfg: ArchConfig) -> Callable:
     def decode_step(params, cache, batch):
         logits, cache = SV.decode(params, cfg, cache, batch)

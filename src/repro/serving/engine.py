@@ -168,6 +168,20 @@ class EngineConfig:
         ``max_seq_len``, lifting the long-prompt admission cap. Bit-identical
         to single-shot fused prefill. Rejected for recurrent families (their
         masked-scan prefill is already linear) and mrope position encoding.
+    prefix_cache
+        Paged backend only (added PR 6): shared-prefix radix cache. The
+        store keeps a refcounted trie of full prompt blocks
+        (serving/store.py); a lease whose prompt walks onto cached blocks
+        leases them by refcount and admission dispatches the SUFFIX prefill
+        step only over the unmatched chunks (block-size-wide, traced start —
+        TTFT for a hot prefix is O(suffix)). Copy-on-write forks the
+        divergence block before any slot write; retire scrubs only blocks
+        whose refcount hits zero; unreferenced cached prefixes LRU-evict
+        under pool pressure, so caching never refuses an admission the bare
+        pool could serve. Tokens and cache bits stay bit-identical to cold
+        admission (tests/test_prefix_cache.py). Requires ``block_size`` to
+        divide every prefill bucket; rejected for mrope (the suffix scan is
+        the chunked scan).
     """
 
     max_slots: int = 4
@@ -182,11 +196,13 @@ class EngineConfig:
     paged_native: bool = False
     paged_kernel: bool = False
     prefill_chunk: Optional[int] = None
+    prefix_cache: bool = False
 
 
 @functools.lru_cache(maxsize=None)
 def _jitted_steps(cfg: ArchConfig, kind: str, max_seq_len: int = 0,
-                  native: bool = False, kernel: bool = False, chunk: int = 0):
+                  native: bool = False, kernel: bool = False, chunk: int = 0,
+                  prefix_chunk: int = 0):
     """Compiled step fns shared across Engine instances of the same
     (config, store kind, decode/prefill mode) — rebuilding an engine (tests,
     benchmark sweeps) reuses XLA executables. ``max_seq_len`` keys the cache
@@ -212,10 +228,17 @@ def _jitted_steps(cfg: ArchConfig, kind: str, max_seq_len: int = 0,
         prefill = jax.jit(ST.make_prefill_with_cache_step(cfg))
     prefill_chunked = (jax.jit(ST.make_chunked_prefill_step(cfg, chunk))
                        if chunk else None)
+    # ``prefix_chunk`` (== the paged block size) builds the suffix prefill
+    # for prefix-cache hits: the chunked scan with a TRACED start chunk and
+    # cache-seeded accumulators, so one executable per (B, bucket) serves
+    # every matched-prefix length
+    prefill_suffix = (
+        jax.jit(ST.make_suffix_prefill_step(cfg, prefix_chunk))
+        if prefix_chunk else None)
     decode_fn = (ST.make_paged_decode_step(cfg, use_kernel=kernel)
                  if native else ST.make_decode_step(cfg))
     decode = jax.jit(decode_fn, donate_argnums=(1,))
-    return prefill, prefill_chunked, decode
+    return prefill, prefill_chunked, prefill_suffix, decode
 
 
 class _Ready:
@@ -256,6 +279,16 @@ class Engine:
             raise ValueError(
                 f"paged_native requires cache_backend='paged', got "
                 f"{self.ecfg.cache_backend!r}")
+        if self.ecfg.prefix_cache:
+            if self.ecfg.cache_backend != "paged":
+                raise ValueError(
+                    f"prefix_cache (shared-prefix radix cache) requires "
+                    f"cache_backend='paged', got {self.ecfg.cache_backend!r}")
+            if cfg.rope_kind == "mrope":
+                raise ValueError(
+                    "prefix_cache does not support mrope position encoding "
+                    "(the suffix prefill is the chunked scan, which does not "
+                    "thread positions3)")
         buckets = self.ecfg.buckets or default_buckets(self.ecfg.max_seq_len)
         chunk = self.ecfg.prefill_chunk
         if chunk:
@@ -289,17 +322,29 @@ class Engine:
             raise ValueError(
                 f"largest prefill bucket {max(buckets)} exceeds "
                 f"max_seq_len {self.ecfg.max_seq_len} (the slot-row length)")
+        if self.ecfg.prefix_cache:
+            bad = [b for b in buckets if b % self.ecfg.block_size]
+            if bad:
+                # the suffix prefill scans block-size-wide chunks, so a
+                # bucket must be a whole number of them to resume mid-prompt
+                raise ValueError(
+                    f"prefix_cache requires block_size "
+                    f"{self.ecfg.block_size} to divide every prefill bucket "
+                    f"(got {bad})")
         self.scheduler = Scheduler(self.ecfg.max_slots, buckets)
         self.store: SlotStore = make_store(
             cfg, self.ecfg.max_slots, self.ecfg.max_seq_len,
             backend=self.ecfg.cache_backend,
             block_size=self.ecfg.block_size, n_blocks=self.ecfg.n_blocks,
-            native=self.ecfg.paged_native)
-        self._prefill, self._prefill_chunked, self._decode = _jitted_steps(
+            native=self.ecfg.paged_native,
+            prefix_cache=self.ecfg.prefix_cache)
+        (self._prefill, self._prefill_chunked, self._prefill_suffix,
+         self._decode) = _jitted_steps(
             cfg, self.store.kind,
             self.ecfg.max_seq_len if self.store.kind == "recurrent" else 0,
             native=self.ecfg.paged_native, kernel=self.ecfg.paged_kernel,
-            chunk=chunk or 0)
+            chunk=chunk or 0,
+            prefix_chunk=self.ecfg.block_size if self.ecfg.prefix_cache else 0)
         self._owns_opq = opq is None and self.ecfg.use_opq
         self.opq = (OPQ() if self._owns_opq else opq) if self.ecfg.use_opq else None
         self._params_buf = Buffer(params, name="params")
@@ -391,11 +436,31 @@ class Engine:
     def _try_lease(self, slot: int, req: Request) -> bool:
         """Reserve store capacity for a request before the scheduler commits
         the slot. A False return (paged block-pool dry) leaves the request at
-        the queue head — admission backpressure, never mid-flight corruption."""
-        ok = self.store.lease(slot, len(req.prompt), req.max_new_tokens)
+        the queue head — admission backpressure, never mid-flight corruption.
+        With the prefix cache on, the lease also walks the radix trie with
+        the prompt tokens; matched cached blocks are leased by refcount and
+        their prefill skipped (``_admit`` reads ``prefix_lease_info``)."""
+        ok = self.store.lease(
+            slot, len(req.prompt), req.max_new_tokens,
+            tokens=req.prompt if self.ecfg.prefix_cache else None)
         if not ok:
             self.metrics.admissions_deferred += 1
+        elif self.ecfg.prefix_cache:
+            info = self.store.prefix_lease_info(slot)
+            if info["hit"]:
+                self.metrics.prefix_hits += 1
+                self.metrics.prefix_blocks_reused += info["shared_blocks"]
+                self.metrics.prefix_tokens_reused += info["prefill_start"]
         return ok
+
+    def _prefix_group_key(self, slot: int, req: Request) -> int:
+        """Admission group key under the prefix cache: the slot's suffix
+        start CHUNK. A batched suffix prefill can only skip what every row
+        skips, so rows with different cached-prefix depths dispatch
+        separately — a cold arrival never forces a hot one to recompute its
+        cached prefix (scheduler.plan_admissions ``group_key``)."""
+        info = self.store.prefix_lease_info(slot)
+        return info["prefill_start"] // self.ecfg.block_size
 
     def _admit(self) -> int:
         """Fused admission: ONE dispatched prefill forward per bucket batch
@@ -411,7 +476,9 @@ class Engine:
         deferral with an idle engine)."""
         pending = []
         admitted = 0
-        for bucket, pairs in self.scheduler.plan_admissions(self._try_lease):
+        group_key = self._prefix_group_key if self.ecfg.prefix_cache else None
+        for bucket, pairs in self.scheduler.plan_admissions(self._try_lease,
+                                                            group_key):
             admitted += len(pairs)
             toks = np.zeros((len(pairs), bucket), np.int32)
             last = np.zeros((len(pairs),), np.int32)
@@ -419,14 +486,37 @@ class Engine:
                 toks[i, :len(req.prompt)] = req.prompt
                 last[i] = len(req.prompt) - 1
                 req.metrics.admitted_s = now()
+            # prefix-cache hit groups resume the chunked scan mid-prompt:
+            # every row in the group shares this start chunk (the scheduler
+            # grouped by it), so no row recomputes a cached position and no
+            # row skips one it needs
+            start_chunk = (self._prefix_group_key(*pairs[0])
+                           if self.ecfg.prefix_cache else 0)
             chunked = bucket in self._chunked_buckets
-            step_fn = self._prefill_chunked if chunked else self._prefill
-            flag = (f"prefill_chunked/{bucket}" if chunked
-                    else f"prefill/{bucket}")
-            fut = self._dispatch_async(
-                lambda p, t, li, fn=step_fn: fn(p, t, li),
-                self._params_buf, Buffer(toks, name=f"prefill{bucket}"),
-                Buffer(last), flags=flag)
+            if start_chunk > 0:
+                kv0 = self.store.gather_prefix_rows(
+                    [slot for slot, _ in pairs], bucket)
+                fut = self._dispatch_async(
+                    lambda p, t, li, k0, fn=self._prefill_suffix,
+                    sc=start_chunk: fn(p, t, li, k0, sc),
+                    self._params_buf, Buffer(toks, name=f"prefill{bucket}"),
+                    Buffer(last), self._resident(kv0, "prefix-kv0"),
+                    flags=f"prefill_prefix/{bucket}")
+                self.metrics.prefill_chunks += (
+                    bucket // self.ecfg.block_size - start_chunk)
+            else:
+                step_fn = self._prefill_chunked if chunked else self._prefill
+                flag = (f"prefill_chunked/{bucket}" if chunked
+                        else f"prefill/{bucket}")
+                fut = self._dispatch_async(
+                    lambda p, t, li, fn=step_fn: fn(p, t, li),
+                    self._params_buf, Buffer(toks, name=f"prefill{bucket}"),
+                    Buffer(last), flags=flag)
+                if self.ecfg.prefix_cache:
+                    # cold groups compute every block-size chunk — the unit
+                    # the prefix benchmark counts dispatched prefill work in
+                    self.metrics.prefill_chunks += (
+                        bucket // self.ecfg.block_size)
             pending.append((pairs, last, fut))
         for pairs, last, fut in pending:
             t0 = now()

@@ -85,6 +85,18 @@ class EngineMetrics:
     decode_steps: int = 0
     prefill_batches: int = 0
     prefill_tokens: int = 0                    # unpadded prompt tokens prefilled
+    prefill_chunks: int = 0                    # block-size prefill chunks
+                                               # actually computed (prefix-
+                                               # cache engines only: cached
+                                               # chunks are skipped, so this
+                                               # is the dispatched-work unit
+                                               # BENCH_prefix.json tracks)
+    prefix_hits: int = 0                       # leases that matched cached
+                                               # prefix blocks (or a COW fork)
+    prefix_blocks_reused: int = 0              # whole cached blocks leased by
+                                               # refcount instead of prefilled
+    prefix_tokens_reused: int = 0              # prompt positions whose prefill
+                                               # was skipped outright
     prefill_wait_s: float = 0.0                # wall time blocked on prefill forwards
     seed_write_s: float = 0.0                  # wall time in batched slot writes
     steps: int = 0                             # engine iterations observed
@@ -126,6 +138,10 @@ class EngineMetrics:
             "decode_steps": self.decode_steps,
             "prefill_batches": self.prefill_batches,
             "prefill_tokens": self.prefill_tokens,
+            "prefill_chunks": self.prefill_chunks,
+            "prefix_hits": self.prefix_hits,
+            "prefix_blocks_reused": self.prefix_blocks_reused,
+            "prefix_tokens_reused": self.prefix_tokens_reused,
             "prefill_wait_s": self.prefill_wait_s,
             "seed_write_s": self.seed_write_s,
             "sustained_tok_s": self.sustained_tok_s(),
@@ -160,6 +176,12 @@ def format_memory_stats(ms: Dict) -> str:
         else:
             view_kib = ms.get("decode_view_bytes", 0) / 1024.0
             tail = f"+{view_kib:.1f} KiB transient decode view"
+        if "prefix_cached_blocks" in ms:
+            tail += (f" | prefix: {ms['prefix_hits']} hits, "
+                     f"{ms['prefix_blocks_reused']} blocks reused, "
+                     f"{ms['prefix_cached_blocks']} cached, "
+                     f"{ms['prefix_evictions']} evicted, "
+                     f"{ms['cow_forks']} COW forks")
         return (f"paged: {kib:.1f} KiB pool | block={ms['block_size']} tok | "
                 f"{ms['blocks_used']}/{ms['blocks_total']} blocks used "
                 f"({ms['blocks_free']} free) | {tail}")

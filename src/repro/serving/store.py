@@ -60,6 +60,28 @@ Backends
                       K/V) with pristine reset — makes ssm/hybrid families
                       servable through the same engine.
 
+Shared-prefix radix cache (paged backend, ``prefix_cache=True``): most
+production traffic shares system prompts and few-shot preambles, and
+re-prefilling a hot prefix for every request wastes exactly the tensor
+throughput the accelerator should be spending on new tokens. The paged store
+already has block granularity, so prefix reuse is one refcount + trie layer:
+every FULL block of an admitted prompt is registered in a radix trie keyed on
+chained token-id block hashes (SGLang-style); a later ``lease`` walks the trie
+with the new prompt's tokens and LEASES every matched block by bumping its
+refcount instead of drawing a fresh one — those positions skip prefill
+entirely, and the engine runs the chunked scan only over the suffix
+(models/serve.py ``prefill_with_cache_suffix``). Shared blocks are immutable:
+admission writes redirect shared positions to the null block, and a prompt
+that diverges MID-block copy-on-write forks the divergence block into a fresh
+private block before the slot ever writes into it. ``reset`` decrements
+refcounts and scrubs/frees ONLY blocks that hit zero — blocks still referenced
+by other slots, and trie-cached blocks awaiting their next hit, survive
+retire untouched. Under pool pressure, unreferenced cached prefixes are
+evicted leaf-first in LRU order, so caching never steals capacity from live
+admissions. Block lifecycle invariant (property-tested): every non-null block
+is in exactly one of {free, referenced (refcount > 0), cached-unreferenced};
+``debug_block_census`` exposes the partition.
+
 Leaf convention (all backends): the ``index`` leaf carries the slot on axis 0
 (shape ``(B,)``); every other leaf carries it on axis 1 (``(L, B, ...)``).
 ``pristine_value`` is the single definition of each leaf's "empty" fill —
@@ -72,6 +94,7 @@ from __future__ import annotations
 import abc
 import functools
 import math
+import zlib
 from typing import Dict, List, Optional, Sequence
 
 import jax
@@ -228,6 +251,50 @@ def _paged_reset(cache, blocks, slot):
     return out
 
 
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _scrub_blocks(cache, blocks):
+    """Scrub a batch of freed pool blocks back to the pristine pattern —
+    the block-granular half of :func:`_paged_reset`, used when blocks free
+    OUTSIDE a slot retire (LRU eviction of cached prefixes). ``blocks`` is
+    padded with 0 (the null block) to a fixed length so evictions share a
+    bounded set of compiled shapes."""
+    out = {}
+    for name, leaf in cache.items():
+        if name in ("index", "tables"):
+            out[name] = leaf
+        else:
+            fill = jnp.full((leaf.shape[0], blocks.shape[0]) + leaf.shape[2:],
+                            pristine_value(name), leaf.dtype)
+            out[name] = leaf.at[:, blocks].set(fill)
+    return out
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _copy_block(cache, src, dst):
+    """Copy one pool block's contents (every K/V leaf, scales included) from
+    ``src`` to ``dst`` — the copy-on-write fork: a prompt diverging mid-block
+    gets a private copy of the shared divergence block before its slot ever
+    writes into it, so the cached original stays immutable."""
+    out = {}
+    for name, leaf in cache.items():
+        if name in ("index", "tables"):
+            out[name] = leaf
+        else:
+            out[name] = leaf.at[:, dst].set(leaf[:, src])
+    return out
+
+
+@jax.jit
+def _gather_prefix_rows(cache, tables):
+    """Gather a (B, nb) block-table excerpt into contiguous K/V rows
+    (L, B, nb*bs, ...) — the suffix-prefill accumulator seed: matched prefix
+    blocks' entries land at their sequence positions, so the chunked scan can
+    resume mid-prompt (models/serve.py ``prefill_with_cache_suffix``)."""
+    pool = {name: leaf for name, leaf in cache.items()
+            if name not in ("index", "tables")}
+    return A.gather_block_kv(pool, tables)
+
+
 @jax.jit
 def _paged_gather(cache):
     """Pool → contiguous-layout view {k, v, (scales), index}: every slot's
@@ -306,10 +373,14 @@ class SlotStore(abc.ABC):
         head-of-line-blocking everything behind it."""
         return True
 
-    def lease(self, slot: int, prompt_len: int, max_new_tokens: int) -> bool:
+    def lease(self, slot: int, prompt_len: int, max_new_tokens: int,
+              tokens: Optional[np.ndarray] = None) -> bool:
         """Reserve capacity for a request on ``slot``. Returns False when the
         backend cannot hold it right now (admission backpressure) — the
-        scheduler then leaves the request queued, FIFO order intact."""
+        scheduler then leaves the request queued, FIFO order intact.
+        ``tokens`` (the prompt ids) lets a prefix-aware backend match the
+        prompt against cached content at reservation time; backends without
+        a prefix cache ignore it."""
         return True
 
     def available_now(self, prompt_len: int, max_new_tokens: int) -> bool:
@@ -431,13 +502,21 @@ class PagedKVStore(SlotStore):
     mid-flight, and ``lease`` returning False is clean backpressure. The pool
     (``n_blocks``) can therefore be sized well below the contiguous
     n_slots x max_seq_len footprint for short-request mixes.
+
+    With ``prefix_cache=True`` the store additionally keeps a shared-prefix
+    radix cache over the pool (module docstring): per-block refcounts, a trie
+    of full prompt blocks keyed on chained token-id hashes, copy-on-write
+    forks at mid-block divergence, and LRU eviction of unreferenced cached
+    prefixes under pool pressure. ``lease`` then takes the prompt ``tokens``
+    and leases matched blocks by refcount instead of drawing fresh ones —
+    ``prefix_lease_info`` tells the engine how much prefill to skip.
     """
 
     kind = "paged"
 
     def __init__(self, cfg: ArchConfig, n_slots: int, max_seq_len: int,
                  *, block_size: int = 16, n_blocks: Optional[int] = None,
-                 native: bool = False):
+                 native: bool = False, prefix_cache: bool = False):
         if cfg.family not in DENSE_FAMILIES:
             raise ValueError(
                 f"PagedKVStore supports dense-family caches, not {cfg.family}")
@@ -462,6 +541,30 @@ class PagedKVStore(SlotStore):
         self._free: List[int] = list(range(1, self.n_blocks))[::-1]
         self._leased: Dict[int, List[int]] = {}
         self._tables = np.zeros((n_slots, self.blocks_per_slot), np.int32)
+        # ---- shared-prefix radix cache state (maintained even when the
+        # feature is off: refcounts make reset's scrub decision uniform) ----
+        self.prefix_cache = prefix_cache
+        # per-block lease refcount: 0 = free or cached-unreferenced,
+        # n>0 = leased by n slots (shared prefix blocks can exceed 1)
+        self._ref = np.zeros(self.n_blocks, np.int64)
+        # radix trie over FULL prompt blocks. Node 0 is the root (no block);
+        # each other node owns exactly one pool block holding one full block
+        # of some previously admitted prompt. Children are keyed by the
+        # child block's token hash; stored token ids disambiguate collisions.
+        self._nodes: Dict[int, Dict] = {
+            0: {"parent": -1, "hash": 0, "block": 0, "tokens": None,
+                "kids": {}, "children": 0, "tick": 0}}
+        self._block_node: Dict[int, int] = {}     # pool block -> trie node
+        self._node_ids = 1
+        self._lru_tick = 0
+        # per-slot prefix-lease metadata (prefix mode only): what matched,
+        # where suffix prefill starts, whether a COW fork happened
+        self._slot_meta: Dict[int, Dict] = {}
+        self.prefix_hits = 0
+        self.prefix_blocks_reused = 0
+        self.prefix_tokens_reused = 0
+        self.prefix_evictions = 0
+        self.cow_forks = 0
         # table uploads are batched: leases mutate only the host mirror and
         # mark it dirty; _sync_tables uploads ONCE when the device next needs
         # the tables (decode/gather) — one upload per admission round instead
@@ -485,17 +588,144 @@ class PagedKVStore(SlotStore):
         return (self._blocks_needed(prompt_len, max_new_tokens)
                 <= min(self.n_blocks - 1, self.blocks_per_slot))
 
+    def _n_evictable(self) -> int:
+        """Blocks reclaimable from the prefix cache: cached blocks no live
+        lease references. Counts the whole unreferenced set, not just current
+        leaves — evicting leaf-first exposes parents, so the full set IS
+        reachable by the eviction loop whenever nothing holds a reference
+        into it (the zero-active livelock case the engine guards)."""
+        if not self.prefix_cache:
+            return 0
+        return sum(1 for b in self._block_node if self._ref[b] == 0)
+
     def available_now(self, prompt_len: int, max_new_tokens: int) -> bool:
         # the router's spill signal: lease would refuse (pool dry) even
-        # though fits() says the request is servable in principle
+        # though fits() says the request is servable in principle. Cached
+        # but unreferenced prefix blocks count as available — lease evicts
+        # them before refusing, so caching never manufactures backpressure.
         need = self._blocks_needed(prompt_len, max_new_tokens)
-        return need <= len(self._free) and need <= self.blocks_per_slot
+        return (need <= len(self._free) + self._n_evictable()
+                and need <= self.blocks_per_slot)
 
-    def lease(self, slot: int, prompt_len: int, max_new_tokens: int) -> bool:
+    # ----------------------------------------------------- prefix radix trie
+
+    def _tick(self) -> int:
+        self._lru_tick += 1
+        return self._lru_tick
+
+    def _block_hash(self, blk: np.ndarray) -> int:
+        return zlib.crc32(np.ascontiguousarray(blk, np.int32).tobytes())
+
+    def _match_prefix(self, tokens: np.ndarray, prompt_len: int):
+        """Walk the trie with the prompt's full blocks. Returns
+        ``(matched_node_ids, fork_src_block)``: the chain of cached nodes
+        whose blocks hold the prompt's leading full blocks verbatim, plus —
+        when every full block matched AND the prompt's partial tail (r =
+        prompt_len mod bs tokens) matches the first r tokens of some cached
+        child — that child's block as the copy-on-write fork source."""
+        node, matched = 0, []
+        full = prompt_len // self.block_size
+        for i in range(full):
+            blk = tokens[i * self.block_size:(i + 1) * self.block_size]
+            kid = self._nodes[node]["kids"].get(self._block_hash(blk))
+            if kid is None or not np.array_equal(self._nodes[kid]["tokens"], blk):
+                return matched, None          # divergence at a block boundary
+            matched.append(kid)
+            node = kid
+        r = prompt_len - full * self.block_size
+        if r:
+            # mid-block divergence: any cached child whose first r tokens
+            # equal the prompt's tail is a fork source — its block already
+            # holds the tail's K/V entries bit-exactly (freshest tick wins)
+            best = None
+            for kid in self._nodes[node]["kids"].values():
+                nd = self._nodes[kid]
+                if np.array_equal(nd["tokens"][:r], tokens[full * self.block_size:
+                                                           prompt_len]):
+                    if best is None or nd["tick"] > self._nodes[best]["tick"]:
+                        best = kid
+            if best is not None:
+                return matched, self._nodes[best]["block"]
+        return matched, None
+
+    def _evict_cached(self, n: int, pinned: frozenset) -> None:
+        """Free up to ``n`` pool blocks by evicting unreferenced cached
+        prefixes, least-recently-used LEAF first (an interior node only
+        becomes evictable once its children are gone — evicting it earlier
+        would orphan them). ``pinned`` protects blocks the in-progress lease
+        is about to reference. Evicted blocks are scrubbed to pristine before
+        rejoining the free list — a cached block re-leased as fresh must be
+        bit-equal to a never-used one."""
+        freed: List[int] = []
+        while len(freed) < n:
+            best = None
+            for nid, nd in self._nodes.items():
+                if (nid == 0 or nd["children"] or nd["block"] in pinned
+                        or self._ref[nd["block"]] > 0):
+                    continue
+                if best is None or nd["tick"] < self._nodes[best]["tick"]:
+                    best = nid
+            if best is None:
+                break
+            nd = self._nodes.pop(best)
+            parent = self._nodes[nd["parent"]]
+            del parent["kids"][nd["hash"]]
+            parent["children"] -= 1
+            del self._block_node[nd["block"]]
+            freed.append(nd["block"])
+            self.prefix_evictions += 1
+        if freed:
+            self._scrub_free(freed)
+
+    def _scrub_free(self, blocks: List[int]) -> None:
+        """Scrub freed blocks to pristine and return them to the free list —
+        chunked to ``blocks_per_slot``-sized shapes (null-padded) so scrubs
+        share the retire path's compiled executables."""
+        w = self.blocks_per_slot
+        for i in range(0, len(blocks), w):
+            chunk = blocks[i:i + w]
+            padded = chunk + [0] * (w - len(chunk))
+            self.cache = _scrub_blocks(self.cache,
+                                       jnp.asarray(padded, jnp.int32))
+        self._free.extend(blocks)
+
+    # ----------------------------------------------------------------- lease
+
+    def lease(self, slot: int, prompt_len: int, max_new_tokens: int,
+              tokens: Optional[np.ndarray] = None) -> bool:
         need = self._blocks_needed(prompt_len, max_new_tokens)
-        if need > len(self._free) or need > self.blocks_per_slot:
+        if need > self.blocks_per_slot:
             return False
-        blocks = [self._free.pop() for _ in range(need)]
+        shared_nodes: List[int] = []
+        fork_src: Optional[int] = None
+        if self.prefix_cache and tokens is not None:
+            tokens = np.asarray(tokens, np.int32).reshape(-1)
+            assert len(tokens) == prompt_len
+            shared_nodes, fork_src = self._match_prefix(tokens, prompt_len)
+        shared = [self._nodes[n]["block"] for n in shared_nodes]
+        need_fresh = need - len(shared)
+        if need_fresh > len(self._free):
+            pinned = frozenset(shared if fork_src is None
+                               else shared + [fork_src])
+            self._evict_cached(need_fresh - len(self._free), pinned)
+        if need_fresh > len(self._free):
+            return False
+        tick = self._tick()
+        for nid in shared_nodes:
+            self._nodes[nid]["tick"] = tick
+            self._ref[self._nodes[nid]["block"]] += 1
+        fresh: List[int] = []
+        for _ in range(need_fresh):
+            b = self._free.pop()
+            # teeth: a block handed out as fresh must be wholly unowned —
+            # leasing a still-referenced or still-cached block as private
+            # would let one slot scribble over another's (or the cache's) bits
+            assert self._ref[b] == 0 and b not in self._block_node, (
+                f"block {b} leased as fresh while referenced/cached "
+                f"(ref={self._ref[b]})")
+            self._ref[b] = 1
+            fresh.append(b)
+        blocks = shared + fresh
         self._leased[slot] = blocks
         self._tables[slot, :] = 0
         self._tables[slot, :need] = blocks
@@ -503,7 +733,47 @@ class PagedKVStore(SlotStore):
         # admission round, not one per lease; admission writes themselves
         # address blocks through the host mirror)
         self._tables_dirty = True
+        shared_tok = len(shared) * self.block_size
+        matched_tok = shared_tok
+        if fork_src is not None:
+            # COW fork: the divergence block's leading tokens are the
+            # prompt's tail — copy it into the slot's first private block so
+            # those entries exist without recomputation AND the cached
+            # original stays immutable when decode writes mid-block
+            self.cache = _copy_block(self.cache, jnp.int32(fork_src),
+                                     jnp.int32(fresh[0]))
+            self.cow_forks += 1
+            matched_tok = prompt_len
+        if self.prefix_cache and tokens is not None:
+            # always recompute at least the last prompt position: admission
+            # must produce the first token's logits from this dispatch
+            start = min(matched_tok, prompt_len - 1)
+            self._slot_meta[slot] = {
+                "tokens": tokens.copy(), "prompt_len": prompt_len,
+                "shared_tokens": shared_tok, "prefill_start": start,
+                "forked": fork_src is not None, "committed": False}
+            if shared or fork_src is not None:
+                self.prefix_hits += 1
+                self.prefix_blocks_reused += len(shared)
+                self.prefix_tokens_reused += start
         return True
+
+    def prefix_lease_info(self, slot: int) -> Dict:
+        """What the prefix cache did for this slot's lease: ``hit``,
+        ``shared_blocks``/``shared_tokens`` (whole cached blocks leased by
+        refcount — immutable, never written by this slot), ``forked``
+        (a COW fork supplied the mid-block tail), and ``prefill_start`` —
+        the first sequence position admission must still compute. The engine
+        floors its suffix dispatch at ``prefill_start // block_size`` chunks."""
+        meta = self._slot_meta.get(slot)
+        if meta is None:
+            return {"hit": False, "shared_blocks": 0, "shared_tokens": 0,
+                    "forked": False, "prefill_start": 0}
+        return {"hit": meta["shared_tokens"] > 0 or meta["forked"],
+                "shared_blocks": meta["shared_tokens"] // self.block_size,
+                "shared_tokens": meta["shared_tokens"],
+                "forked": meta["forked"],
+                "prefill_start": meta["prefill_start"]}
 
     def _sync_tables(self) -> None:
         if self._tables_dirty:
@@ -514,39 +784,119 @@ class PagedKVStore(SlotStore):
     # ------------------------------------------------------------- lifecycle
 
     def _phys_off(self, slots: np.ndarray, length: int):
-        """(B, length) physical block + offset for sequence positions
-        0..length-1 of each slot, through the block tables."""
+        """(B, length) physical block + offset (host arrays) for sequence
+        positions 0..length-1 of each slot, through the block tables."""
         pos = np.arange(length)
         blk, off = pos // self.block_size, pos % self.block_size
-        phys = self._tables[slots][:, blk]                  # (B, length)
-        return (jnp.asarray(phys, jnp.int32),
-                jnp.asarray(np.broadcast_to(off, phys.shape), jnp.int32))
+        phys = self._tables[slots][:, blk].copy()           # (B, length)
+        return phys, np.broadcast_to(off, phys.shape)
+
+    def _redirect_shared(self, slots_np: np.ndarray,
+                         phys: np.ndarray, length: int) -> np.ndarray:
+        """Shared prefix blocks are immutable: point each slot's shared
+        positions at the null block so the admission scatter's writes there
+        land harmlessly (the cached entries already hold those positions'
+        K/V bit-exactly — that is what the lease matched)."""
+        for i, s in enumerate(slots_np):
+            meta = self._slot_meta.get(int(s))
+            if meta and meta["shared_tokens"]:
+                phys[i, :min(meta["shared_tokens"], length)] = 0
+        return phys
 
     def write_slots(self, slots, kv: Dict, n_valid) -> None:
         slots_np = np.asarray(slots, np.int32)
         Sb = kv["k"].shape[2]
         phys, off = self._phys_off(slots_np, Sb)
-        self.cache = _paged_scatter(self.cache, kv, phys, off,
+        phys = self._redirect_shared(slots_np, phys, Sb)
+        self.cache = _paged_scatter(self.cache, kv,
+                                    jnp.asarray(phys, jnp.int32),
+                                    jnp.asarray(off, jnp.int32),
                                     jnp.asarray(slots_np),
                                     jnp.asarray(n_valid, jnp.int32))
+        for s in slots_np:
+            self._commit_prefix(int(s))
 
     def write_slot(self, slot: int, src_cache: Dict, n_valid: int) -> None:
         assert 0 <= slot < self.n_slots
         kv = {name: src_cache[name] for name in self.cache
               if name not in ("index", "tables")}
-        phys, off = self._phys_off(np.asarray([slot], np.int32),
-                                   kv["k"].shape[2])
-        self.cache = _paged_scatter(self.cache, kv, phys, off,
+        slots_np = np.asarray([slot], np.int32)
+        phys, off = self._phys_off(slots_np, kv["k"].shape[2])
+        phys = self._redirect_shared(slots_np, phys, kv["k"].shape[2])
+        self.cache = _paged_scatter(self.cache, kv,
+                                    jnp.asarray(phys, jnp.int32),
+                                    jnp.asarray(off, jnp.int32),
                                     jnp.asarray([slot], jnp.int32),
                                     jnp.asarray([n_valid], jnp.int32))
+        self._commit_prefix(slot)
+
+    def _commit_prefix(self, slot: int) -> None:
+        """After a slot's prompt K/V is fully written, register its FULL
+        prompt blocks in the radix trie so later prompts can lease them.
+        Blocks already cached along the chain are skipped (the slot shares
+        them — its table points at the very same blocks); the slot's private
+        full blocks become new trie nodes. Partial-tail and generation
+        blocks never enter the trie: only positions covered by the prompt
+        are immutable-by-construction."""
+        meta = self._slot_meta.get(slot)
+        if meta is None or meta["committed"]:
+            return
+        meta["committed"] = True
+        tokens, L = meta["tokens"], meta["prompt_len"]
+        node = 0
+        for i in range(L // self.block_size):
+            blk = tokens[i * self.block_size:(i + 1) * self.block_size]
+            h = self._block_hash(blk)
+            kid = self._nodes[node]["kids"].get(h)
+            if kid is not None:
+                if not np.array_equal(self._nodes[kid]["tokens"], blk):
+                    break          # hash collision: stop caching this chain
+                node = kid
+                continue
+            b = int(self._tables[slot, i])
+            if b == 0 or b in self._block_node:
+                break              # defensive: never alias a cached block
+            nid = self._node_ids
+            self._node_ids += 1
+            self._nodes[nid] = {"parent": node, "hash": h, "block": b,
+                                "tokens": blk.copy(), "kids": {},
+                                "children": 0, "tick": self._tick()}
+            self._nodes[node]["kids"][h] = nid
+            self._nodes[node]["children"] += 1
+            self._block_node[b] = nid
+            node = nid
+
+    def commit_prefix(self, slot: int) -> None:
+        """Public trie registration hook. ``write_slots``/``write_slot`` call
+        it automatically once a slot's prompt K/V is written; the property
+        test drives it directly to exercise the trie bookkeeping without a
+        device prefill."""
+        self._commit_prefix(slot)
 
     def reset(self, slot: int) -> None:
+        """Retire a slot: decrement every leased block's refcount, then
+        scrub + free ONLY blocks that hit zero AND are not held by the
+        prefix trie. A block another slot still references, or a cached
+        prefix awaiting its next hit, must survive the retire bit-intact —
+        scrubbing by lease list alone would corrupt shared state (the teeth
+        test in tests/test_prefix_cache.py proves that failure is caught)."""
         assert 0 <= slot < self.n_slots
         blocks = self._leased.pop(slot, [])
-        self._free.extend(blocks)
+        self._slot_meta.pop(slot, None)
+        scrub: List[int] = []
+        for b in blocks:
+            assert self._ref[b] > 0, f"double-free of block {b}"
+            self._ref[b] -= 1
+            if self._ref[b] == 0:
+                if b in self._block_node:
+                    # cached: stays resident (LRU-evictable from now on)
+                    self._nodes[self._block_node[b]]["tick"] = self._tick()
+                else:
+                    self._free.append(b)
+                    scrub.append(b)
         self._tables[slot, :] = 0
         # pad with the null block to a fixed length: one compiled reset shape
-        padded = blocks + [0] * (self.blocks_per_slot - len(blocks))
+        padded = scrub + [0] * (self.blocks_per_slot - len(scrub))
         # _paged_reset zeroes the slot's device-side table row itself — only
         # the host mirror needed updating above
         self.cache = _paged_reset(self.cache, jnp.asarray(padded, jnp.int32),
@@ -576,10 +926,39 @@ class PagedKVStore(SlotStore):
         self._sync_tables()
         return _paged_gather(self.cache)
 
+    def gather_prefix_rows(self, slots: Sequence[int], length: int) -> Dict:
+        """Contiguous K/V rows (L, B, length, ...) for positions 0..length-1
+        of the given slots, gathered through the block tables — the suffix
+        prefill's accumulator seed. Positions past a slot's lease resolve to
+        the null block, exactly like the decode gather bridge: the chunked
+        scan only READS positions below its start chunk, all of which the
+        lease matched (valid cached entries), so the junk never reaches an
+        unmasked score."""
+        assert length % self.block_size == 0
+        tb = self._tables[np.asarray(slots, np.int32)][:, :length // self.block_size]
+        return _gather_prefix_rows(self.cache, jnp.asarray(tb, jnp.int32))
+
     # ------------------------------------------------------------------ info
 
+    def debug_block_census(self) -> Dict[str, List[int]]:
+        """The block-lifecycle partition, for invariant tests: every non-null
+        block must be in EXACTLY ONE of ``free`` (on the free list, pristine),
+        ``referenced`` (refcount > 0: leased, possibly by several slots), or
+        ``cached_unreferenced`` (held only by the prefix trie, evictable).
+        Conservation — the three sets disjoint and their union == all blocks —
+        is the no-leak/no-double-own invariant the property test drives."""
+        return {
+            "free": sorted(self._free),
+            "referenced": [b for b in range(1, self.n_blocks)
+                           if self._ref[b] > 0],
+            "cached_unreferenced": sorted(
+                b for b in self._block_node if self._ref[b] == 0),
+        }
+
     def memory_stats(self) -> Dict:
-        used = sum(len(b) for b in self._leased.values())
+        # unique blocks with a live lease — shared prefix blocks count once
+        # no matter how many slots reference them (which is the point)
+        used = int((self._ref > 0).sum())
         total = self.n_blocks - 1                           # null block excluded
         # the persistent allocation is the pool ("bytes"). In bridge mode
         # each decode step additionally materializes a TRANSIENT contiguous
@@ -598,7 +977,7 @@ class PagedKVStore(SlotStore):
             * int(np.prod(leaf.shape[3:], dtype=np.int64))
             for name, leaf in self.cache.items()
             if name not in ("index", "tables"))
-        return {
+        out = {
             "backend": self.kind,
             "native": self.native,
             "bytes": self.nbytes(),
@@ -610,6 +989,14 @@ class PagedKVStore(SlotStore):
             "table_uploads": self.table_uploads,
             "slots": self.n_slots,
         }
+        if self.prefix_cache:
+            out["prefix_cached_blocks"] = self._n_evictable()
+            out["prefix_hits"] = self.prefix_hits
+            out["prefix_blocks_reused"] = self.prefix_blocks_reused
+            out["prefix_tokens_reused"] = self.prefix_tokens_reused
+            out["prefix_evictions"] = self.prefix_evictions
+            out["cow_forks"] = self.cow_forks
+        return out
 
 
 class RecurrentStateStore(SlotStore):
@@ -642,11 +1029,12 @@ class RecurrentStateStore(SlotStore):
 def make_store(cfg: ArchConfig, n_slots: int, max_seq_len: int,
                backend: str = "auto", *, block_size: int = 16,
                n_blocks: Optional[int] = None,
-               native: bool = False) -> SlotStore:
+               native: bool = False, prefix_cache: bool = False) -> SlotStore:
     """Factory: build the SlotStore backend for a config. ``backend="auto"``
     picks contiguous for dense-family archs and recurrent for ssm/hybrid.
     ``native`` (paged only) selects the block-native decode bridge: the pool
-    is handed to the decode step in block layout, no gather view."""
+    is handed to the decode step in block layout, no gather view.
+    ``prefix_cache`` (paged only) enables the shared-prefix radix cache."""
     if backend == "auto":
         backend = ("recurrent" if cfg.family in RECURRENT_FAMILIES
                    else "contiguous")
@@ -654,12 +1042,16 @@ def make_store(cfg: ArchConfig, n_slots: int, max_seq_len: int,
         raise ValueError(
             f"native (block-native decode) requires the paged backend, "
             f"got {backend!r}")
+    if prefix_cache and backend != "paged":
+        raise ValueError(
+            f"prefix_cache (shared-prefix radix cache) requires the paged "
+            f"backend, got {backend!r}")
     if backend == "contiguous":
         return ContiguousKVStore(cfg, n_slots, max_seq_len)
     if backend == "paged":
         return PagedKVStore(cfg, n_slots, max_seq_len,
                             block_size=block_size, n_blocks=n_blocks,
-                            native=native)
+                            native=native, prefix_cache=prefix_cache)
     if backend == "recurrent":
         return RecurrentStateStore(cfg, n_slots, max_seq_len)
     raise ValueError(

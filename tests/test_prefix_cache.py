@@ -1,0 +1,281 @@
+"""Shared-prefix radix cache invariants (serving/store.py PagedKVStore with
+``prefix_cache=True`` + the engine's suffix-only admission):
+
+  * bit-identity — a prefix-HIT admission produces tokens AND cache bits
+                   bit-identical to a cold admission, for dense, int8-KV,
+                   and MoE configs (the repo's signature guarantee extended:
+                   skipping a cached prefix's prefill must be unobservable)
+  * COW          — a prompt diverging MID-block gets a copy-on-write fork of
+                   the divergence block; decode writes land in the fork and
+                   the cached original re-serves later hits bit-intact
+  * teeth        — the refcount-aware scrub is load-bearing: replaying the
+                   pre-fix retire (scrub EVERY leased block) detectably
+                   corrupts a block another slot still references, and the
+                   bit-identity assertion catches it
+  * conservation — property test (hypothesis, or the numpy fallback shim)
+                   driving random lease/commit/retire/drain sequences:
+                   free + referenced + cached-unreferenced partitions the
+                   pool at every step — no leak, no double-own, no
+                   double-free, no fresh lease of an owned block
+  * router       — a drain() handoff of a prefix-sharing session across
+                   prefix-cache engines stitches the exact token stream
+"""
+
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).parent))
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_fallback import given, settings, st
+
+from repro.configs import get_config
+from repro.models import init_model
+from repro.serving import Engine, EngineConfig, PagedKVStore
+from repro.serving import store as store_mod
+from repro.serving.router import Router, RouterConfig
+
+CFG = get_config("tinyllama-1.1b").smoke()
+MOE_CFG = get_config("moonshot-v1-16b-a3b").smoke()
+RNG = np.random.default_rng(11)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_model(CFG, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def moe_params():
+    return init_model(MOE_CFG, jax.random.PRNGKey(1))
+
+
+def _ecfg(prefix: bool, **kw):
+    base = dict(max_slots=2, max_seq_len=32, cache_backend="paged",
+                block_size=8, prefix_cache=prefix)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def _serve_snapshot(eng, prompt, gen):
+    """Submit one request, run a single engine step (admit + one decode),
+    snapshot its slot's contiguous cache view, then drain. Returns
+    (tokens, {leaf: row bits})."""
+    req = eng.submit(prompt, gen, strict=True)
+    eng.step()
+    slot = next(s for s, r in eng.scheduler.active.items() if r.id == req.id)
+    view = eng.store.gather_view()
+    row = {n: np.asarray(leaf[slot] if n == "index" else leaf[:, slot])
+           for n, leaf in view.items()}
+    eng.run_until_complete()
+    return list(req.tokens), row
+
+
+@pytest.mark.parametrize("family,kv_dtype", [
+    ("dense", "bfloat16"), ("dense", "int8"), ("moe", "bfloat16"),
+])
+def test_prefix_hit_bit_identical_to_cold(family, kv_dtype, params,
+                                          moe_params):
+    """The load-bearing invariant: admissions that lease cached prefix
+    blocks (skipping their prefill) emit the same first token, the same
+    decode stream, AND the same cache bits as a cold admission of the same
+    prompt — for float-KV, int8-per-token-scale, and MoE cache formats."""
+    base = MOE_CFG if family == "moe" else CFG
+    cfg = base.replace(kv_cache_dtype=kv_dtype)
+    p = moe_params if family == "moe" else params
+    preamble = RNG.integers(0, cfg.vocab, (16,), dtype=np.int32)
+    prompts = [
+        np.concatenate([preamble,
+                        RNG.integers(0, cfg.vocab, (8,), dtype=np.int32)])
+        for _ in range(3)]
+
+    hot = Engine(cfg, p, _ecfg(True))
+    cold = Engine(cfg, p, _ecfg(False))
+    for i, prompt in enumerate(prompts):
+        toks_h, row_h = _serve_snapshot(hot, prompt, 5)
+        toks_c, row_c = _serve_snapshot(cold, prompt, 5)
+        assert toks_h == toks_c                   # bit-identical, not allclose
+        for name in row_c:
+            np.testing.assert_array_equal(row_h[name], row_c[name])
+    s = hot.stats()
+    # request 0 walked an empty trie; 1 and 2 leased its cached preamble
+    assert s["prefix_hits"] == 2
+    assert s["prefix_blocks_reused"] == 4         # 2 hits x 2 preamble blocks
+    assert s["cache"]["prefix_hits"] == 2
+    hot.close()
+    cold.close()
+
+
+def test_cow_fork_mid_block_preserves_cached_original(params):
+    """A prompt that diverges MID-block forks the divergence block before
+    its slot writes into it (decode lands at position 20 inside the fork):
+    the forked request's stream is bit-identical to cold, and the cached
+    original block still serves a later full-match hit bit-intact."""
+    A = RNG.integers(0, CFG.vocab, (24,), dtype=np.int32)     # 3 full blocks
+    B = A[:20].copy()                 # 2 full blocks + 4-token tail of block 2
+
+    hot = Engine(CFG, params, _ecfg(True))
+    cold = Engine(CFG, params, _ecfg(False))
+    for prompt in (A, B, A):          # cold fill, mid-block fork, re-hit
+        toks_h, row_h = _serve_snapshot(hot, prompt, 5)
+        toks_c, row_c = _serve_snapshot(cold, prompt, 5)
+        assert toks_h == toks_c
+        for name in row_c:
+            np.testing.assert_array_equal(row_h[name], row_c[name])
+    st_ = hot.stats()["cache"]
+    assert st_["cow_forks"] == 1                  # B forked A's block 2
+    assert st_["prefix_hits"] == 2                # B (fork) + A's re-serve
+    # the re-served A matched all 3 of its full blocks — the fork never
+    # contaminated the cached original
+    assert st_["prefix_blocks_reused"] == 2 + 3
+    hot.close()
+    cold.close()
+
+
+def test_buggy_scrub_of_shared_block_is_caught(params):
+    """Teeth for the refcount-aware scrub: with requests A and B in flight
+    sharing cached prefix blocks, retiring A the PRE-FIX way (scrub every
+    block on A's lease list) detectably corrupts B's view — proving the
+    bit-identity assertions would catch that bug — while the real
+    refcount-aware reset leaves B's bits untouched."""
+    preamble = RNG.integers(0, CFG.vocab, (16,), dtype=np.int32)
+    pa = np.concatenate([preamble,
+                         RNG.integers(0, CFG.vocab, (8,), dtype=np.int32)])
+    pb = np.concatenate([preamble,
+                         RNG.integers(0, CFG.vocab, (8,), dtype=np.int32)])
+
+    def spin_up():
+        eng = Engine(CFG, params, _ecfg(True))
+        ra = eng.submit(pa, 8, strict=True)
+        eng.step()                    # A admitted cold; its blocks cached
+        rb = eng.submit(pb, 8, strict=True)
+        eng.step()                    # B admitted as a hit: preamble shared
+        slot_b = next(s for s, r in eng.scheduler.active.items()
+                      if r.id == rb.id)
+        row_b = {n: np.asarray(leaf[:, slot_b])
+                 for n, leaf in eng.store.gather_view().items()
+                 if n != "index"}
+        return eng, ra, rb, slot_b, row_b
+
+    # the CORRECT retire: A's shared blocks survive (refcount held by B)
+    eng, ra, rb, slot_b, before = spin_up()
+    assert eng.stats()["prefix_hits"] == 1
+    eng.preempt(ra.id)                # retire A -> store.reset(slot_a)
+    after = {n: np.asarray(leaf[:, slot_b])
+             for n, leaf in eng.store.gather_view().items() if n != "index"}
+    for name in before:
+        np.testing.assert_array_equal(before[name], after[name])
+    eng.close()
+
+    # the BUGGY retire (pre-fix behavior): scrub EVERY block on A's lease
+    # list, shared or not — B's shared prefix positions turn pristine, and
+    # the exact assertion the suite leans on flags it
+    eng, ra, rb, slot_b, before = spin_up()
+    slot_a = next(s for s, r in eng.scheduler.active.items()
+                  if r.id == ra.id)
+    blocks_a = list(eng.store._leased[slot_a])
+    padded = blocks_a + [0] * (eng.store.blocks_per_slot - len(blocks_a))
+    eng.store.cache = store_mod._paged_reset(
+        eng.store.cache, jnp.asarray(padded, jnp.int32), jnp.int32(slot_a))
+    after = {n: np.asarray(leaf[:, slot_b])
+             for n, leaf in eng.store.gather_view().items() if n != "index"}
+    with pytest.raises(AssertionError):
+        for name in before:
+            np.testing.assert_array_equal(before[name], after[name])
+    eng.close()
+
+
+def test_prefix_sharing_session_survives_router_drain(params):
+    """Drain handoff across prefix-cache engines: a session whose prompts
+    share a hot prefix is preempted mid-generation by drain(0) and finishes
+    on another host — the stitched stream must equal an undrained serve."""
+    ecfg = EngineConfig(max_slots=1, max_seq_len=32, cache_backend="paged",
+                        block_size=8, prefix_cache=True)
+    preamble = RNG.integers(0, CFG.vocab, (16,), dtype=np.int32)
+    prompt = np.concatenate([preamble,
+                             RNG.integers(0, CFG.vocab, (4,), dtype=np.int32)])
+
+    ref = Engine(CFG, params, ecfg)
+    warm = ref.submit(preamble, 4, strict=True)   # seeds the trie
+    ref.run_until_complete()
+    r0 = ref.submit(prompt, 10, strict=True)
+    ref.run_until_complete()
+    assert ref.stats()["prefix_hits"] >= 1
+    ref.close()
+
+    router = Router(CFG, params, ecfg, RouterConfig(n_hosts=2,
+                                                    handoff_threshold=0))
+    router.submit(preamble, 4, session="a", strict=True)
+    while router.has_work():
+        router.step()
+    r = router.submit(prompt, 10, session="a", strict=True)
+    for _ in range(3):
+        router.step()
+    router.drain(r.hosts[0])                      # preempt mid-generation
+    while router.has_work():
+        router.step()
+    assert router.stats()["router"]["handoffs"] >= 1
+    assert len(r.hosts) > 1
+    assert r.tokens == list(r0.tokens)            # bit-identical stitched
+    router.close()
+
+
+# ===========================================================================
+# block-conservation property test
+# ===========================================================================
+
+def _census_ok(store: PagedKVStore):
+    c = store.debug_block_census()
+    everything = c["free"] + c["referenced"] + c["cached_unreferenced"]
+    # partition: disjoint (no block owned twice) and complete (no leak)
+    assert len(everything) == len(set(everything)), c
+    assert sorted(everything) == list(range(1, store.n_blocks)), c
+    # referenced counts must reconcile with the lease lists
+    from collections import Counter
+    leases = Counter(b for bs in store._leased.values() for b in bs)
+    assert sorted(leases) == c["referenced"]
+    for b, n in leases.items():
+        assert store._ref[b] == n, (b, n, store._ref[b])
+
+
+@settings(deadline=None, max_examples=10)
+@given(st.integers(min_value=0, max_value=1 << 30))
+def test_block_conservation_under_random_lifecycle(seed):
+    """Random admit/commit/retire/drain traffic over a small pool with a
+    tiny token alphabet (collisions, partial tails, forks, evictions all
+    fire): after EVERY operation the pool partitions exactly into
+    free / referenced / cached-unreferenced. The store's internal asserts
+    (no double-free, no fresh lease of an owned block) arm the rest."""
+    rng = np.random.default_rng(seed)
+    cfg = get_config("tinyllama-1.1b").smoke()
+    store = PagedKVStore(cfg, n_slots=3, max_seq_len=16, block_size=4,
+                         n_blocks=10, prefix_cache=True)
+    _census_ok(store)
+    for _ in range(60):
+        op = int(rng.integers(0, 4))
+        if op == 0 or op == 3:                    # lease (+ maybe commit)
+            slot = int(rng.integers(0, 3))
+            if slot in store._leased:
+                continue
+            plen = int(rng.integers(1, 13))
+            gen = int(rng.integers(1, 17 - plen))
+            tokens = rng.integers(0, 3, (plen,), dtype=np.int32)
+            if store.lease(slot, plen, gen, tokens=tokens) and op == 0:
+                store.commit_prefix(slot)
+        elif op == 1:                             # retire one leased slot
+            leased = sorted(store._leased)
+            if leased:
+                store.reset(int(rng.choice(leased)))
+        else:                                     # drain: retire everything
+            for slot in sorted(store._leased):
+                store.reset(slot)
+        _census_ok(store)
+    for slot in sorted(store._leased):            # final drain must balance
+        store.reset(slot)
+    _census_ok(store)

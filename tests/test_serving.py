@@ -550,6 +550,45 @@ def test_paged_pool_exhaustion_is_backpressure_not_corruption(params):
     eng_c.close()
 
 
+def test_paged_pool_exhaustion_evicts_cached_prefixes_before_refusal(params):
+    """Pool exhaustion while cached prefixes sit unreferenced: the lease
+    must LRU-evict them to unblock admission instead of refusing. With the
+    pool sized so a retired request's cached prompt block is the only spare
+    capacity, a non-matching follow-up request admits only if eviction
+    fires — without it, this exact traffic is the zero-active admission
+    livelock the engine raises on."""
+    pa, pb = _prompts([8, 8])
+    # 2 usable blocks of 8; each request needs 2 (8 prompt + 8 gen). After A
+    # retires, its prompt block stays CACHED -> only 1 block is free.
+    eng = Engine(CFG, params, EngineConfig(max_slots=2, max_seq_len=16,
+                                           cache_backend="paged",
+                                           block_size=8, n_blocks=3,
+                                           prefix_cache=True))
+    ra = eng.submit(pa, 8, strict=True)
+    eng.run_until_complete()
+    ms = eng.store.memory_stats()
+    assert ms["prefix_cached_blocks"] == 1 and ms["blocks_free"] == 1
+    # B shares no prefix with A: it needs 2 fresh blocks RIGHT NOW, and the
+    # router-facing signal must already count the evictable cached block
+    assert eng.lease_headroom(8, 8)
+    rb = eng.submit(pb, 8, strict=True)
+    eng.run_until_complete()                      # no livelock, no deferral
+    s = eng.stats()
+    assert s["completed"] == 2
+    assert s["admissions_deferred"] == 0
+    assert eng.store.prefix_evictions == 1        # the cached block made room
+
+    eng_c = Engine(CFG, params, EngineConfig(max_slots=2, max_seq_len=16))
+    toks_c = []
+    for p in (pa, pb):
+        r = eng_c.submit(p, 8, strict=True)
+        eng_c.run_until_complete()
+        toks_c.append(r.tokens)
+    assert [ra.tokens, rb.tokens] == toks_c       # eviction never skews bits
+    eng.close()
+    eng_c.close()
+
+
 def test_paged_request_that_can_never_fit_is_rejected_not_livelocked(params):
     """A request needing more blocks than the whole pool holds must bounce at
     submit() — deferring it would park it at the queue head forever, spinning
