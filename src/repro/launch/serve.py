@@ -56,7 +56,8 @@ from repro.distributed import sharding as shd
 from repro.launch.mesh import make_smoke_mesh
 from repro.models import init_model
 from repro.serving.engine import Engine, EngineConfig
-from repro.serving.metrics import format_memory_stats, format_router_stats
+from repro.serving.metrics import (format_memory_stats, format_router_stats,
+                                   format_spec_stats)
 from repro.serving.router import Router, RouterConfig
 
 
@@ -120,6 +121,20 @@ def build_parser() -> argparse.ArgumentParser:
                          "unreferenced cached prefixes under pool "
                          "pressure). Requests here share a half-prompt "
                          "preamble to exercise hits")
+    ap.add_argument("--speculative", action="store_true",
+                    help="draft-verify decode: a small draft model proposes "
+                         "--spec-k tokens per active slot each round and the "
+                         "target verifies the whole window in ONE wide "
+                         "forward — slots advance 1..k+1 tokens per target "
+                         "dispatch, tokens bit-identical to plain greedy "
+                         "decode (greedy acceptance)")
+    ap.add_argument("--draft-config", default="tinyllama-1.1b",
+                    help="with --speculative: the draft model's arch config "
+                         "(must share the target's vocab; smoke-reduced "
+                         "under --smoke)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="with --speculative: draft proposals per round "
+                         "(verify window = spec-k + 1 positions)")
     ap.add_argument("--hosts", type=int, default=1,
                     help="simulated hosts: 1 = a single engine; >1 serves "
                          "through the multi-host Router (one engine per "
@@ -134,13 +149,14 @@ def build_parser() -> argparse.ArgumentParser:
     return ap
 
 
-def _serve_fleet(cfg, params, ecfg, prompts, args) -> int:
+def _serve_fleet(cfg, params, ecfg, prompts, args, *, draft_params=None) -> int:
     """The --hosts > 1 path: the same traffic through the multi-host Router.
     Requests cycle over ``hosts`` session keys so the second lap of arrivals
     pins to the hosts already holding those sessions' blocks (affinity
     hits); ``--drain-at K`` drains host 0 after K fleet steps, exercising
     queued-requeue + in-flight handoff mid-run."""
-    router = Router(cfg, params, ecfg, RouterConfig(n_hosts=args.hosts))
+    router = Router(cfg, params, ecfg, RouterConfig(n_hosts=args.hosts),
+                    draft_params=draft_params)
     requests = []
     fleet_steps = 0
 
@@ -169,6 +185,13 @@ def _serve_fleet(cfg, params, ecfg, prompts, args) -> int:
               f"host {trail}{handed} | {r.n_generated} tok", flush=True)
     s = router.stats()
     print(f"[serve] router: {format_router_stats(s)}", flush=True)
+    if args.speculative:
+        f = s["fleet"]
+        rate = f["accepted_tokens"] / max(f["proposed_tokens"], 1)
+        print(f"[serve] fleet speculative: {f['spec_rounds']} rounds + "
+              f"{f['draft_steps']} draft steps | "
+              f"{f['accepted_tokens']}/{f['proposed_tokens']} proposals "
+              f"accepted ({rate:.2f})", flush=True)
     for h, hs in enumerate(s["per_host"]):
         o = hs.get("opq", {})
         drained = " [drained]" if router.is_drained(h) else ""
@@ -201,11 +224,20 @@ def main(argv=None) -> int:
     if args.drain_at and args.hosts < 2:
         ap.error("--drain-at needs --hosts >= 2 (handoff requires another "
                  "host to admit the drained work)")
+    if args.spec_k < 1:
+        ap.error("--spec-k must be >= 1")
+    if args.speculative and args.paged_kernel:
+        ap.error("--speculative does not support --paged-kernel (the Pallas "
+                 "kernel is a single-query decode shape)")
 
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = cfg.smoke()
     cfg = cfg.replace(quantize=args.quantize)
+    if args.speculative and cfg.family not in ("dense", "moe"):
+        ap.error(f"--speculative needs a dense-family TARGET arch, got "
+                 f"{args.arch} (family={cfg.family}); recurrent models can "
+                 "be the draft, not the target")
     if (cfg.family not in ("dense", "moe", "ssm", "hybrid")
             or cfg.input_mode != "tokens"):
         ap.error(f"--arch {args.arch} (family={cfg.family}, "
@@ -232,6 +264,21 @@ def main(argv=None) -> int:
             # first admission walk onto cached blocks
             prompts[:, :args.prompt_len // 2] = prompts[0, :args.prompt_len // 2]
 
+        draft_cfg = None
+        draft_params = None
+        if args.speculative:
+            draft_cfg = get_config(args.draft_config)
+            if args.smoke:
+                draft_cfg = draft_cfg.smoke()
+            # seed 0, like the target: with --draft-config == --arch the
+            # draft IS the target and acceptance is total — the cheap way to
+            # smoke the full accept path; a real deployment points this at a
+            # genuinely smaller config
+            draft_params = init_model(draft_cfg, jax.random.PRNGKey(0))
+            print(f"[serve] speculative: draft {args.draft_config}, "
+                  f"k={args.spec_k} (verify window {args.spec_k + 1})",
+                  flush=True)
+
         ecfg = EngineConfig(
             max_slots=args.slots, max_queue=args.max_queue,
             max_seq_len=args.prompt_len + args.gen,
@@ -240,12 +287,15 @@ def main(argv=None) -> int:
             paged_native=args.paged_native,
             paged_kernel=args.paged_kernel,
             prefill_chunk=args.prefill_chunk or None,
-            prefix_cache=args.prefix_cache)
+            prefix_cache=args.prefix_cache,
+            speculative=args.speculative, spec_k=args.spec_k,
+            draft=draft_cfg)
 
         if args.hosts > 1:
-            return _serve_fleet(cfg, params, ecfg, prompts, args)
+            return _serve_fleet(cfg, params, ecfg, prompts, args,
+                                draft_params=draft_params)
 
-        engine = Engine(cfg, params, ecfg)
+        engine = Engine(cfg, params, ecfg, draft_params=draft_params)
         requests = []
         for i in range(args.requests):
             requests.append(engine.submit(prompts[i], args.gen, strict=True))
@@ -272,6 +322,8 @@ def main(argv=None) -> int:
               f"batched seed writes {s['seed_write_s']*1e3:.1f} ms | "
               f"0 replay decodes | "
               f"{s['admissions_deferred']} deferred (backpressure)", flush=True)
+        if args.speculative:
+            print(f"[serve] {format_spec_stats(s)}", flush=True)
         if args.prefix_cache:
             print(f"[serve] prefix cache: {s['prefix_hits']} hits | "
                   f"{s['prefix_blocks_reused']} blocks reused | "

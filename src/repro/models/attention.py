@@ -506,6 +506,139 @@ def decode_attention(
     return out, cache_k, cache_v
 
 
+def verify_decode_attention(
+    p: Dict,
+    x: jax.Array,                 # (B, W, D) window: last token + k draft tokens
+    cache_k: jax.Array,           # (B, S, KV, hd)
+    cache_v: jax.Array,
+    index: jax.Array,             # (B,) int32 per-slot window start positions
+    cfg: ArchConfig,
+    *,
+    positions: jax.Array,         # (B, W) absolute positions = index + arange(W)
+    cache_scales: Optional[Tuple[jax.Array, jax.Array]] = None,  # (B,S,KV) x2
+) -> Tuple[jax.Array, ...]:
+    """Speculative-verify attention: W tokens per row scored in ONE forward,
+    each against the same cache row sequential decode would have seen.
+
+    All W new K/V entries are scattered into the cache rows *before* the
+    contraction (positions ``index[b]+j``, mode="drop" for rows past the
+    slot extent), and the causal horizon is per-query: query j attends
+    ``kpos <= index + j``, so entries written for later window positions are
+    masked to NEG_INF (exact-zero softmax weight) exactly as if they had not
+    been written yet. The visible entries are the same bits sequential
+    :func:`decode_attention` steps would have produced (same `_project_qkv`
+    / `_quantize_kv` math per position), so the (B, H, W, S) score rows are
+    the (B, H, 1, S) decode rows stacked — the speculative==plain
+    bit-identity contract (tests/test_speculative.py).
+
+    Rejected-window entries are real writes; the engine scrubs them back to
+    pristine via the store rollback after acceptance (serving/store.py).
+
+    Returns (out, new_k, new_v[, new_k_scale, new_v_scale])."""
+    B, W, _ = x.shape
+    S = cache_k.shape[1]
+    rows = jnp.arange(B)
+    index = jnp.asarray(index)
+    q, k_new, v_new = _project_qkv(p, x, cfg, positions, None)
+    int8_cache = cache_scales is not None
+    if int8_cache:
+        ks, vs = cache_scales
+        k_q, v_q, k_sc, v_sc = _quantize_kv(k_new, v_new)
+        cache_k = cache_k.at[rows[:, None], positions].set(k_q, mode="drop")
+        cache_v = cache_v.at[rows[:, None], positions].set(v_q, mode="drop")
+        ks = ks.at[rows[:, None], positions].set(k_sc, mode="drop")
+        vs = vs.at[rows[:, None], positions].set(v_sc, mode="drop")
+        k_full = cache_k.astype(jnp.float32) * ks[..., None]
+        v_full = cache_v.astype(jnp.float32) * vs[..., None]
+        k = _expand_kv(k_full.astype(x.dtype), cfg.n_heads)
+        v = _expand_kv(v_full.astype(x.dtype), cfg.n_heads)
+    else:
+        cache_k = cache_k.at[rows[:, None], positions].set(
+            k_new.astype(cache_k.dtype), mode="drop")
+        cache_v = cache_v.at[rows[:, None], positions].set(
+            v_new.astype(cache_v.dtype), mode="drop")
+        k = _expand_kv(cache_k, cfg.n_heads)
+        v = _expand_kv(cache_v, cfg.n_heads)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * (cfg.hd ** -0.5)
+    # per-query causal horizon: query j sees kpos <= index + j
+    valid = jnp.arange(S)[None, None, None, :] <= positions[:, None, :, None]
+    s = jnp.where(valid, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", w, v.astype(jnp.float32)).astype(x.dtype)
+    out = L.pdot(o.reshape(B, W, cfg.n_heads * cfg.hd), p["wo"], cfg)
+    if int8_cache:
+        return out, cache_k, cache_v, ks, vs
+    return out, cache_k, cache_v
+
+
+def paged_verify_attention(
+    p: Dict,
+    x: jax.Array,                 # (B, W, D) window: last token + k draft tokens
+    pool_k: jax.Array,            # (n_blocks, block_size, KV, hd) — ONE layer's pool
+    pool_v: jax.Array,
+    tables: jax.Array,            # (B, MB) int32 per-slot block tables
+    index: jax.Array,             # (B,) int32 per-slot window start positions
+    cfg: ArchConfig,
+    *,
+    positions: jax.Array,         # (B, W) absolute positions = index + arange(W)
+    cache_scales: Optional[Tuple[jax.Array, jax.Array]] = None,  # (NB,bs,KV) x2
+) -> Tuple[jax.Array, ...]:
+    """Block-native speculative verify: :func:`verify_decode_attention`'s
+    windowed write-then-attend, addressed through the block tables. Window
+    positions past the slot extent redirect to the reserved null block 0 (the
+    same null-block machinery the bridge writeback clamps into) instead of
+    landing in a live cell, so an end-of-budget window can never corrupt a
+    leased position; the engine rollback un-writes rejected cells back to
+    pristine. Per-layer transient gather + the exact contraction of
+    :func:`paged_decode_attention`, W queries wide."""
+    B, W, _ = x.shape
+    bs = pool_k.shape[1]
+    MB = tables.shape[1]
+    S = MB * bs
+    rows = jnp.arange(B)
+    index = jnp.asarray(index)
+    q, k_new, v_new = _project_qkv(p, x, cfg, positions, None)
+    pos_c = jnp.minimum(positions, S - 1)
+    in_range = positions < S
+    phys = jnp.where(in_range, tables[rows[:, None], pos_c // bs], 0)
+    off = jnp.where(in_range, pos_c % bs, 0)
+    int8_cache = cache_scales is not None
+    if int8_cache:
+        pks, pvs = cache_scales
+        k_q, v_q, k_sc, v_sc = _quantize_kv(k_new, v_new)
+        pool_k = pool_k.at[phys, off].set(k_q)
+        pool_v = pool_v.at[phys, off].set(v_q)
+        pks = pks.at[phys, off].set(k_sc)
+        pvs = pvs.at[phys, off].set(v_sc)
+    else:
+        pool_k = pool_k.at[phys, off].set(k_new.astype(pool_k.dtype))
+        pool_v = pool_v.at[phys, off].set(v_new.astype(pool_v.dtype))
+    flat = tables.reshape(-1)
+    k_rows = jnp.take(pool_k, flat, axis=0).reshape(B, S, *pool_k.shape[2:])
+    v_rows = jnp.take(pool_v, flat, axis=0).reshape(B, S, *pool_v.shape[2:])
+    if int8_cache:
+        ks = jnp.take(pks, flat, axis=0).reshape(B, S, *pks.shape[2:])
+        vs = jnp.take(pvs, flat, axis=0).reshape(B, S, *pvs.shape[2:])
+        k_full = k_rows.astype(jnp.float32) * ks[..., None]
+        v_full = v_rows.astype(jnp.float32) * vs[..., None]
+        k = _expand_kv(k_full.astype(x.dtype), cfg.n_heads)
+        v = _expand_kv(v_full.astype(x.dtype), cfg.n_heads)
+    else:
+        k = _expand_kv(k_rows, cfg.n_heads)
+        v = _expand_kv(v_rows, cfg.n_heads)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * (cfg.hd ** -0.5)
+    valid = jnp.arange(S)[None, None, None, :] <= positions[:, None, :, None]
+    s = jnp.where(valid, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", w, v.astype(jnp.float32)).astype(x.dtype)
+    out = L.pdot(o.reshape(B, W, cfg.n_heads * cfg.hd), p["wo"], cfg)
+    if int8_cache:
+        return out, pool_k, pool_v, pks, pvs
+    return out, pool_k, pool_v
+
+
 def paged_decode_attention(
     p: Dict,
     x: jax.Array,                 # (B, 1, D) current token

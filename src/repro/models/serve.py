@@ -576,3 +576,141 @@ def decode_paged(params: Dict, cfg: ArchConfig, cache: Dict, batch: Dict,
         k_new, v_new = new_pools
         cache = dict(cache, k=k_new, v=v_new, index=index + 1)
     return M._logits(params, cfg, x), cache
+
+
+# ===========================================================================
+# speculative verify: score a k+1-token window in one forward
+# ===========================================================================
+
+def verify_window(params: Dict, cfg: ArchConfig, cache: Dict,
+                  batch: Dict, window: int) -> Tuple[jax.Array, Dict]:
+    """Speculative-verify forward (dense/moe): ``batch["tokens"]`` is (B, W)
+    — each row's last emitted token followed by ``W-1`` draft proposals —
+    and the target model scores ALL W positions in one dispatch, the wide
+    chunked-scoring shape of the admission prefill applied to the decode
+    loop. Per layer the W new K/V entries scatter into the slot rows before
+    a (B, H, W, S) contraction whose per-query causal horizon hides the
+    not-yet-accepted entries (models/attention.py
+    ``verify_decode_attention``), so position j's logits are bit-identical
+    to the logits sequential :func:`decode` would produce after accepting
+    j tokens — greedy acceptance therefore reproduces plain decode's token
+    stream exactly, whatever the draft proposed. MoE layers route
+    row-isolated and dropless, the same per-token-independent routing the
+    chunked prefill uses.
+
+    Advances ``index`` by W for active rows (the engine rolls back each
+    slot to its true accepted position via the store rollback). Returns
+    (logits (B, W, V), cache)."""
+    if cfg.family not in ("dense", "moe"):
+        raise ValueError(
+            f"speculative verify is a dense-family path, not {cfg.family}")
+    tokens = batch["tokens"]
+    B, W = tokens.shape
+    assert W == window, (W, window)
+    index = cache["index"]                        # (B,) per-slot positions
+    active = batch.get("active")
+    positions = (index[:, None]
+                 + jnp.arange(W, dtype=jnp.int32)[None, :]).astype(jnp.int32)
+
+    x = params["embed"][tokens].astype(L.cdtype(cfg))
+    x = shd.with_sharding(x, shd.batch_spec(None, None))
+    int8_kv = "k_scale" in cache
+
+    def body(carry, inp):
+        x = carry
+        if int8_kv:
+            lp, ck, cv, cks, cvs = inp
+            h = L.apply_norm(lp["ln1"], x, cfg)
+            o, ck, cv, cks, cvs = A.verify_decode_attention(
+                lp["attn"], h, ck, cv, index, cfg,
+                positions=positions, cache_scales=(cks, cvs))
+        else:
+            lp, ck, cv = inp
+            h = L.apply_norm(lp["ln1"], x, cfg)
+            o, ck, cv = A.verify_decode_attention(
+                lp["attn"], h, ck, cv, index, cfg, positions=positions)
+        x = x + o
+        h = L.apply_norm(lp["ln2"], x, cfg)
+        if cfg.family == "moe":
+            y, _ = MOE.apply_moe(lp["moe"], h, cfg, row_isolated=True)
+        else:
+            y = L.apply_mlp(lp["mlp"], h, cfg)
+        out_caches = (ck, cv, cks, cvs) if int8_kv else (ck, cv)
+        return x + y, out_caches
+
+    xs = ((params["layers"], cache["k"], cache["v"],
+           cache["k_scale"], cache["v_scale"])
+          if int8_kv else (params["layers"], cache["k"], cache["v"]))
+    x, new_caches = jax.lax.scan(body, x, xs,
+                                 unroll=True if cfg.scan_unroll else 1)
+    new_index = index + W if active is None else jnp.where(active, index + W, index)
+    if int8_kv:
+        k_new, v_new, ks_new, vs_new = new_caches
+        cache = dict(cache, k=k_new, v=v_new, k_scale=ks_new,
+                     v_scale=vs_new, index=new_index)
+    else:
+        k_new, v_new = new_caches
+        cache = dict(cache, k=k_new, v=v_new, index=new_index)
+    return M._logits(params, cfg, x), cache
+
+
+def verify_window_paged(params: Dict, cfg: ArchConfig, cache: Dict,
+                        batch: Dict, window: int) -> Tuple[jax.Array, Dict]:
+    """Block-native speculative verify: :func:`verify_window` addressed
+    through the paged pool + per-slot block tables (models/attention.py
+    ``paged_verify_attention``). Window cells past a slot's extent redirect
+    to the reserved null block, so an end-of-budget window never touches a
+    live cell. Same logits, same greedy acceptance, same rollback contract."""
+    if cfg.family not in ("dense", "moe"):
+        raise ValueError(
+            f"speculative verify is a dense-family path, not {cfg.family}")
+    tokens = batch["tokens"]
+    B, W = tokens.shape
+    assert W == window, (W, window)
+    index = cache["index"]
+    tables = cache["tables"]
+    active = batch.get("active")
+    positions = (index[:, None]
+                 + jnp.arange(W, dtype=jnp.int32)[None, :]).astype(jnp.int32)
+
+    x = params["embed"][tokens].astype(L.cdtype(cfg))
+    x = shd.with_sharding(x, shd.batch_spec(None, None))
+    int8_kv = "k_scale" in cache
+
+    def body(carry, inp):
+        x = carry
+        if int8_kv:
+            lp, pk, pv, pks, pvs = inp
+            h = L.apply_norm(lp["ln1"], x, cfg)
+            o, pk, pv, pks, pvs = A.paged_verify_attention(
+                lp["attn"], h, pk, pv, tables, index, cfg,
+                positions=positions, cache_scales=(pks, pvs))
+        else:
+            lp, pk, pv = inp
+            h = L.apply_norm(lp["ln1"], x, cfg)
+            o, pk, pv = A.paged_verify_attention(
+                lp["attn"], h, pk, pv, tables, index, cfg,
+                positions=positions)
+        x = x + o
+        h = L.apply_norm(lp["ln2"], x, cfg)
+        if cfg.family == "moe":
+            y, _ = MOE.apply_moe(lp["moe"], h, cfg, row_isolated=True)
+        else:
+            y = L.apply_mlp(lp["mlp"], h, cfg)
+        out_pools = (pk, pv, pks, pvs) if int8_kv else (pk, pv)
+        return x + y, out_pools
+
+    xs = ((params["layers"], cache["k"], cache["v"],
+           cache["k_scale"], cache["v_scale"])
+          if int8_kv else (params["layers"], cache["k"], cache["v"]))
+    x, new_pools = jax.lax.scan(body, x, xs,
+                                unroll=True if cfg.scan_unroll else 1)
+    new_index = index + W if active is None else jnp.where(active, index + W, index)
+    if int8_kv:
+        k_new, v_new, ks_new, vs_new = new_pools
+        cache = dict(cache, k=k_new, v=v_new, k_scale=ks_new,
+                     v_scale=vs_new, index=new_index)
+    else:
+        k_new, v_new = new_pools
+        cache = dict(cache, k=k_new, v=v_new, index=new_index)
+    return M._logits(params, cfg, x), cache

@@ -161,6 +161,32 @@ def make_paged_decode_step(cfg: ArchConfig, use_kernel: bool = False) -> Callabl
     return decode_step
 
 
+def make_verify_step(cfg: ArchConfig, window: int) -> Callable:
+    """Speculative-verify step (serving): ``batch["tokens"]`` is the (B, W)
+    window — each slot's last emitted token + W-1 draft proposals — scored
+    by the target model in ONE dispatch (models/serve.py ``verify_window``).
+    Returns (greedy (B, W) int32, cache): position j's greedy token is
+    bit-identical to what sequential decode would emit after accepting j
+    window tokens, which is what makes greedy acceptance == plain decode."""
+    def verify_step(params, cache, batch):
+        logits, cache = SV.verify_window(params, cfg, cache, batch, window)
+        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return greedy, cache
+    return verify_step
+
+
+def make_paged_verify_step(cfg: ArchConfig, window: int) -> Callable:
+    """Block-native speculative-verify step: same contract as
+    ``make_verify_step`` over the paged pool + block tables (models/serve.py
+    ``verify_window_paged``)."""
+    def verify_step(params, cache, batch):
+        logits, cache = SV.verify_window_paged(params, cfg, cache, batch,
+                                               window)
+        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return greedy, cache
+    return verify_step
+
+
 # ===========================================================================
 # dry-run input specs (ShapeDtypeStruct — never allocated)
 # ===========================================================================

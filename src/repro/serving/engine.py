@@ -182,6 +182,27 @@ class EngineConfig:
         admission (tests/test_prefix_cache.py). Requires ``block_size`` to
         divide every prefill bucket; rejected for mrope (the suffix scan is
         the chunked scan).
+    speculative
+        Draft-verify decode (added PR 7): every round a small DRAFT model
+        proposes ``spec_k`` tokens per active slot in narrow decode steps,
+        then the target scores all ``spec_k + 1`` window positions for the
+        whole batch in ONE wide verify forward — one dispatched target step
+        buys up to k+1 tokens per slot. Greedy acceptance keeps the emitted
+        stream bit-identical to plain decode (each window position's greedy
+        token is exactly what sequential decode would emit there); rejected
+        draft K/V is scrubbed from both caches before the round ends. Slots
+        advance 1..k+1 tokens per round independently — EOS/length stops
+        land mid-window and retire at the stop position. Requires ``draft``
+        + ``draft_params``; target must be a dense-family arch (the draft
+        may be recurrent — its rollback is snapshot selection); rejected
+        with ``paged_kernel`` (a single-query decode kernel) and mrope.
+    spec_k
+        Draft proposals per speculative round (window = ``spec_k + 1``).
+    draft
+        The draft model's ArchConfig (vocab must match the target's); its
+        params go to ``Engine(..., draft_params=...)``. The draft runs as a
+        second OPQ program with its own slot-synced store, kept in lockstep
+        through admission, rollback, preemption, and retire.
     """
 
     max_slots: int = 4
@@ -197,12 +218,35 @@ class EngineConfig:
     paged_kernel: bool = False
     prefill_chunk: Optional[int] = None
     prefix_cache: bool = False
+    speculative: bool = False
+    spec_k: int = 4
+    draft: Optional[ArchConfig] = None
+
+
+def _spec_round_donate() -> bool:
+    """Whether the speculative-round steps (verify, dense draft decode) may
+    donate their cache argument. Not on CPU: jax 0.4.37's XLA:CPU runtime
+    can deserialize an executable from the persistent compilation cache
+    whose completion events fire BEFORE its donated in-place writes land —
+    ``block_until_ready`` on its outputs returns early, so the rollback
+    scrub dispatched right after a verify races the verify's own tail
+    writes and intermittently loses the rejected window cells (stale draft
+    K/V where pristine was written; reproducible only with a warm
+    ``.jax_cache``, never with freshly compiled executables). Whether an
+    entry was deserialized is not observable here, so CPU skips donation
+    for exactly the two steps whose freshly written cells the round
+    overwrites microseconds later. Plain decode/prefill keep donation on
+    every backend: nothing ever overwrites a cell they just wrote before
+    the next data-dependent executable, so a late write is unobservable.
+    TPU keeps the in-place verify — donation is what holds peak cache
+    memory to one pool during the wide forward."""
+    return jax.default_backend() != "cpu"
 
 
 @functools.lru_cache(maxsize=None)
 def _jitted_steps(cfg: ArchConfig, kind: str, max_seq_len: int = 0,
                   native: bool = False, kernel: bool = False, chunk: int = 0,
-                  prefix_chunk: int = 0):
+                  prefix_chunk: int = 0, spec_k: int = 0):
     """Compiled step fns shared across Engine instances of the same
     (config, store kind, decode/prefill mode) — rebuilding an engine (tests,
     benchmark sweeps) reuses XLA executables. ``max_seq_len`` keys the cache
@@ -238,7 +282,37 @@ def _jitted_steps(cfg: ArchConfig, kind: str, max_seq_len: int = 0,
     decode_fn = (ST.make_paged_decode_step(cfg, use_kernel=kernel)
                  if native else ST.make_decode_step(cfg))
     decode = jax.jit(decode_fn, donate_argnums=(1,))
-    return prefill, prefill_chunked, prefill_suffix, decode
+    # ``spec_k`` builds the speculative verify step: the W = spec_k + 1 wide
+    # target forward that scores a whole draft window in one dispatch
+    # (models/steps.py make_verify_step). Block-native engines verify through
+    # the pool + tables; the paged gather bridge and the contiguous backend
+    # share the contiguous verify program, exactly like plain decode.
+    verify = None
+    if spec_k:
+        verify_fn = (ST.make_paged_verify_step(cfg, spec_k + 1) if native
+                     else ST.make_verify_step(cfg, spec_k + 1))
+        verify = (jax.jit(verify_fn, donate_argnums=(1,))
+                  if _spec_round_donate() else jax.jit(verify_fn))
+    return prefill, prefill_chunked, prefill_suffix, decode, verify
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_draft_steps(cfg: ArchConfig, kind: str, max_seq_len: int = 0,
+                        donate: bool = True):
+    """Compiled DRAFT-model steps for speculative decode: the bucketed
+    admission prefill (the draft cache must be seeded with the prompt through
+    the draft's own weights) and the narrow proposal decode. Recurrent drafts
+    pass ``donate=False``: the engine keeps one state snapshot per draft step
+    of a round so rollback can per-slot select the post-acceptance state —
+    donating would overwrite snapshot i while producing i+1."""
+    if kind == "recurrent":
+        prefill = jax.jit(ST.make_recurrent_prefill_step(cfg, max_seq_len))
+    else:
+        prefill = jax.jit(ST.make_prefill_with_cache_step(cfg))
+    decode_fn = ST.make_decode_step(cfg)
+    decode = (jax.jit(decode_fn, donate_argnums=(1,))
+              if donate and _spec_round_donate() else jax.jit(decode_fn))
+    return prefill, decode
 
 
 class _Ready:
@@ -264,7 +338,7 @@ class Engine:
     """
 
     def __init__(self, cfg: ArchConfig, params, engine_cfg: EngineConfig = None,
-                 *, opq: Optional[OPQ] = None):
+                 *, opq: Optional[OPQ] = None, draft_params=None):
         if (cfg.family not in ("dense", "moe") + RECURRENT_FAMILIES
                 or cfg.input_mode != "tokens"):
             raise ValueError(
@@ -289,6 +363,44 @@ class Engine:
                     "prefix_cache does not support mrope position encoding "
                     "(the suffix prefill is the chunked scan, which does not "
                     "thread positions3)")
+        if self.ecfg.speculative:
+            if self.ecfg.draft is None or draft_params is None:
+                raise ValueError(
+                    "speculative decode needs a draft model: set "
+                    "EngineConfig.draft (the draft ArchConfig) and pass "
+                    "Engine(..., draft_params=...)")
+            if self.ecfg.spec_k < 1:
+                raise ValueError(
+                    f"spec_k must be >= 1, got {self.ecfg.spec_k}")
+            if cfg.family not in ("dense", "moe"):
+                raise ValueError(
+                    f"speculative decode verifies through the K/V-window "
+                    f"path, so the TARGET must be a dense-family arch, got "
+                    f"{cfg.family} (a recurrent model can be the draft, "
+                    f"not the target)")
+            if cfg.rope_kind == "mrope":
+                raise ValueError(
+                    "speculative verify does not support mrope position "
+                    "encoding (the window forward does not thread positions3)")
+            if self.ecfg.paged_kernel:
+                raise ValueError(
+                    "speculative decode does not route through the Pallas "
+                    "paged-attention kernel (a single-query decode shape; "
+                    "the verify window is multi-query) — drop paged_kernel")
+            d = self.ecfg.draft
+            if d.vocab != cfg.vocab:
+                raise ValueError(
+                    f"draft vocab {d.vocab} != target vocab {cfg.vocab}: "
+                    f"draft proposals must be target token ids")
+            if (d.input_mode != "tokens"
+                    or d.family not in ("dense", "moe") + RECURRENT_FAMILIES):
+                raise ValueError(
+                    f"draft must be a token-input dense/moe/ssm/hybrid arch, "
+                    f"got family={d.family} input_mode={d.input_mode}")
+        elif self.ecfg.draft is not None:
+            raise ValueError(
+                "EngineConfig.draft is set but speculative=False — enable "
+                "speculative or drop the draft config")
         buckets = self.ecfg.buckets or default_buckets(self.ecfg.max_seq_len)
         chunk = self.ecfg.prefill_chunk
         if chunk:
@@ -339,15 +451,31 @@ class Engine:
             native=self.ecfg.paged_native,
             prefix_cache=self.ecfg.prefix_cache)
         (self._prefill, self._prefill_chunked, self._prefill_suffix,
-         self._decode) = _jitted_steps(
+         self._decode, self._verify) = _jitted_steps(
             cfg, self.store.kind,
             self.ecfg.max_seq_len if self.store.kind == "recurrent" else 0,
             native=self.ecfg.paged_native, kernel=self.ecfg.paged_kernel,
             chunk=chunk or 0,
-            prefix_chunk=self.ecfg.block_size if self.ecfg.prefix_cache else 0)
+            prefix_chunk=self.ecfg.block_size if self.ecfg.prefix_cache else 0,
+            spec_k=self.ecfg.spec_k if self.ecfg.speculative else 0)
         self._owns_opq = opq is None and self.ecfg.use_opq
         self.opq = (OPQ() if self._owns_opq else opq) if self.ecfg.use_opq else None
         self._params_buf = Buffer(params, name="params")
+        # the draft model is a SECOND program over the same slot geometry:
+        # its own params buffer, its own slot-synced store (contiguous for
+        # dense drafts, per-slot state rows for recurrent ones), admitted /
+        # rolled back / reset in lockstep with the target's slots
+        self.draft_store: Optional[SlotStore] = None
+        if self.ecfg.speculative:
+            dcfg = self.ecfg.draft
+            self.draft_store = make_store(dcfg, self.ecfg.max_slots,
+                                          self.ecfg.max_seq_len)
+            self._draft_recurrent = self.draft_store.kind == "recurrent"
+            self._draft_prefill, self._draft_decode = _jitted_draft_steps(
+                dcfg, self.draft_store.kind,
+                self.ecfg.max_seq_len if self._draft_recurrent else 0,
+                donate=not self._draft_recurrent)
+            self._draft_params_buf = Buffer(draft_params, name="draft-params")
         self._req_ids = itertools.count()
         self.metrics = EngineMetrics()
         self.completed: List[Request] = []
@@ -517,8 +645,19 @@ class Engine:
                     # the prefix benchmark counts dispatched prefill work in
                     self.metrics.prefill_chunks += (
                         bucket // self.ecfg.block_size)
-            pending.append((pairs, last, fut))
-        for pairs, last, fut in pending:
+            # speculative: the draft cache must hold the prompt through the
+            # DRAFT's own weights, so every admission group also dispatches a
+            # draft prefill (always the full prompt — the draft store has no
+            # prefix cache, and a suffix-group target skip never applies to it)
+            dfut = None
+            if self.draft_store is not None:
+                dfut = self._dispatch_async(
+                    lambda p, t, li, fn=self._draft_prefill: fn(p, t, li),
+                    self._draft_params_buf,
+                    Buffer(toks, name=f"draft-prefill{bucket}"),
+                    Buffer(last), flags=f"draft_prefill/{bucket}")
+            pending.append((pairs, last, fut, dfut))
+        for pairs, last, fut, dfut in pending:
             t0 = now()
             first, kv = fut.result()
             first = np.asarray(first)
@@ -527,6 +666,13 @@ class Engine:
             self.metrics.prefill_tokens += int(last.sum()) + len(pairs)
             t0 = now()
             self._seed_admitted(pairs, kv)
+            if dfut is not None:
+                # draft first token discarded — the TARGET's prefill token is
+                # the emitted one; the draft only needed its cache seeded
+                _, dkv = dfut.result()
+                self.draft_store.write_slots(
+                    [slot for slot, _ in pairs], dkv,
+                    [len(req.prompt) for _, req in pairs])
             self.metrics.seed_write_s += now() - t0
             for i, (slot, req) in enumerate(pairs):
                 req.state = RequestState.RUNNING
@@ -547,11 +693,7 @@ class Engine:
                                [len(req.prompt) for _, req in pairs])
 
     def _decode_once(self) -> None:
-        toks = np.zeros((self.ecfg.max_slots, 1), np.int32)
-        active = np.zeros((self.ecfg.max_slots,), bool)
-        for slot, req in self.scheduler.active.items():
-            toks[slot, 0] = req.last_token
-            active[slot] = True
+        toks, active = self.scheduler.decode_batch()
         next_tok, cache = self._dispatch(
             lambda p, c, b: self._decode(p, c, b),
             self._params_buf,
@@ -570,6 +712,104 @@ class Engine:
                 self._retire(slot)
         self.metrics.observe_tokens(produced)
 
+    def _spec_decode_once(self) -> None:
+        """One speculative draft-verify round. k+1 NARROW draft decode steps
+        propose k tokens per active slot (the last proposal is discarded —
+        the extra step keeps the draft cache in lockstep through a fully
+        accepted window), then ONE W = k+1 wide target verify forward scores
+        every window position for the whole batch, and each slot advances by
+        its own acceptance length: 1..k+1 tokens per round, EOS/length stops
+        landing mid-window. Greedy acceptance makes the stream provably
+        bit-identical to plain decode — window position j's greedy token is
+        exactly what sequential decode would emit after j accepted tokens,
+        so a bad draft costs speed, never correctness. Rejected window
+        positions are scrubbed from BOTH caches before any retire: future
+        verify horizons reach them, and the retire-time row bits must equal
+        plain decode's (the cache-bit half of the invariant)."""
+        k = self.ecfg.spec_k
+        W = k + 1
+        n = self.ecfg.max_slots
+        toks, active = self.scheduler.decode_batch()
+        # ---- draft: propose. Window column 0 is each slot's last emitted
+        # token; columns 1..k the draft's chained proposals.
+        window = np.zeros((n, W), np.int32)
+        window[:, 0] = toks[:, 0]
+        snapshots = ([self.draft_store.decode_cache()]
+                     if self._draft_recurrent else None)
+        cur = toks
+        for i in range(W):
+            nxt, dcache = self._dispatch(
+                lambda p, c, b: self._draft_decode(p, c, b),
+                self._draft_params_buf,
+                self._resident(self.draft_store.decode_cache(), "draft-cache"),
+                Buffer({"tokens": cur, "active": active}, name="draft-tokens"),
+                flags="draft_decode")
+            self.draft_store.swap(dcache)
+            if snapshots is not None:
+                snapshots.append(dcache)
+            self.metrics.draft_steps += 1
+            nxt_np = np.asarray(nxt).reshape(n).astype(np.int32)
+            if i < k:
+                window[:, i + 1] = nxt_np
+            cur = nxt_np.reshape(n, 1)
+        # ---- verify: one wide target forward for the whole batch
+        greedy, cache = self._dispatch(
+            lambda p, c, b: self._verify(p, c, b),
+            self._params_buf,
+            self._resident(self.store.decode_cache(), "kv-cache"),
+            Buffer({"tokens": window, "active": active}, name="verify-window"),
+            flags="verify")
+        self.store.swap_window(cache, W)
+        self.metrics.decode_steps += 1
+        self.metrics.spec_rounds += 1
+        greedy_np = np.asarray(greedy)                     # (B, W)
+        # ---- per-slot acceptance (host) + fixed-shape rollback plan
+        slot_ids = np.full((n,), n, np.int64)              # pad: dropped
+        new_index = np.zeros((n,), np.int64)
+        scrub = np.full((n, k), self.ecfg.max_seq_len, np.int64)
+        sel = np.zeros((n,), np.int64)                     # recurrent draft
+        produced = 0
+        to_retire = []
+        for slot, req in list(self.scheduler.active.items()):
+            # pre-round write position: prompt + generated - 1, the last
+            # emitted token's (unwritten) slot — pure host arithmetic, no
+            # device sync in the hot loop
+            p = len(req.prompt) + req.metrics.n_generated - 1
+            g = greedy_np[slot]
+            a = 0             # leading draft proposals the target confirms
+            while a < k and window[slot, a + 1] == g[a]:
+                a += 1
+            emit = min(a + 1, req.max_new_tokens - req.metrics.n_generated)
+            if self.ecfg.eos_id is not None:
+                hits = np.flatnonzero(g[:emit] == self.ecfg.eos_id)
+                if hits.size:     # stop lands mid-window: nothing past it
+                    emit = int(hits[0]) + 1
+            req.tokens.extend(int(t) for t in g[:emit])
+            req.metrics.n_generated += emit
+            produced += emit
+            self.metrics.proposed_tokens += k
+            self.metrics.accepted_tokens += emit - 1
+            self.metrics.accept_hist[emit] = (
+                self.metrics.accept_hist.get(emit, 0) + 1)
+            slot_ids[slot] = slot
+            new_index[slot] = p + emit
+            sel[slot] = emit
+            scrub[slot, :W - emit] = p + emit + np.arange(W - emit)
+            if self._finished(req):
+                to_retire.append(slot)
+        self.store.rollback(slot_ids, new_index, scrub)
+        if self._draft_recurrent:
+            # recurrent state has no positions to scrub: each slot adopts
+            # the snapshot taken right after its last accepted token
+            self.draft_store.adopt_selected(snapshots, sel)
+        else:
+            # the draft wrote K/V at exactly the target's window positions
+            # (feed i writes position p+i), so the same rollback plan applies
+            self.draft_store.rollback(slot_ids, new_index, scrub)
+        for slot in to_retire:
+            self._retire(slot)
+        self.metrics.observe_tokens(produced)
+
     def _finished(self, req: Request) -> bool:
         return (req.metrics.n_generated >= req.max_new_tokens
                 or (self.ecfg.eos_id is not None
@@ -578,6 +818,8 @@ class Engine:
     def _retire(self, slot: int) -> None:
         req = self.scheduler.retire(slot)
         self.store.reset(slot)
+        if self.draft_store is not None:
+            self.draft_store.reset(slot)
         req.state = RequestState.DONE
         req.metrics.finish_s = now()
         self.metrics.completed += 1
@@ -615,6 +857,8 @@ class Engine:
             if req.id == req_id:
                 self.scheduler.retire(slot)
                 self.store.reset(slot)
+                if self.draft_store is not None:
+                    self.draft_store.reset(slot)
                 req.state = RequestState.PREEMPTED
                 self.metrics.preempted += 1
                 return req
@@ -644,7 +888,10 @@ class Engine:
         # step count even when their request finishes in it
         n_active = self.scheduler.n_active
         if n_active:
-            self._decode_once()
+            if self.ecfg.speculative:
+                self._spec_decode_once()
+            else:
+                self._decode_once()
         self.metrics.observe_step(self.scheduler.queue_depth, n_active)
 
     def has_work(self) -> bool:

@@ -81,8 +81,27 @@ class EngineMetrics:
                                                # by a router drain (slot
                                                # retired, tokens stand)
     completed: int = 0
-    tokens_generated: int = 0                  # prefill first-tokens + decode
-    decode_steps: int = 0
+    tokens_generated: int = 0                  # prefill first-tokens + ALL
+                                               # tokens decode rounds emitted
+                                               # (accepted counts, NOT steps:
+                                               # a speculative round emits
+                                               # 1..k+1 per slot, so tok/s is
+                                               # token-based by construction)
+    decode_steps: int = 0                      # dispatched TARGET decode-path
+                                               # forwards (plain steps +
+                                               # verify rounds) — spec decode
+                                               # drives steps/token below 1
+    spec_rounds: int = 0                       # draft-verify rounds dispatched
+    draft_steps: int = 0                       # narrow draft decode dispatches
+    proposed_tokens: int = 0                   # draft proposals verified
+                                               # (spec_k per active slot-round)
+    accepted_tokens: int = 0                   # proposals the target confirmed
+                                               # (emitted - 1 per slot-round:
+                                               # the window's position-0 token
+                                               # comes free, draft or no draft)
+    accept_hist: Dict[int, int] = dataclasses.field(default_factory=dict)
+                                               # tokens-emitted-per-slot-round
+                                               # histogram {length: rounds}
     prefill_batches: int = 0
     prefill_tokens: int = 0                    # unpadded prompt tokens prefilled
     prefill_chunks: int = 0                    # block-size prefill chunks
@@ -136,6 +155,13 @@ class EngineMetrics:
             "completed": self.completed,
             "tokens_generated": self.tokens_generated,
             "decode_steps": self.decode_steps,
+            "spec_rounds": self.spec_rounds,
+            "draft_steps": self.draft_steps,
+            "proposed_tokens": self.proposed_tokens,
+            "accepted_tokens": self.accepted_tokens,
+            "acceptance_rate": (self.accepted_tokens
+                                / max(self.proposed_tokens, 1)),
+            "accept_hist": dict(sorted(self.accept_hist.items())),
             "prefill_batches": self.prefill_batches,
             "prefill_tokens": self.prefill_tokens,
             "prefill_chunks": self.prefill_chunks,
@@ -164,6 +190,21 @@ def format_router_stats(stats: Dict) -> str:
             f"{r['requeued']} requeued | fleet: {f['completed']} done, "
             f"{f['tokens_generated']} tok, {f['sustained_tok_s']:.1f} tok/s"
             f"{drained}")
+
+
+def format_spec_stats(s: Dict) -> str:
+    """One-line speculative-decode summary from ``EngineMetrics.summary()``
+    — the launch/serve.py report line when ``--speculative`` is on. Shows
+    the lever (target decode-path dispatches vs tokens they bought) and the
+    accepted-length histogram {tokens-emitted-in-a-round: rounds}."""
+    hist = " ".join(f"{length}:{count}"
+                    for length, count in s["accept_hist"].items())
+    spt = s["decode_steps"] / max(s["tokens_generated"] - s["completed"], 1)
+    return (f"speculative: {s['spec_rounds']} rounds + {s['draft_steps']} "
+            f"draft steps | {s['accepted_tokens']}/{s['proposed_tokens']} "
+            f"proposals accepted ({s['acceptance_rate']:.2f}) | "
+            f"{spt:.2f} target steps/decode-token | "
+            f"accepted-length hist {{{hist}}}")
 
 
 def format_memory_stats(ms: Dict) -> str:

@@ -108,16 +108,21 @@ class Router:
 
     def __init__(self, cfg: ArchConfig, params,
                  engine_cfg: EngineConfig = None,
-                 router_cfg: RouterConfig = None):
+                 router_cfg: RouterConfig = None, *, draft_params=None):
         self.rcfg = router_cfg or RouterConfig()
         if self.rcfg.n_hosts < 1:
             raise ValueError(f"n_hosts must be >= 1, got {self.rcfg.n_hosts}")
         if self.rcfg.handoff_threshold < 0:
             raise ValueError("handoff_threshold must be >= 0")
         # one engine per host; compiled steps are shared across them via the
-        # _jitted_steps cache, so N hosts costs N caches, not N XLA compiles
+        # _jitted_steps cache, so N hosts costs N caches, not N XLA compiles.
+        # ``draft_params`` (speculative decode) is shared the same way: every
+        # host runs the same draft program over its own slot-synced store, so
+        # a drain handoff lands on a host whose draft re-prefills the
+        # continuation prompt like any other admission — lockstep by
+        # construction, nothing draft-specific to hand off.
         self.engines: List[Engine] = [
-            Engine(cfg, params, engine_cfg)
+            Engine(cfg, params, engine_cfg, draft_params=draft_params)
             for _ in range(self.rcfg.n_hosts)]
         self._draining: Set[int] = set()
         self._affinity: Dict[str, int] = {}        # key -> host of last lease
@@ -343,7 +348,9 @@ class Router:
         per_host = [e.stats() for e in self.engines]
         fleet_keys = ("submitted", "rejected", "admissions_deferred",
                       "evicted", "preempted", "completed", "tokens_generated",
-                      "decode_steps", "prefill_batches", "prefill_tokens")
+                      "decode_steps", "prefill_batches", "prefill_tokens",
+                      "spec_rounds", "draft_steps", "proposed_tokens",
+                      "accepted_tokens")
         fleet = {k: sum(h[k] for h in per_host) for k in fleet_keys}
         # fleet rate over the FLEET's first->last token span — summing
         # per-host rates would overstate it whenever host spans differ

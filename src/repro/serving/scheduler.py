@@ -16,6 +16,8 @@ from __future__ import annotations
 from collections import deque
 from typing import Deque, Dict, List, Sequence, Tuple
 
+import numpy as np
+
 MIN_BUCKET = 16
 
 
@@ -97,6 +99,20 @@ class Scheduler:
             key = (b, group_key(slot, req) if group_key is not None else 0)
             groups.setdefault(key, []).append((slot, req))
         return [(b, pairs) for (b, _), pairs in sorted(groups.items())]
+
+    def decode_batch(self) -> Tuple[np.ndarray, np.ndarray]:
+        """The in-flight batch as fixed-shape host arrays: ``tokens``
+        (n_slots, 1) int32 — each active slot's last emitted token, the
+        input every decode variant feeds next — and the ``active`` mask
+        (n_slots,). Shared by the plain decode step and the speculative
+        draft/verify round (serving/engine.py), so the two decode paths can
+        never disagree about what a slot feeds."""
+        tokens = np.zeros((self.n_slots, 1), np.int32)
+        active = np.zeros((self.n_slots,), bool)
+        for slot, req in self.active.items():
+            tokens[slot, 0] = req.last_token
+            active[slot] = True
+        return tokens, active
 
     def retire(self, slot: int):
         req = self.active.pop(slot)

@@ -336,6 +336,92 @@ def _paged_writeback(cache, view):
     return out
 
 
+@functools.partial(jax.jit, static_argnums=(2,), donate_argnums=(0,))
+def _paged_writeback_window(cache, view, W):
+    """Adopt a verify-updated contiguous view back into the pool: the verify
+    step wrote W entries per row at its pre-step index..index+W-1, so O(B*W)
+    pool cells change. Positions past the row length — idle rows whose index
+    ran on, or verify overshoot near the end of a lease — redirect to the
+    null block, exactly like the block-native verify's own writes."""
+    index = cache["index"]                       # pre-step write positions
+    tables = cache["tables"]
+    B = tables.shape[0]
+    bs = cache["k"].shape[2]
+    S = view["k"].shape[2]
+    rows = jnp.arange(B)
+    positions = index[:, None] + jnp.arange(W, dtype=jnp.int32)[None, :]
+    pos_c = jnp.minimum(positions, S - 1)
+    in_range = positions < S
+    phys = jnp.where(in_range, tables[rows[:, None], pos_c // bs], 0)
+    off = jnp.where(in_range, pos_c % bs, 0)
+    out = {}
+    for name, leaf in cache.items():
+        if name == "index":
+            out[name] = view["index"]
+        elif name == "tables":
+            out[name] = leaf
+        else:
+            out[name] = leaf.at[:, phys, off].set(
+                view[name][:, rows[:, None], pos_c])
+    return out
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _scrub_positions(cache, slots, new_index, pos):
+    """Speculative rollback, contiguous layout: restore the REJECTED draft
+    positions ``pos[i, :]`` of each row ``slots[i]`` to the pristine pattern
+    and set the row's index to its post-acceptance value. Fixed shapes —
+    ``slots`` pads with n_slots and ``pos`` with max_seq_len, both
+    out-of-bounds so ``mode="drop"`` discards them — one compiled executable
+    per spec-k. Correctness-critical, not hygiene: future verify horizons
+    reach these positions, so a stale rejected entry would perturb scores."""
+    out = {}
+    for name, leaf in cache.items():
+        if name == "index":
+            out[name] = leaf.at[slots].set(new_index, mode="drop")
+            continue
+        fill = jnp.full((leaf.shape[0],) + pos.shape + leaf.shape[3:],
+                        pristine_value(name), leaf.dtype)
+        out[name] = leaf.at[:, slots[:, None], pos].set(fill, mode="drop")
+    return out
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _paged_scrub_positions(cache, phys, off, slots, new_index):
+    """Speculative rollback, paged layout: same contract as
+    :func:`_scrub_positions` with the (slot, position) -> (phys, off)
+    translation done host-side through the table mirror. Pad entries and
+    positions past a row's length arrive pre-redirected to the null block 0 —
+    scrubbing the null block to pristine is harmless (it is never read
+    unmasked) and keeps the scatter shape fixed."""
+    out = {}
+    for name, leaf in cache.items():
+        if name == "index":
+            out[name] = leaf.at[slots].set(new_index, mode="drop")
+        elif name == "tables":
+            out[name] = leaf
+        else:
+            fill = jnp.full((leaf.shape[0],) + phys.shape + leaf.shape[3:],
+                            pristine_value(name), leaf.dtype)
+            out[name] = leaf.at[:, phys, off].set(fill)
+    return out
+
+
+@jax.jit
+def _select_snapshot_rows(stacked, sel):
+    """Per-slot select over stacked recurrent-state snapshots: leaf
+    (N, L, B, ...) + sel (B,) -> (L, B, ...) where row b comes from snapshot
+    sel[b]. The recurrent-draft rollback: a draft that consumed m accepted
+    tokens adopts snapshot m wholesale — recurrent state has no per-position
+    axis to scrub, so rollback is selection, not un-writing."""
+    def f(path, leaf):
+        if _leaf_name(path) == "index":
+            return leaf[sel, jnp.arange(leaf.shape[1])]
+        picked = leaf[sel, :, jnp.arange(sel.shape[0])]   # (B, L, ...)
+        return jnp.moveaxis(picked, 0, 1)
+    return jax.tree_util.tree_map_with_path(f, stacked)
+
+
 # ===========================================================================
 # the protocol + backends
 # ===========================================================================
@@ -431,6 +517,22 @@ class SlotStore(abc.ABC):
         were donated to it)."""
         self.cache = new_cache
 
+    def swap_window(self, new_cache: Dict, window: int) -> None:
+        """Adopt the cache returned by a W-position verify step (speculative
+        decode). Backends whose decode bridge is the cache itself just swap;
+        the paged gather bridge overrides this to scatter all W written
+        entries per row back into block layout."""
+        self.swap(new_cache)
+
+    def rollback(self, slots, new_index, positions) -> None:
+        """Speculative rollback: scrub the rejected draft positions
+        ``positions[i, :]`` (pad: max_seq_len) of each row ``slots[i]``
+        (pad: n_slots) back to pristine and set the surviving rows' index to
+        ``new_index[i]``. Fixed-shape host arrays — one compiled scrub per
+        spec-k, regardless of the per-slot acceptance pattern."""
+        raise NotImplementedError(
+            f"{self.kind} store does not support speculative rollback")
+
     def gather_view(self) -> Dict:
         """Contiguous-layout view of the cache (inspection / tests)."""
         return self.cache
@@ -488,6 +590,12 @@ class ContiguousKVStore(SlotStore):
         n_valid = jnp.asarray(n_valid, jnp.int32)
         assert slots.shape == n_valid.shape and slots.ndim == 1
         self.cache = _scatter_kv_rows(self.cache, kv, slots, n_valid)
+
+    def rollback(self, slots, new_index, positions) -> None:
+        self.cache = _scrub_positions(self.cache,
+                                      jnp.asarray(slots, jnp.int32),
+                                      jnp.asarray(new_index, jnp.int32),
+                                      jnp.asarray(positions, jnp.int32))
 
 
 class PagedKVStore(SlotStore):
@@ -922,6 +1030,36 @@ class PagedKVStore(SlotStore):
         else:
             self.cache = _paged_writeback(self.cache, new_cache)
 
+    def swap_window(self, new_cache: Dict, window: int) -> None:
+        if self.native:
+            self.cache = new_cache                # pool in, pool out
+        else:
+            self.cache = _paged_writeback_window(self.cache, new_cache,
+                                                 int(window))
+
+    def rollback(self, slots, new_index, positions) -> None:
+        """Un-write rejected draft positions through the block tables. A
+        rejected position always lands in a PRIVATE cell: generation
+        positions start at prompt_len, past every shared prefix block, and
+        within the whole-generation lease — so scrubbing can never touch a
+        shared or foreign block. Positions past the lease (verify overshoot
+        near max_seq_len) and pad entries redirect to the null block, the
+        same machinery admission uses for shared-position writes."""
+        slots_np = np.asarray(slots, np.int64)
+        pos_np = np.asarray(positions, np.int64)
+        valid = (slots_np < self.n_slots)[:, None] & (pos_np < self.max_seq_len)
+        safe_slots = np.where(slots_np < self.n_slots, slots_np, 0)
+        pos_c = np.where(valid, pos_np, 0)
+        phys = np.where(valid,
+                        self._tables[safe_slots[:, None],
+                                     pos_c // self.block_size], 0)
+        off = np.where(valid, pos_c % self.block_size, 0)
+        self.cache = _paged_scrub_positions(
+            self.cache,
+            jnp.asarray(phys, jnp.int32), jnp.asarray(off, jnp.int32),
+            jnp.asarray(slots_np, jnp.int32),
+            jnp.asarray(new_index, jnp.int32))
+
     def gather_view(self) -> Dict:
         self._sync_tables()
         return _paged_gather(self.cache)
@@ -1024,6 +1162,18 @@ class RecurrentStateStore(SlotStore):
         n_valid = jnp.asarray(n_valid, jnp.int32)
         assert slots.shape == n_valid.shape and slots.ndim == 1
         self.cache = _scatter_state_rows(self.cache, states, slots, n_valid)
+
+    def adopt_selected(self, snapshots: Sequence[Dict], sel) -> None:
+        """Speculative rollback for a recurrent DRAFT model: recurrent state
+        has no per-position axis to scrub, so the engine keeps one state
+        snapshot per draft step of the round and each slot adopts the
+        snapshot taken right after it consumed its last ACCEPTED token —
+        snapshot m for a slot that advanced m tokens (snapshot 0 is the
+        pre-round state). The snapshot's index leaf already carries the
+        post-acceptance position, so no separate index fix-up is needed."""
+        stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *snapshots)
+        self.cache = _select_snapshot_rows(stacked,
+                                           jnp.asarray(sel, jnp.int32))
 
 
 def make_store(cfg: ArchConfig, n_slots: int, max_seq_len: int,
