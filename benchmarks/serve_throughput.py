@@ -44,6 +44,16 @@ streams bit-identical to plain greedy, mean accepted length > 1, and target
 decode-path dispatches per emitted token strictly < 1.0 — recording tok/s
 vs plain and the accepted-length histogram: the regression record for
 reports/BENCH_spec.json and the CI artifact.
+
+``--sampling-report PATH`` runs the sampling-engine cell instead: the same
+request mix served all-greedy and all-sampled (temperature/top-k/top-p,
+per-request seeds) through the ONE shared executable, recording the
+per-decode-step sampler overhead; a seeded request's stream is hard-asserted
+bit-identical alone vs inside mixed traffic vs on the paged backend (the
+batch-invariance claim), and streaming TTFT is measured from HTTP POST to
+the first SSE token event through serving/api.py next to the engine-loop
+TTFT: the regression record for reports/BENCH_sampling.json and the CI
+artifact.
 """
 
 from __future__ import annotations
@@ -635,6 +645,153 @@ def spec_report(cfg, params, *, slots: int, prompt_len: int, gen: int,
     return report
 
 
+def sampling_report(cfg, params, *, slots: int, prompt_len: int, gen: int,
+                    requests: int, out_path: str) -> dict:
+    """The sampling-engine claims, measured: (1) per-decode-step overhead of
+    the batched sampler vs pure greedy traffic — both mixes run the SAME
+    executable (masked param application), so the cost is the sampler math,
+    not a second program; (2) batch invariance, hard-asserted on tokens: one
+    seeded request decodes alone, inside mixed traffic, and on the paged
+    backend — three bit-identical streams or the report dies; (3) streaming
+    TTFT — wall time from HTTP POST to the first SSE token event through
+    serving/api.py, next to the engine-loop TTFT the CLI path records."""
+    import http.client
+    import time
+
+    from repro.serving.api import serve_api
+    from repro.serving.sampling import SamplingParams
+
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, (prompt_len,), dtype=np.int32)
+               for _ in range(requests)]
+    base = dict(max_slots=slots, max_queue=requests,
+                max_seq_len=prompt_len + gen)
+    sampled_sp = [SamplingParams(temperature=0.8, top_k=20, top_p=0.95,
+                                 seed=1000 + i) for i in range(requests)]
+
+    def serve(sampling_for, ecfg_kw=None):
+        eng = Engine(cfg, params, EngineConfig(**base, **(ecfg_kw or {})))
+        t0 = time.perf_counter()
+        reqs = [eng.submit(p, gen, sampling=sampling_for(i), strict=True)
+                for i, p in enumerate(prompts)]
+        eng.run_until_complete()
+        wall_s = time.perf_counter() - t0
+        s = eng.stats()
+        toks = [list(r.tokens) for r in reqs]
+        eng.close()
+        return s, wall_s, toks
+
+    # warmup compiles the shared executable and both prefill buckets; the
+    # sampled warmup also pays the one-off sampler trace
+    serve(lambda i: None)
+    serve(lambda i: sampled_sp[i])
+    serve(lambda i: sampled_sp[i], dict(cache_backend="paged", block_size=8))
+
+    def decode_us(s, wall_s):
+        # decode-path wall only: prefill forwards and cache-seed writes are
+        # admission cost, identical across the two mixes
+        decode_s = wall_s - s["prefill_wait_s"] - s["seed_write_s"]
+        return 1e6 * decode_s / max(s["decode_steps"], 1)
+
+    s_g, wall_g, _ = serve(lambda i: None)
+    s_s, wall_s_, toks_mixed_base = serve(lambda i: sampled_sp[i])
+    us_greedy = decode_us(s_g, wall_g)
+    us_sampled = decode_us(s_s, wall_s_)
+
+    # --- batch invariance, asserted on tokens --------------------------
+    def solo(ecfg_kw=None):
+        eng = Engine(cfg, params, EngineConfig(**base, **(ecfg_kw or {})))
+        req = eng.submit(prompts[0], gen, sampling=sampled_sp[0], strict=True)
+        eng.run_until_complete()
+        out = list(req.tokens)
+        eng.close()
+        return out
+
+    alone = solo()
+    assert toks_mixed_base[0] == alone, (
+        "seeded stream changed with batchmates: sampling is not "
+        "batch-invariant")
+    assert solo(dict(cache_backend="paged", block_size=8)) == alone, (
+        "seeded stream changed across cache backends")
+    _, _, toks_paged = serve(lambda i: sampled_sp[i],
+                             dict(cache_backend="paged", block_size=8))
+    assert toks_paged == toks_mixed_base, (
+        "sampled batch diverged between contiguous and paged backends")
+
+    # --- streaming TTFT over HTTP vs the engine-loop TTFT ---------------
+    eng = Engine(cfg, params, EngineConfig(**base))
+    req = eng.submit(prompts[0], gen, strict=True)
+    eng.run_until_complete()
+    cli_ttft_ms = 1e3 * req.metrics.ttft_s
+    eng.close()
+
+    eng = Engine(cfg, params, EngineConfig(**base))
+    srv = serve_api(eng, port=0, mesh=shd.current_mesh())
+    try:
+        conn = http.client.HTTPConnection("127.0.0.1", srv.port, timeout=60)
+        t0 = time.perf_counter()
+        conn.request("POST", "/v1/completions",
+                     body=json.dumps({
+                         "prompt": [int(t) for t in prompts[0]],
+                         "max_new_tokens": gen, "stream": True}).encode(),
+                     headers={"Content-Type": "application/json"})
+        resp = conn.getresponse()
+        http_ttft_ms = None
+        for raw in resp.fp:
+            line = raw.decode().strip()
+            if line.startswith("data: ") and "token" in line:
+                http_ttft_ms = 1e3 * (time.perf_counter() - t0)
+                break
+        conn.close()
+        assert http_ttft_ms is not None, "no SSE token event arrived"
+    finally:
+        srv.close()
+        eng.close()
+
+    report = {
+        "benchmark": "sampling",
+        "arch": cfg.name,
+        "slots": slots,
+        "prompt_len": prompt_len,
+        "gen": gen,
+        "requests": requests,
+        "params": {"temperature": 0.8, "top_k": 20, "top_p": 0.95},
+        "batch_invariant": True,        # hard-asserted above, or we died
+        "greedy": {
+            "wall_s": wall_g,
+            "decode_us_per_step": us_greedy,
+            "sustained_tok_s": s_g["sustained_tok_s"],
+        },
+        "sampled": {
+            "wall_s": wall_s_,
+            "decode_us_per_step": us_sampled,
+            "sustained_tok_s": s_s["sustained_tok_s"],
+            "sampled_tokens": s_s["sampled_tokens"],
+        },
+        "sampling_overhead_pct": 100.0 * (us_sampled - us_greedy)
+                                 / max(us_greedy, 1e-9),
+        "streaming": {
+            "http_ttft_ms": http_ttft_ms,
+            "cli_ttft_ms": cli_ttft_ms,
+        },
+    }
+    emit("sample_greedy", us_greedy,
+         f"tok/s={s_g['sustained_tok_s']:.1f}")
+    emit("sample_full", us_sampled,
+         f"tok/s={s_s['sustained_tok_s']:.1f} "
+         f"overhead={report['sampling_overhead_pct']:.1f}%")
+    emit("stream_ttft", 1e3 * http_ttft_ms,
+         f"http={http_ttft_ms:.1f}ms cli={cli_ttft_ms:.1f}ms")
+    Path(out_path).parent.mkdir(parents=True, exist_ok=True)
+    Path(out_path).write_text(json.dumps(report, indent=2) + "\n")
+    print(f"# sampling: {us_sampled:.0f}us vs {us_greedy:.0f}us greedy per "
+          f"decode step ({report['sampling_overhead_pct']:+.1f}%), seeded "
+          f"streams bit-identical across batchmates and backends, "
+          f"HTTP TTFT {http_ttft_ms:.1f}ms vs CLI {cli_ttft_ms:.1f}ms")
+    print(f"# wrote {out_path}")
+    return report
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tinyllama-1.1b")
@@ -679,6 +836,12 @@ def main(argv=None) -> int:
                          "the throughput sweep")
     ap.add_argument("--spec-k", type=int, nargs="+", default=[2, 4],
                     help="spec_k values --spec-report sweeps")
+    ap.add_argument("--sampling-report", default="",
+                    help="write the sampling-engine JSON (per-decode-step "
+                         "sampler overhead vs greedy, seeded streams "
+                         "hard-asserted bit-identical across batchmates and "
+                         "backends, HTTP streaming TTFT vs the CLI loop) "
+                         "here and skip the throughput sweep")
     ap.add_argument("--prefix-prompt-len", type=int, default=40,
                     help="prompt length for --prefix-report (its own flag: "
                          "the shares 0/50/90%% must land on distinct "
@@ -702,6 +865,13 @@ def main(argv=None) -> int:
                 cfg, params, prompt_len=args.prefix_prompt_len, gen=8,
                 block_size=args.block_size, requests=max(args.requests, 4),
                 out_path=args.prefix_report)
+            return 0
+
+        if args.sampling_report:
+            sampling_report(
+                cfg, params, slots=2, prompt_len=args.prompt_len,
+                gen=args.gen, requests=args.requests,
+                out_path=args.sampling_report)
             return 0
 
         if args.spec_report:

@@ -55,10 +55,12 @@ from repro.core import tensorizer as tz
 from repro.distributed import sharding as shd
 from repro.launch.mesh import make_smoke_mesh
 from repro.models import init_model
+from repro.serving.api import serve_api
 from repro.serving.engine import Engine, EngineConfig
 from repro.serving.metrics import (format_memory_stats, format_router_stats,
-                                   format_spec_stats)
+                                   format_sampling_stats, format_spec_stats)
 from repro.serving.router import Router, RouterConfig
+from repro.serving.sampling import SamplingParams
 
 
 def _quant_predicate(path, leaf):
@@ -145,8 +147,51 @@ def build_parser() -> argparse.ArgumentParser:
                          "fleet steps — queued requests re-place, long "
                          "in-flight generations hand off to other hosts "
                          "(0 = never drain)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature for the sampled half of the "
+                         "synthetic traffic mix (0 = all-greedy). Even-"
+                         "indexed requests sample at this temperature with "
+                         "per-request seeds, odd ones stay greedy, so decode "
+                         "batches mix both through ONE executable")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="sampled requests: keep only the k highest-logit "
+                         "tokens (0 = off)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="sampled requests: nucleus filtering — smallest "
+                         "probability mass >= p survives (1.0 = off)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="base sampling seed: request i samples with "
+                         "seed + i; randomness is counter-style per (seed, "
+                         "position), so a seeded stream is batch-invariant")
+    ap.add_argument("--stop", action="append", metavar="IDS",
+                    help="stop sequence as comma-separated token ids "
+                         "(repeatable; applies to every request) — a request "
+                         "retires when its generated stream ends with one")
+    ap.add_argument("--api-port", type=int, default=-1,
+                    help="boot the streaming HTTP serve API (SSE "
+                         "completions + embeddings/classify; serving/api.py) "
+                         "on this port instead of running the synthetic "
+                         "traffic loop (0 = OS-assigned, -1 = off). Fronts "
+                         "the single engine, or the Router with --hosts > 1")
     ap.add_argument("--model-parallel", type=int, default=1)
     return ap
+
+
+def _sampling_for(args, i: int):
+    """The synthetic traffic generator's per-request sampling mix: with
+    --temperature > 0, EVEN-indexed requests sample (per-request seed =
+    --seed + i) while odd ones stay greedy — every decode batch then mixes
+    greedy and sampled rows through the one masked executable, which is the
+    heterogeneous-batch case worth smoking. --stop applies to all."""
+    stops = tuple(tuple(int(t) for t in s.split(","))
+                  for s in (args.stop or []))
+    if args.temperature > 0 and i % 2 == 0:
+        return SamplingParams(
+            temperature=args.temperature, top_k=args.top_k,
+            top_p=args.top_p, seed=args.seed + i, stop=stops)
+    if stops:
+        return SamplingParams(stop=stops)
+    return None
 
 
 def _serve_fleet(cfg, params, ecfg, prompts, args, *, draft_params=None) -> int:
@@ -173,6 +218,7 @@ def _serve_fleet(cfg, params, ecfg, prompts, args, *, draft_params=None) -> int:
     for i in range(args.requests):
         requests.append(router.submit(prompts[i], args.gen,
                                       session=str(i % args.hosts),
+                                      sampling=_sampling_for(args, i),
                                       strict=True))
         tick(args.stagger_steps)
     while router.has_work():
@@ -185,6 +231,9 @@ def _serve_fleet(cfg, params, ecfg, prompts, args, *, draft_params=None) -> int:
               f"host {trail}{handed} | {r.n_generated} tok", flush=True)
     s = router.stats()
     print(f"[serve] router: {format_router_stats(s)}", flush=True)
+    if args.temperature > 0 or args.stop:
+        print(f"[serve] fleet {format_sampling_stats(s['fleet'])}",
+              flush=True)
     if args.speculative:
         f = s["fleet"]
         rate = f["accepted_tokens"] / max(f["proposed_tokens"], 1)
@@ -229,6 +278,19 @@ def main(argv=None) -> int:
     if args.speculative and args.paged_kernel:
         ap.error("--speculative does not support --paged-kernel (the Pallas "
                  "kernel is a single-query decode shape)")
+    if args.temperature < 0:
+        ap.error("--temperature must be >= 0 (0 = greedy)")
+    if not 0.0 < args.top_p <= 1.0:
+        ap.error("--top-p must be in (0, 1]")
+    if args.top_k < 0:
+        ap.error("--top-k must be >= 0 (0 = off)")
+    if args.temperature > 0 and args.speculative:
+        ap.error("--speculative is greedy-only: non-greedy sampling needs "
+                 "rejection-sampling acceptance (a ROADMAP follow-up) — "
+                 "drop --speculative or --temperature")
+    for s in args.stop or []:
+        if not all(t.strip().lstrip("-").isdigit() for t in s.split(",")):
+            ap.error(f"--stop takes comma-separated token ids, got {s!r}")
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -291,6 +353,27 @@ def main(argv=None) -> int:
             speculative=args.speculative, spec_k=args.spec_k,
             draft=draft_cfg)
 
+        if args.api_port >= 0:
+            # server mode: no synthetic traffic — expose the engine (or the
+            # fleet) over HTTP and block until interrupted
+            if args.hosts > 1:
+                target = Router(cfg, params, ecfg,
+                                RouterConfig(n_hosts=args.hosts),
+                                draft_params=draft_params)
+                front = f"router, {args.hosts} hosts"
+            else:
+                target = Engine(cfg, params, ecfg,
+                                draft_params=draft_params)
+                front = "single engine"
+            srv = serve_api(target, port=args.api_port, mesh=mesh)
+            print(f"[serve] HTTP API on {srv.url} ({front}) — "
+                  f"POST /v1/completions (SSE with \"stream\": true), "
+                  f"/v1/embeddings, /v1/classify; GET /v1/stats /healthz",
+                  flush=True)
+            srv.wait()
+            target.close()
+            return 0
+
         if args.hosts > 1:
             return _serve_fleet(cfg, params, ecfg, prompts, args,
                                 draft_params=draft_params)
@@ -298,7 +381,9 @@ def main(argv=None) -> int:
         engine = Engine(cfg, params, ecfg, draft_params=draft_params)
         requests = []
         for i in range(args.requests):
-            requests.append(engine.submit(prompts[i], args.gen, strict=True))
+            requests.append(engine.submit(prompts[i], args.gen,
+                                          sampling=_sampling_for(args, i),
+                                          strict=True))
             for _ in range(args.stagger_steps):
                 engine.step()
         engine.run_until_complete()
@@ -324,6 +409,8 @@ def main(argv=None) -> int:
               f"{s['admissions_deferred']} deferred (backpressure)", flush=True)
         if args.speculative:
             print(f"[serve] {format_spec_stats(s)}", flush=True)
+        if args.temperature > 0 or args.stop:
+            print(f"[serve] {format_sampling_stats(s)}", flush=True)
         if args.prefix_cache:
             print(f"[serve] prefix cache: {s['prefix_hits']} hits | "
                   f"{s['prefix_blocks_reused']} blocks reused | "

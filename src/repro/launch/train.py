@@ -81,6 +81,10 @@ def main(argv=None) -> int:
                 ds.restore(jax.tree.map(lambda x: np.asarray(x), state["data"]))
                 start = s
                 print(f"[train] resumed from checkpoint step {s}", flush=True)
+                if start >= args.steps:
+                    print(f"[train] checkpoint already at/past --steps "
+                          f"{args.steps}; nothing to do", flush=True)
+                    return 0
 
         train_step = jax.jit(ST.make_train_step(cfg), donate_argnums=(0, 1))
 

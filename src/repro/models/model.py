@@ -277,8 +277,18 @@ def _dense_layer_fwd(lp, x, cfg: ArchConfig, positions, positions3):
     return x + y, aux
 
 
+def _with_hidden(params, cfg: ArchConfig, x, aux, return_hidden: bool):
+    """Tail of forward: logits (+ final-norm hidden states when asked).
+    The hidden row at the last prompt position is the embedding surface the
+    serve API's non-generative endpoints read."""
+    if return_hidden:
+        return _logits(params, cfg, x), aux, L.apply_norm(
+            params["final_ln"], x, cfg)
+    return _logits(params, cfg, x), aux
+
+
 def forward(params: Dict, cfg: ArchConfig, batch: Dict, *,
-            return_kv: bool = False):
+            return_kv: bool = False, return_hidden: bool = False):
     """Full-sequence forward. Returns (logits, aux_loss), or with
     ``return_kv=True`` (dense/moe/vlm only) (logits, aux_loss, kv) where kv is
     the per-layer K/V in decode-cache layout — {"k","v": (L, B, S, KV, hd)}
@@ -299,6 +309,9 @@ def forward(params: Dict, cfg: ArchConfig, batch: Dict, *,
     positions3 = batch.get("positions3")
 
     x = _embed_in(params, cfg, batch)
+
+    if return_hidden and return_kv:
+        raise ValueError("return_hidden and return_kv are exclusive paths")
 
     if cfg.family in ("dense", "moe", "vlm"):
         if return_kv:
@@ -328,17 +341,20 @@ def forward(params: Dict, cfg: ArchConfig, batch: Dict, *,
             x, a = _dense_layer_fwd(lp, x, cfg, positions, positions3)
             return (x, aux + a), None
         (x, aux), _ = _scan(_maybe_remat(body, cfg), (x, 0.0), params["layers"], cfg)
-        return _logits(params, cfg, x), aux
+        return _with_hidden(params, cfg, x, aux, return_hidden)
 
     if return_kv:
         raise ValueError(f"return_kv is a dense/moe/vlm cache path, not {cfg.family}")
 
     if cfg.family == "encdec":
+        if return_hidden:
+            raise ValueError("return_hidden is a decoder-only path, not encdec")
         return _encdec_forward(params, cfg, batch, positions)
 
     if cfg.family == "hybrid":
         x, _ = _hybrid_forward(params["hybrid"], cfg, x, positions)
-        return _logits(params, cfg, x), jnp.zeros((), jnp.float32)
+        return _with_hidden(params, cfg, x, jnp.zeros((), jnp.float32),
+                            return_hidden)
 
     if cfg.family == "ssm":
         def body(carry, lp):
@@ -350,7 +366,8 @@ def forward(params: Dict, cfg: ArchConfig, batch: Dict, *,
             y, _ = XL.apply_slstm(lp["slstm"], h, cfg)
             return x + y, None
         x, _ = _scan(_maybe_remat(body, cfg), x, params["xlstm"]["pairs"], cfg)
-        return _logits(params, cfg, x), jnp.zeros((), jnp.float32)
+        return _with_hidden(params, cfg, x, jnp.zeros((), jnp.float32),
+                            return_hidden)
 
     raise ValueError(cfg.family)
 

@@ -157,7 +157,9 @@ def prefill_with_cache_chunked(params: Dict, cfg: ArchConfig,
     chunks, each attending over everything already written plus itself
     (models/attention.py ``chunked_prefill_attention_with_kv``) — and return
     ``(first_tokens, kv)`` with kv in cache layout, the same contract as the
-    single-shot :func:`prefill_with_cache` step.
+    single-shot :func:`prefill_with_cache` step — except ``first_tokens`` is
+    the (B, vocab_padded) f32 last-position logits row (the step builders in
+    models/steps.py turn it into tokens, greedy or sampled).
 
     The point is the score matrix: single-shot fused prefill materializes
     (B, H, S, S) f32 scores, which caps the admissible prompt length at
@@ -292,8 +294,10 @@ def _chunked_prefill(params: Dict, cfg: ArchConfig, tokens: jax.Array,
             start_chunk, n_chunks,
             lambda c, carry: chunk_body(carry, c), (kv, last_x0))
     logits = M._logits(params, cfg, last_x[:, None, :])     # (B, 1, V)
-    first = jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
-    return first, kv
+    # return the f32 logits row, not a token: the step builders (models/
+    # steps.py) own the logits->token choice so greedy and sampled requests
+    # share this one prefill executable
+    return logits[:, 0, :].astype(jnp.float32), kv
 
 
 def prefill_recurrent(params: Dict, cfg: ArchConfig, tokens: jax.Array,
@@ -302,7 +306,7 @@ def prefill_recurrent(params: Dict, cfg: ArchConfig, tokens: jax.Array,
     """Fused admission prefill for the recurrent families (ssm/hybrid): run
     the right-padded prompt batch through the single-token decode body with a
     ``lax.scan`` over time — ONE dispatched instruction per admission bucket —
-    and return (first_tokens (B,), cache) where cache holds each row's
+    and return (last_logits (B, vocab_padded) f32, cache) where cache holds each row's
     post-prompt state (mamba conv/ssm, xlstm mLSTM/sLSTM, hybrid attn K/V),
     ready to scatter into leased slot rows.
 
@@ -314,10 +318,10 @@ def prefill_recurrent(params: Dict, cfg: ArchConfig, tokens: jax.Array,
     step — the recurrent analogue of the dense fused==replay guarantee."""
     B, Sb = tokens.shape
     cache0 = init_cache(cfg, B, max_seq_len, per_slot_index=True)
-    first0 = jnp.zeros((B,), jnp.int32)
+    row0 = jnp.zeros((B, cfg.vocab_padded), jnp.float32)
 
     def body(carry, inp):
-        cache, first = carry
+        cache, row = carry
         t, tok = inp                                        # (), (B,)
         logits, new_cache = decode(params, cfg, cache, {"tokens": tok[:, None]})
         keep = t <= last_index                              # (B,) still in prompt
@@ -333,14 +337,14 @@ def prefill_recurrent(params: Dict, cfg: ArchConfig, tokens: jax.Array,
             return jnp.where(mask, new, old)
 
         cache = jax.tree_util.tree_map_with_path(sel, new_cache, cache)
-        tok1 = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
-        first = jnp.where(t == last_index, tok1, first)
-        return (cache, first), None
+        row = jnp.where((t == last_index)[:, None],
+                        logits[:, -1, :].astype(jnp.float32), row)
+        return (cache, row), None
 
-    (cache, first), _ = jax.lax.scan(
-        body, (cache0, first0),
+    (cache, row), _ = jax.lax.scan(
+        body, (cache0, row0),
         (jnp.arange(Sb), jnp.moveaxis(tokens.astype(jnp.int32), 1, 0)))
-    return first, cache
+    return row, cache
 
 
 # ===========================================================================

@@ -86,16 +86,25 @@ def make_prefill_step(cfg: ArchConfig) -> Callable:
 
 def make_prefill_with_cache_step(cfg: ArchConfig) -> Callable:
     """Fused admission step (serving): one bucketed forward over right-padded
-    prompts returning (first_tokens, kv) — the greedy token at each row's
+    prompts returning (first_tokens, kv) — the token at each row's
     ``last_index`` plus the per-layer K/V in cache layout, so the engine seeds
     a leased slot with a single dispatch instead of O(prompt_len) replay
-    decodes (serving/engine.py)."""
-    def prefill_step(params, tokens, last_index):
+    decodes (serving/engine.py).
+
+    ``sampling`` (optional trailing arg, stacked serving/sampling.py params)
+    turns the greedy argmax into the batched batch-invariant sampler — ONE
+    executable per bucket regardless of the batch's greedy/sampled mix
+    (param application is masked, not branched). Legacy/test callers that
+    pass three args trace the plain greedy program, unchanged."""
+    from repro.serving import sampling as SMP
+
+    def prefill_step(params, tokens, last_index, sampling=None):
         logits, kv = SV.prefill_with_cache(params, cfg, {"tokens": tokens})
         B, V = tokens.shape[0], logits.shape[-1]
         idx = jnp.broadcast_to(last_index[:, None, None], (B, 1, V))
         row = jnp.take_along_axis(logits, idx, axis=1)[:, 0, :]
-        return jnp.argmax(row, axis=-1), kv
+        # the emitted token's absolute position (randomness counter)
+        return SMP.choose_tokens(row, sampling, last_index + 1), kv
     return prefill_step
 
 
@@ -105,10 +114,14 @@ def make_recurrent_prefill_step(cfg: ArchConfig, max_seq_len: int) -> Callable:
     dispatch per bucket, same (params, tokens, last_index) ->
     (first_tokens, cache-payload) contract as the dense
     ``make_prefill_with_cache_step`` so the engine's admission path is
-    backend-agnostic (serving/store.py RecurrentStateStore)."""
-    def prefill_step(params, tokens, last_index):
-        return SV.prefill_recurrent(params, cfg, tokens, last_index,
-                                    max_seq_len)
+    backend-agnostic (serving/store.py RecurrentStateStore). Optional
+    ``sampling`` as in ``make_prefill_with_cache_step``."""
+    from repro.serving import sampling as SMP
+
+    def prefill_step(params, tokens, last_index, sampling=None):
+        row, cache = SV.prefill_recurrent(params, cfg, tokens, last_index,
+                                          max_seq_len)
+        return SMP.choose_tokens(row, sampling, last_index + 1), cache
     return prefill_step
 
 
@@ -118,10 +131,14 @@ def make_chunked_prefill_step(cfg: ArchConfig, chunk: int) -> Callable:
     ``make_prefill_with_cache_step``, but scanning the bucket ``chunk``
     tokens at a time so peak prefill memory is (B, H, chunk, S) instead of
     the single-shot (B, H, S, S) score matrix — bit-identical output
-    (models/serve.py ``prefill_with_cache_chunked``)."""
-    def prefill_step(params, tokens, last_index):
-        return SV.prefill_with_cache_chunked(params, cfg, tokens, last_index,
-                                             chunk)
+    (models/serve.py ``prefill_with_cache_chunked``). Optional ``sampling``
+    as in ``make_prefill_with_cache_step``."""
+    from repro.serving import sampling as SMP
+
+    def prefill_step(params, tokens, last_index, sampling=None):
+        row, kv = SV.prefill_with_cache_chunked(params, cfg, tokens,
+                                                last_index, chunk)
+        return SMP.choose_tokens(row, sampling, last_index + 1), kv
     return prefill_step
 
 
@@ -133,17 +150,35 @@ def make_suffix_prefill_step(cfg: ArchConfig, chunk: int) -> Callable:
     ``start_chunk`` — chunks before it are skipped outright, so a hot-prefix
     admission pays O(suffix) prefill while emitting tokens and K/V
     bit-identical to a cold one (models/serve.py
-    ``prefill_with_cache_suffix``)."""
-    def prefill_step(params, tokens, last_index, kv0, start_chunk):
-        return SV.prefill_with_cache_suffix(params, cfg, tokens, last_index,
-                                            chunk, kv0, start_chunk)
+    ``prefill_with_cache_suffix``). Optional ``sampling`` as in
+    ``make_prefill_with_cache_step``."""
+    from repro.serving import sampling as SMP
+
+    def prefill_step(params, tokens, last_index, kv0, start_chunk,
+                     sampling=None):
+        row, kv = SV.prefill_with_cache_suffix(params, cfg, tokens,
+                                               last_index, chunk, kv0,
+                                               start_chunk)
+        return SMP.choose_tokens(row, sampling, last_index + 1), kv
     return prefill_step
 
 
 def make_decode_step(cfg: ArchConfig) -> Callable:
+    """One-token decode step. When the batch dict carries a ``"sampling"``
+    entry (stacked serving/sampling.py params) the logits->token choice runs
+    the batched batch-invariant sampler at each slot's post-step cache index
+    (= the emitted token's absolute position, the randomness counter);
+    without it the step is the historical greedy argmax, bit for bit."""
+    from repro.serving import sampling as SMP
+
     def decode_step(params, cache, batch):
         logits, cache = SV.decode(params, cfg, cache, batch)
-        next_tok = jnp.argmax(logits[:, -1, :], axis=-1)
+        sampling = batch.get("sampling")
+        if sampling is None:
+            next_tok = jnp.argmax(logits[:, -1, :], axis=-1)
+        else:
+            next_tok = SMP.choose_tokens(logits[:, -1, :], sampling,
+                                         cache["index"])
         return next_tok, cache
     return decode_step
 
@@ -152,11 +187,18 @@ def make_paged_decode_step(cfg: ArchConfig, use_kernel: bool = False) -> Callabl
     """Block-native decode step (serving, paged store in native mode): the
     cache argument is the block pool + tables + per-slot index, returned in
     the same layout — no gather-bridge view (models/serve.py
-    ``decode_paged``)."""
+    ``decode_paged``). Sampling contract as ``make_decode_step``."""
+    from repro.serving import sampling as SMP
+
     def decode_step(params, cache, batch):
         logits, cache = SV.decode_paged(params, cfg, cache, batch,
                                         use_kernel=use_kernel)
-        next_tok = jnp.argmax(logits[:, -1, :], axis=-1)
+        sampling = batch.get("sampling")
+        if sampling is None:
+            next_tok = jnp.argmax(logits[:, -1, :], axis=-1)
+        else:
+            next_tok = SMP.choose_tokens(logits[:, -1, :], sampling,
+                                         cache["index"])
         return next_tok, cache
     return decode_step
 
@@ -185,6 +227,26 @@ def make_paged_verify_step(cfg: ArchConfig, window: int) -> Callable:
         greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return greedy, cache
     return verify_step
+
+
+def make_embed_step(cfg: ArchConfig) -> Callable:
+    """Non-generative forward (serve API embeddings/classification): the same
+    right-padded bucketed full-sequence forward the fused prefill runs, but
+    returning each row's last-position final-norm hidden state (the
+    embedding) plus its last-position logits row (classification over
+    candidate token ids / scoring), no cache emitted."""
+    def embed_step(params, tokens, last_index):
+        logits, _, hidden = M.forward(params, cfg, {"tokens": tokens},
+                                      return_hidden=True)
+        B = tokens.shape[0]
+        hid = jnp.take_along_axis(
+            hidden, jnp.broadcast_to(last_index[:, None, None],
+                                     (B, 1, hidden.shape[-1])), axis=1)[:, 0]
+        row = jnp.take_along_axis(
+            logits, jnp.broadcast_to(last_index[:, None, None],
+                                     (B, 1, logits.shape[-1])), axis=1)[:, 0]
+        return hid.astype(jnp.float32), row.astype(jnp.float32)
+    return embed_step
 
 
 # ===========================================================================

@@ -17,10 +17,15 @@ from repro.serving.engine import (          # noqa: F401
 from repro.serving.kv import KVSlotManager              # noqa: F401  (deprecated)
 from repro.serving.metrics import (          # noqa: F401
     EngineMetrics, RequestMetrics, format_memory_stats, format_router_stats,
+    format_sampling_stats,
 )
 from repro.serving.router import (           # noqa: F401
     Router, RouterConfig, RouterRequest,
 )
+from repro.serving.sampling import (         # noqa: F401
+    GREEDY, SamplingParams, sample_tokens, stop_match,
+)
+from repro.serving.api import ApiServer, serve_api      # noqa: F401
 from repro.serving.scheduler import Scheduler, bucket_for, default_buckets  # noqa: F401
 from repro.serving.store import (            # noqa: F401
     ContiguousKVStore, PagedKVStore, RecurrentStateStore, SlotStore,

@@ -69,7 +69,10 @@ from repro.configs.base import ArchConfig
 from repro.core.opq import OPQ, Buffer
 from repro.models import steps as ST
 from repro.serving.metrics import EngineMetrics, RequestMetrics, now
-from repro.serving.scheduler import Scheduler, default_buckets
+from repro.serving.sampling import (
+    GREEDY, SamplingParams, stack_params, stop_match,
+)
+from repro.serving.scheduler import Scheduler, bucket_for, default_buckets
 from repro.serving.store import RECURRENT_FAMILIES, SlotStore, make_store
 
 
@@ -91,6 +94,12 @@ class Request:
     state: RequestState = RequestState.QUEUED
     tokens: List[int] = dataclasses.field(default_factory=list)
     metrics: RequestMetrics = None         # set at submit
+    sampling: Optional[SamplingParams] = None   # None == greedy
+    # tokens generated in earlier segments of this logical stream (router
+    # drain/handoff continuations): stop sequences match against
+    # stop_history + tokens, so a handoff never re-arms or misses a stop
+    stop_history: Tuple[int, ...] = ()
+    finish_reason: Optional[str] = None    # "length" | "eos" | "stop"
 
     @property
     def last_token(self) -> int:
@@ -315,6 +324,14 @@ def _jitted_draft_steps(cfg: ArchConfig, kind: str, max_seq_len: int = 0,
     return prefill, decode
 
 
+@functools.lru_cache(maxsize=None)
+def _jitted_embed(cfg: ArchConfig):
+    """Compiled non-generative forward (serve API embeddings/classification):
+    bucketed tokens in, (last-position hidden, last-position logits) out —
+    shared across Engine instances like the serving steps above."""
+    return jax.jit(ST.make_embed_step(cfg))
+
+
 class _Ready:
     """Completed-future shim for the OPQ-disabled direct-dispatch path."""
 
@@ -477,6 +494,11 @@ class Engine:
                 donate=not self._draft_recurrent)
             self._draft_params_buf = Buffer(draft_params, name="draft-params")
         self._req_ids = itertools.count()
+        # host-side token-presence bitmap per slot (prompt + generated): the
+        # repetition penalty's input, maintained through admit/emit/retire so
+        # it rides the slot lease like the cache does
+        self._presence = np.zeros((self.ecfg.max_slots, cfg.vocab_padded),
+                                  bool)
         self.metrics = EngineMetrics()
         self.completed: List[Request] = []
 
@@ -538,10 +560,27 @@ class Engine:
         return self.store.available_now(prompt_len, max_new_tokens)
 
     def submit(self, prompt: Sequence[int], max_new_tokens: int,
-               *, strict: bool = False) -> Optional[Request]:
+               *, sampling: Optional[SamplingParams] = None,
+               stop_history: Sequence[int] = (),
+               strict: bool = False) -> Optional[Request]:
         """Admission control at the door: a bounded queue and a hard per-slot
         sequence budget. Returns the Request, or None when rejected
-        (QueueFull when ``strict``)."""
+        (QueueFull when ``strict``).
+
+        ``sampling`` (None == greedy) rides the request through its whole
+        slot residency; ``stop_history`` is the generated prefix of an
+        earlier segment (router drain handoff) that stop sequences must see.
+        Non-greedy params on a speculative engine are a configuration error
+        (greedy acceptance is what makes draft-verify exact; rejection
+        sampling is a ROADMAP item), diagnosed here rather than emitting a
+        silently-greedy stream."""
+        if (sampling is not None and not sampling.greedy
+                and self.ecfg.speculative):
+            raise ValueError(
+                f"speculative decode is greedy-only: temperature="
+                f"{sampling.temperature} requires sampled acceptance "
+                f"(rejection sampling — a ROADMAP follow-up). Drop "
+                f"--speculative or the sampling params.")
         prompt = np.asarray(prompt, dtype=np.int32).reshape(-1)
         if not self.would_accept(len(prompt), max_new_tokens):
             self.metrics.rejected += 1
@@ -553,6 +592,7 @@ class Engine:
             return None
         req = Request(id=next(self._req_ids), prompt=prompt,
                       max_new_tokens=max_new_tokens,
+                      sampling=sampling, stop_history=tuple(stop_history),
                       metrics=RequestMetrics(arrival_s=now(),
                                              prompt_len=len(prompt)))
         self.scheduler.enqueue(req)
@@ -610,10 +650,15 @@ class Engine:
             admitted += len(pairs)
             toks = np.zeros((len(pairs), bucket), np.int32)
             last = np.zeros((len(pairs),), np.int32)
-            for i, (_, req) in enumerate(pairs):
+            presence = np.zeros((len(pairs), self.cfg.vocab_padded), bool)
+            for i, (slot, req) in enumerate(pairs):
                 toks[i, :len(req.prompt)] = req.prompt
                 last[i] = len(req.prompt) - 1
+                presence[i, req.prompt] = True
+                # the slot inherits the row's presence for decode steps
+                self._presence[slot, :] = presence[i]
                 req.metrics.admitted_s = now()
+            smp = stack_params([req.sampling for _, req in pairs], presence)
             # prefix-cache hit groups resume the chunked scan mid-prompt:
             # every row in the group shares this start chunk (the scheduler
             # grouped by it), so no row recomputes a cached position and no
@@ -625,10 +670,11 @@ class Engine:
                 kv0 = self.store.gather_prefix_rows(
                     [slot for slot, _ in pairs], bucket)
                 fut = self._dispatch_async(
-                    lambda p, t, li, k0, fn=self._prefill_suffix,
-                    sc=start_chunk: fn(p, t, li, k0, sc),
+                    lambda p, t, li, k0, s, fn=self._prefill_suffix,
+                    sc=start_chunk: fn(p, t, li, k0, sc, s),
                     self._params_buf, Buffer(toks, name=f"prefill{bucket}"),
                     Buffer(last), self._resident(kv0, "prefix-kv0"),
+                    Buffer(smp, name="sampling"),
                     flags=f"prefill_prefix/{bucket}")
                 self.metrics.prefill_chunks += (
                     bucket // self.ecfg.block_size - start_chunk)
@@ -636,10 +682,12 @@ class Engine:
                 step_fn = self._prefill_chunked if chunked else self._prefill
                 flag = (f"prefill_chunked/{bucket}" if chunked
                         else f"prefill/{bucket}")
+                # sampling params always ride the dispatch — ONE prefill
+                # executable per bucket regardless of the greedy/sampled mix
                 fut = self._dispatch_async(
-                    lambda p, t, li, fn=step_fn: fn(p, t, li),
+                    lambda p, t, li, s, fn=step_fn: fn(p, t, li, s),
                     self._params_buf, Buffer(toks, name=f"prefill{bucket}"),
-                    Buffer(last), flags=flag)
+                    Buffer(last), Buffer(smp, name="sampling"), flags=flag)
                 if self.ecfg.prefix_cache:
                     # cold groups compute every block-size chunk — the unit
                     # the prefix benchmark counts dispatched prefill work in
@@ -676,13 +724,25 @@ class Engine:
             self.metrics.seed_write_s += now() - t0
             for i, (slot, req) in enumerate(pairs):
                 req.state = RequestState.RUNNING
-                req.tokens.append(int(first[i]))
+                tok = int(first[i])
+                req.tokens.append(tok)
+                self._presence[slot, tok] = True
+                if req.sampling is not None and not req.sampling.greedy:
+                    self.metrics.sampled_tokens += 1
                 req.metrics.first_token_s = now()
                 req.metrics.n_generated = 1
                 self.metrics.observe_tokens(1)
                 if self._finished(req):       # done at the prefill token:
                     self._retire(slot)        # reset scrubs the seeded row
         return admitted
+
+    def _sampling_batch(self) -> Dict:
+        """The decode batch's stacked per-slot sampling params + presence
+        rows (serving/sampling.py). Always attached to the dispatch, so the
+        decode program is ONE executable across every greedy/sampled mix —
+        idle and paramless slots stack as GREEDY."""
+        return stack_params(self.scheduler.sampling_by_slot(GREEDY),
+                            self._presence.copy())
 
     def _seed_admitted(self, pairs, kv) -> None:
         """Seed every leased row of one admission bucket from the fused
@@ -698,14 +758,20 @@ class Engine:
             lambda p, c, b: self._decode(p, c, b),
             self._params_buf,
             self._resident(self.store.decode_cache(), "kv-cache"),
-            Buffer({"tokens": toks, "active": active}, name="decode-tokens"),
+            Buffer({"tokens": toks, "active": active,
+                    "sampling": self._sampling_batch()},
+                   name="decode-tokens"),
             flags="decode")
         self.store.swap(cache)
         self.metrics.decode_steps += 1
         next_np = np.asarray(next_tok)
         produced = 0
         for slot, req in list(self.scheduler.active.items()):
-            req.tokens.append(int(next_np[slot]))
+            tok = int(next_np[slot])
+            req.tokens.append(tok)
+            self._presence[slot, tok] = True
+            if req.sampling is not None and not req.sampling.greedy:
+                self.metrics.sampled_tokens += 1
             req.metrics.n_generated += 1
             produced += 1
             if self._finished(req):
@@ -784,7 +850,18 @@ class Engine:
                 hits = np.flatnonzero(g[:emit] == self.ecfg.eos_id)
                 if hits.size:     # stop lands mid-window: nothing past it
                     emit = int(hits[0]) + 1
+            stop = req.sampling.stop if req.sampling is not None else ()
+            if stop:
+                # a stop sequence can complete mid-window too: truncate the
+                # emission at the first window position whose suffix matches
+                hist = tuple(req.stop_history) + tuple(req.tokens)
+                for j in range(emit):
+                    if stop_match(hist + tuple(int(t) for t in g[:j + 1]),
+                                  stop):
+                        emit = j + 1
+                        break
             req.tokens.extend(int(t) for t in g[:emit])
+            self._presence[slot, [int(t) for t in g[:emit]]] = True
             req.metrics.n_generated += emit
             produced += emit
             self.metrics.proposed_tokens += k
@@ -811,13 +888,31 @@ class Engine:
         self.metrics.observe_tokens(produced)
 
     def _finished(self, req: Request) -> bool:
-        return (req.metrics.n_generated >= req.max_new_tokens
-                or (self.ecfg.eos_id is not None
-                    and req.last_token == self.ecfg.eos_id))
+        """Finish check after every emitted token, setting
+        ``req.finish_reason`` (priority: length, eos, stop). Stop sequences
+        suffix-match the generated stream only — ``stop_history + tokens``,
+        so a drain-handoff continuation still sees a match spanning the
+        handoff point, and a match spanning a decode-step boundary fires at
+        its last token."""
+        if req.metrics.n_generated >= req.max_new_tokens:
+            req.finish_reason = "length"
+            return True
+        if (self.ecfg.eos_id is not None
+                and req.last_token == self.ecfg.eos_id):
+            req.finish_reason = "eos"
+            return True
+        stop = req.sampling.stop if req.sampling is not None else ()
+        if stop and stop_match(tuple(req.stop_history) + tuple(req.tokens),
+                               stop):
+            req.finish_reason = "stop"
+            self.metrics.stop_hits += 1
+            return True
+        return False
 
     def _retire(self, slot: int) -> None:
         req = self.scheduler.retire(slot)
         self.store.reset(slot)
+        self._presence[slot, :] = False
         if self.draft_store is not None:
             self.draft_store.reset(slot)
         req.state = RequestState.DONE
@@ -857,6 +952,7 @@ class Engine:
             if req.id == req_id:
                 self.scheduler.retire(slot)
                 self.store.reset(slot)
+                self._presence[slot, :] = False
                 if self.draft_store is not None:
                     self.draft_store.reset(slot)
                 req.state = RequestState.PREEMPTED
@@ -905,6 +1001,31 @@ class Engine:
             if steps > max_steps:
                 raise RuntimeError(f"engine did not drain in {max_steps} steps")
         return self.completed
+
+    # ------------------------------------------------------- non-generative
+
+    def embed(self, prompt: Sequence[int]) -> Dict[str, np.ndarray]:
+        """Non-generative forward for the serve API (embeddings /
+        classification): one bucketed dispatch returning the prompt's
+        last-position final-norm hidden state and its last-position logits
+        row (padded vocab columns trimmed). Reuses the prefill bucketing so
+        the number of compiled embed shapes is bounded like admission's, and
+        goes through the same OPQ dispatch (flag ``embed/<bucket>``) —
+        no slot is leased, nothing touches the cache."""
+        prompt = np.asarray(prompt, dtype=np.int32).reshape(-1)
+        if len(prompt) < 1:
+            raise ValueError("embed needs a non-empty prompt")
+        bucket = bucket_for(len(prompt), self.scheduler.buckets)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :len(prompt)] = prompt
+        last = np.asarray([len(prompt) - 1], np.int32)
+        hid, row = self._dispatch(
+            lambda p, t, li, fn=_jitted_embed(self.cfg): fn(p, t, li),
+            self._params_buf, Buffer(toks, name=f"embed{bucket}"),
+            Buffer(last), flags=f"embed/{bucket}")
+        self.metrics.embed_requests += 1
+        return {"embedding": np.asarray(hid)[0],
+                "logits": np.asarray(row)[0, :self.cfg.vocab]}
 
     # --------------------------------------------------------------- summary
 

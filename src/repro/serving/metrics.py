@@ -102,6 +102,14 @@ class EngineMetrics:
     accept_hist: Dict[int, int] = dataclasses.field(default_factory=dict)
                                                # tokens-emitted-per-slot-round
                                                # histogram {length: rounds}
+    sampled_tokens: int = 0                    # tokens emitted by non-greedy
+                                               # (sampled) requests — greedy
+                                               # traffic keeps this at 0
+    stop_hits: int = 0                         # requests finished by a stop-
+                                               # sequence suffix match
+    embed_requests: int = 0                    # non-generative forwards
+                                               # (serve API embeddings/
+                                               # classification)
     prefill_batches: int = 0
     prefill_tokens: int = 0                    # unpadded prompt tokens prefilled
     prefill_chunks: int = 0                    # block-size prefill chunks
@@ -162,6 +170,9 @@ class EngineMetrics:
             "acceptance_rate": (self.accepted_tokens
                                 / max(self.proposed_tokens, 1)),
             "accept_hist": dict(sorted(self.accept_hist.items())),
+            "sampled_tokens": self.sampled_tokens,
+            "stop_hits": self.stop_hits,
+            "embed_requests": self.embed_requests,
             "prefill_batches": self.prefill_batches,
             "prefill_tokens": self.prefill_tokens,
             "prefill_chunks": self.prefill_chunks,
@@ -205,6 +216,15 @@ def format_spec_stats(s: Dict) -> str:
             f"proposals accepted ({s['acceptance_rate']:.2f}) | "
             f"{spt:.2f} target steps/decode-token | "
             f"accepted-length hist {{{hist}}}")
+
+
+def format_sampling_stats(s: Dict) -> str:
+    """One-line sampling summary from ``EngineMetrics.summary()`` — the
+    launch/serve.py report line when the traffic mix includes non-greedy
+    requests or stop sequences."""
+    return (f"sampling: {s['sampled_tokens']}/{s['tokens_generated']} tokens "
+            f"sampled | {s['stop_hits']} stop-sequence finishes | "
+            f"{s['embed_requests']} embed requests")
 
 
 def format_memory_stats(ms: Dict) -> str:

@@ -54,6 +54,7 @@ from repro.serving.engine import (
     Engine, EngineConfig, QueueFull, Request, RequestState,
 )
 from repro.serving.metrics import now
+from repro.serving.sampling import SamplingParams
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,6 +90,8 @@ class RouterRequest:
     hosts: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
     finish_s: Optional[float] = None
+    sampling: Optional[SamplingParams] = None   # rides every segment
+    finish_reason: Optional[str] = None         # from the final segment
 
     @property
     def n_generated(self) -> int:
@@ -127,6 +130,9 @@ class Router:
         self._draining: Set[int] = set()
         self._affinity: Dict[str, int] = {}        # key -> host of last lease
         self._live: Dict[Tuple[int, int], RouterRequest] = {}
+        # rreq.id -> the engine Request of its CURRENT segment, so the serve
+        # API can stream mid-segment tokens live (``progress``)
+        self._segments: Dict[int, Request] = {}
         self._harvested: List[int] = [0] * self.rcfg.n_hosts
         self._req_ids = itertools.count()
         self.completed: List[RouterRequest] = []
@@ -192,17 +198,21 @@ class Router:
 
     def submit(self, prompt: Sequence[int], max_new_tokens: int, *,
                session: Optional[str] = None,
+               sampling: Optional[SamplingParams] = None,
                strict: bool = False) -> Optional[RouterRequest]:
         """Place one request on the fleet. Returns the RouterRequest, or
         None when every host rejects it (QueueFull when ``strict``) — the
-        same door contract as Engine.submit."""
+        same door contract as Engine.submit. ``sampling`` rides the request
+        through every segment a drain/handoff opens, so a seeded stream
+        stitches bit-identically to an undrained run."""
         prompt = np.asarray(prompt, dtype=np.int32).reshape(-1)
         key = self._key(prompt, session)
         placed = self._place(key, len(prompt), max_new_tokens)
         ereq = None
         if placed is not None:
             host, hit, spilled = placed
-            ereq = self.engines[host].submit(prompt, max_new_tokens)
+            ereq = self.engines[host].submit(prompt, max_new_tokens,
+                                             sampling=sampling)
         if ereq is None:
             self.counters["rejected"] += 1
             if strict:
@@ -217,8 +227,9 @@ class Router:
         self._affinity[key] = host                 # pin to where the lease is
         rreq = RouterRequest(id=next(self._req_ids), prompt=prompt,
                              max_new_tokens=max_new_tokens, session=session,
-                             arrival_s=now(), hosts=[host])
+                             arrival_s=now(), hosts=[host], sampling=sampling)
         self._live[(host, ereq.id)] = rreq
+        self._segments[rreq.id] = ereq
         return rreq
 
     # ------------------------------------------------------------ drain/handoff
@@ -286,8 +297,15 @@ class Router:
 
     def _submit_segment(self, rreq: RouterRequest, host: int,
                         prompt: np.ndarray, max_new_tokens: int) -> None:
-        ereq = self.engines[host].submit(prompt, max_new_tokens, strict=True)
+        # sampling params survive the handoff, and the new segment's stop
+        # matcher sees the tokens earlier segments generated (stop_history)
+        # — position-counter randomness makes the stitched seeded stream
+        # bit-identical to the undrained one (tests/test_sampling.py)
+        ereq = self.engines[host].submit(
+            prompt, max_new_tokens, sampling=rreq.sampling,
+            stop_history=tuple(rreq.tokens), strict=True)
         self._live[(host, ereq.id)] = rreq
+        self._segments[rreq.id] = ereq
         rreq.hosts.append(host)
         self._affinity[self._key(rreq.prompt, rreq.session)] = host
 
@@ -321,7 +339,28 @@ class Router:
             rreq.tokens.extend(ereq.tokens)
             rreq.done = True
             rreq.finish_s = now()
+            rreq.finish_reason = ereq.finish_reason
+            self._segments.pop(rreq.id, None)
             self.completed.append(rreq)
+
+    def progress(self, rreq: RouterRequest) -> List[int]:
+        """The stitched token stream INCLUDING the live segment's tokens —
+        what an SSE streamer polls between fleet steps. ``rreq.tokens``
+        alone only advances at segment boundaries (handoff/finish)."""
+        seg = self._segments.get(rreq.id)
+        if seg is None or rreq.done:
+            return list(rreq.tokens)
+        return list(rreq.tokens) + list(seg.tokens)
+
+    def embed(self, prompt: Sequence[int]) -> Dict[str, np.ndarray]:
+        """Non-generative forward on the least-loaded non-draining host —
+        embeddings/classification never lease a slot, so placement is pure
+        load balancing (no affinity to honour)."""
+        alive = [h for h in range((self.rcfg.n_hosts))
+                 if h not in self._draining]
+        if not alive:
+            raise RuntimeError("every host is draining — no embed capacity")
+        return self.engines[min(alive, key=self._load)].embed(prompt)
 
     def has_work(self) -> bool:
         return any(e.has_work() for e in self.engines)
@@ -350,7 +389,8 @@ class Router:
                       "evicted", "preempted", "completed", "tokens_generated",
                       "decode_steps", "prefill_batches", "prefill_tokens",
                       "spec_rounds", "draft_steps", "proposed_tokens",
-                      "accepted_tokens")
+                      "accepted_tokens", "sampled_tokens", "stop_hits",
+                      "embed_requests")
         fleet = {k: sum(h[k] for h in per_host) for k in fleet_keys}
         # fleet rate over the FLEET's first->last token span — summing
         # per-host rates would overstate it whenever host spans differ

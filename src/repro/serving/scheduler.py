@@ -114,6 +114,17 @@ class Scheduler:
             active[slot] = True
         return tokens, active
 
+    def sampling_by_slot(self, default) -> List[object]:
+        """Each slot's SamplingParams as a fixed-width list aligned with
+        ``decode_batch``'s rows: the active request's params (``default``
+        when it has none) or ``default`` for idle slots. The engine stacks
+        this into the decode batch every step, so params ride the slot state
+        through join/preempt/handoff exactly like the cache lease does."""
+        out = [default] * self.n_slots
+        for slot, req in self.active.items():
+            out[slot] = getattr(req, "sampling", None) or default
+        return out
+
     def retire(self, slot: int):
         req = self.active.pop(slot)
         self.free.append(slot)

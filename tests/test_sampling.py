@@ -1,0 +1,381 @@
+"""Batch-invariant sampling invariants (serving/sampling.py + the sampled
+decode/prefill paths in serving/engine.py and models/steps.py):
+
+  * unit        — top_k=1 sampling IS greedy; temperature<=0 rows take the
+                  bit-exact historical argmax; repetition penalty flips a
+                  near-tie onto the unseen token; nucleus/top-k masks never
+                  empty; stop_match is a pure suffix matcher
+  * invariance  — the keystone: a seeded request's token stream is a pure
+                  function of (seed, position) — IDENTICAL whether it decodes
+                  alone, next to greedy batchmates, next to other sampled
+                  requests, in a different slot, on the contiguous / paged /
+                  paged-native backends, or across a mid-run router drain
+                  that stitches the stream over a host handoff (asserted on
+                  tokens, not distributions)
+  * stops       — a 2-token stop spanning a decode-step boundary truncates
+                  the stream at the match and records finish_reason="stop";
+                  stops fire the same inside a prefix-cache warm hit
+  * speculative — non-greedy params on a speculative engine are rejected at
+                  submit with a ValueError (greedy acceptance is what keeps
+                  draft-verify exact), never silently decoded greedy
+  * property    — (hypothesis-or-fallback) over random seeds / temps / k / p
+                  mixes: batch composition never changes a sampled row
+"""
+
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).parent))
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_fallback import given, settings, st
+
+from repro.configs import get_config
+from repro.models import init_model
+from repro.serving import Engine, EngineConfig, SamplingParams
+from repro.serving.router import Router, RouterConfig
+from repro.serving.sampling import GREEDY, sample_tokens, stack_params, stop_match
+
+CFG = get_config("tinyllama-1.1b").smoke()
+RNG = np.random.default_rng(11)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_model(CFG, jax.random.PRNGKey(0))
+
+
+def _prompts(lens, cfg=CFG):
+    return [RNG.integers(0, cfg.vocab, (n,), dtype=np.int32) for n in lens]
+
+
+def _stack(sps, vocab, presence_rows=()):
+    presence = np.zeros((len(sps), vocab), bool)
+    for i, toks in presence_rows:
+        presence[i, list(toks)] = True
+    return stack_params(sps, presence)
+
+
+# ===========================================================================
+# unit: the sampler collapses to greedy exactly where it must
+# ===========================================================================
+
+def test_top_k_one_is_greedy():
+    """k=1 leaves exactly the argmax in the candidate set: the sampled token
+    equals the greedy token bit for bit, for every row and any seed."""
+    logits = jnp.asarray(RNG.standard_normal((4, 64)), jnp.float32)
+    sp = _stack([SamplingParams(temperature=0.9, top_k=1, seed=s)
+                 for s in (0, 1, 7, 123)], 64)
+    toks = sample_tokens(logits, sp, jnp.arange(4, dtype=jnp.int32))
+    np.testing.assert_array_equal(
+        np.asarray(toks), np.asarray(jnp.argmax(logits, axis=-1)))
+
+
+def test_tiny_top_p_is_greedy():
+    """A nucleus too small for even one token still keeps the top token
+    (the mask is clamped non-empty), so top_p -> 0 degenerates to greedy."""
+    logits = jnp.asarray(RNG.standard_normal((3, 32)), jnp.float32)
+    sp = _stack([SamplingParams(temperature=1.3, top_p=1e-6, seed=s)
+                 for s in (3, 5, 9)], 32)
+    toks = sample_tokens(logits, sp, jnp.zeros(3, jnp.int32))
+    np.testing.assert_array_equal(
+        np.asarray(toks), np.asarray(jnp.argmax(logits, axis=-1)))
+
+
+def test_greedy_rows_bit_exact_in_mixed_batch():
+    """temperature<=0 rows in a mixed batch take the plain argmax on the raw
+    logits — the historical greedy path — regardless of their neighbours'
+    params or their own (ignored) seed/top_k settings."""
+    logits = jnp.asarray(RNG.standard_normal((4, 48)), jnp.float32)
+    sp = _stack([GREEDY,
+                 SamplingParams(temperature=1.0, seed=4),
+                 SamplingParams(temperature=0.0, top_k=5, seed=9),
+                 SamplingParams(temperature=0.7, top_p=0.8, seed=2)], 48)
+    toks = np.asarray(sample_tokens(logits, sp, jnp.arange(4, dtype=jnp.int32)))
+    ref = np.asarray(jnp.argmax(logits, axis=-1))
+    assert toks[0] == ref[0] and toks[2] == ref[2]
+
+
+def test_repetition_penalty_flips_near_tie():
+    """Row 0 has seen the (slightly) top token; a strong penalty must move
+    probability onto the runner-up. Row 1 has identical logits but an empty
+    presence set, so it keeps the argmax. Near-greedy temperature makes both
+    outcomes deterministic."""
+    row = np.full(16, -5.0, np.float32)
+    row[3], row[7] = 2.0, 1.9                      # 3 barely beats 7
+    logits = jnp.asarray(np.stack([row, row]))
+    sp = _stack([SamplingParams(temperature=0.01, repetition_penalty=5.0,
+                                seed=0),
+                 SamplingParams(temperature=0.01, repetition_penalty=5.0,
+                                seed=0)],
+                16, presence_rows=[(0, [3])])
+    toks = np.asarray(sample_tokens(logits, sp, jnp.zeros(2, jnp.int32)))
+    assert toks[0] == 7 and toks[1] == 3
+
+
+def test_sampled_token_respects_topk_mask():
+    """Whatever the gumbel draw, the emitted token must sit inside the top-k
+    candidate set — over many seeds, never outside it."""
+    logits = jnp.asarray(RNG.standard_normal((8, 40)), jnp.float32)
+    order = np.argsort(-np.asarray(logits), axis=-1)
+    sp = _stack([SamplingParams(temperature=1.5, top_k=4, seed=s)
+                 for s in range(8)], 40)
+    for pos in range(6):
+        toks = np.asarray(sample_tokens(
+            logits, sp, jnp.full(8, pos, jnp.int32)))
+        for b in range(8):
+            assert toks[b] in order[b, :4]
+
+
+def test_stop_match_is_suffix_only():
+    assert stop_match([1, 2, 3], ((2, 3),)) == (2, 3)
+    assert stop_match([1, 2, 3], ((1, 2),)) is None      # not a suffix
+    assert stop_match([1, 2, 3], ((9,), (3,))) == (3,)
+    assert stop_match([1, 2], ((1, 2, 3),)) is None      # longer than stream
+    assert stop_match([1, 2], ()) is None
+
+
+def test_sampling_params_validation():
+    with pytest.raises(ValueError):
+        SamplingParams(temperature=-0.1)
+    with pytest.raises(ValueError):
+        SamplingParams(top_k=-1)
+    with pytest.raises(ValueError):
+        SamplingParams(top_p=0.0)
+    with pytest.raises(ValueError):
+        SamplingParams(top_p=1.5)
+    with pytest.raises(ValueError):
+        SamplingParams(repetition_penalty=0.0)
+    with pytest.raises(ValueError):
+        SamplingParams(stop=[[]])
+    # normalization: a bare int / list-of-int stop becomes tuple-of-tuples
+    assert SamplingParams(stop=5).stop == ((5,),)
+    assert SamplingParams(stop=[[1, 2], 3]).stop == ((1, 2), (3,))
+
+
+# ===========================================================================
+# unit-level batch invariance: pure function of (seed, position)
+# ===========================================================================
+
+def test_sampled_row_ignores_batchmates_slot_and_padding():
+    """The same (logits row, params, position) emits the same token whether
+    the row sits alone, in slot 0 of a big batch, or in the last slot next
+    to arbitrary other traffic."""
+    row = jnp.asarray(RNG.standard_normal((1, 64)), jnp.float32)
+    me = SamplingParams(temperature=0.9, top_k=12, top_p=0.9, seed=42)
+    others = [SamplingParams(temperature=t, top_k=k, seed=s)
+              for t, k, s in ((0.0, 0, 0), (1.7, 3, 9), (0.4, 0, 5))]
+    for pos in (0, 3, 17):
+        p = jnp.asarray([pos], jnp.int32)
+        alone = int(sample_tokens(row, _stack([me], 64), p)[0])
+        noise = jnp.asarray(RNG.standard_normal((3, 64)), jnp.float32)
+
+        first = sample_tokens(jnp.concatenate([row, noise]),
+                              _stack([me] + others, 64),
+                              jnp.asarray([pos, 1, 2, 3], jnp.int32))
+        last = sample_tokens(jnp.concatenate([noise, row]),
+                             _stack(others + [me], 64),
+                             jnp.asarray([5, 6, 7, pos], jnp.int32))
+        assert int(first[0]) == alone == int(last[3])
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=0, max_value=2**31 - 1),
+       st.floats(min_value=0.05, max_value=2.0, allow_nan=False),
+       st.integers(min_value=0, max_value=48),
+       st.floats(min_value=0.05, max_value=1.0, allow_nan=False),
+       st.integers(min_value=0, max_value=1000))
+def test_property_batch_composition_never_changes_a_row(seed, temp, k, p, pos):
+    """Property sweep over the whole parameter surface: for random
+    (seed, temperature, top_k, top_p, position), the sampled token is
+    unchanged by batch composition and slot placement."""
+    rng = np.random.default_rng(seed ^ 0x5EED)
+    row = jnp.asarray(rng.standard_normal((1, 48)), jnp.float32)
+    me = SamplingParams(temperature=float(temp), top_k=int(k),
+                        top_p=float(p), seed=int(seed))
+    pv = jnp.asarray([pos], jnp.int32)
+    alone = int(sample_tokens(row, _stack([me], 48), pv)[0])
+    mates = jnp.asarray(rng.standard_normal((2, 48)), jnp.float32)
+    batch = sample_tokens(
+        jnp.concatenate([mates[:1], row, mates[1:]]),
+        _stack([GREEDY, me, SamplingParams(temperature=1.0, seed=seed + 1)],
+               48),
+        jnp.asarray([0, pos, 9], jnp.int32))
+    assert int(batch[1]) == alone
+
+
+# ===========================================================================
+# engine-level invariance: across batchmates, backends, slots, drain
+# ===========================================================================
+
+SAMPLED = SamplingParams(temperature=0.8, top_k=20, top_p=0.95, seed=1234)
+
+
+def _solo_stream(params, prompt, gen, **ecfg_kw):
+    eng = Engine(CFG, params, EngineConfig(max_slots=2, max_seq_len=32,
+                                           **ecfg_kw))
+    req = eng.submit(prompt, gen, sampling=SAMPLED, strict=True)
+    eng.run_until_complete()
+    out = list(req.tokens)
+    eng.close()
+    return out
+
+
+@pytest.mark.parametrize("backend_kw", [
+    {},
+    dict(cache_backend="paged", block_size=8),
+    dict(cache_backend="paged", block_size=8, paged_native=True),
+], ids=["contiguous", "paged", "paged-native"])
+def test_seeded_stream_invariant_to_batchmates_and_backend(params, backend_kw):
+    """The headline invariant, asserted on tokens: one seeded sampled request
+    decodes alone, then again staggered next to greedy traffic, then next to
+    other sampled traffic — the stream is bit-identical every time, on every
+    cache backend. Batchmates, slots, and K/V layout are invisible to the
+    randomness counter."""
+    prompt = _prompts([6])[0]
+    gen = 8
+    solo = _solo_stream(params, prompt, gen, **backend_kw)
+    assert solo == _solo_stream(params, prompt, gen)   # backend-invariant too
+
+    for mate_sampling in (None, SamplingParams(temperature=1.3, seed=77)):
+        eng = Engine(CFG, params,
+                     EngineConfig(max_slots=2, max_seq_len=32, **backend_kw))
+        mate = eng.submit(_prompts([9])[0], 10, sampling=mate_sampling,
+                          strict=True)
+        eng.step()                                     # mate decodes first ...
+        req = eng.submit(prompt, gen, sampling=SAMPLED, strict=True)
+        eng.run_until_complete()                       # ... then they share
+        assert list(req.tokens) == solo
+        assert len(mate.tokens) == 10
+        eng.close()
+
+
+def test_seeded_stream_survives_router_drain(params):
+    """A sampled request preempted by drain(0) mid-generation finishes on
+    host 1; the stitched stream must equal the undrained solo stream BIT FOR
+    BIT — continuation prompts preserve absolute positions, so the handoff
+    segment keeps drawing the same counter-derived noise."""
+    prompt = _prompts([6])[0]
+    gen = 10
+    solo = _solo_stream(params, prompt, gen)
+
+    router = Router(CFG, params, EngineConfig(max_slots=1, max_seq_len=32),
+                    RouterConfig(n_hosts=2, handoff_threshold=0))
+    rreq = router.submit(prompt, gen, session="a", sampling=SAMPLED,
+                         strict=True)
+    for _ in range(4):                                 # decode a few tokens
+        router.step()
+    live = router.progress(rreq)                       # mid-segment stream view
+    assert 0 < len(live) < gen                         # genuinely mid-stream
+    assert live == solo[:len(live)]                    # streaming == final prefix
+    router.drain(0)
+    assert router.stats()["router"]["handoffs"] == 1
+    router.run_until_complete()
+    assert list(rreq.tokens) == solo
+    assert rreq.hosts == [0, 1]
+    assert rreq.finish_reason == "length"
+    router.close()
+
+
+# ===========================================================================
+# stop sequences: step-boundary span, prefix-cache interplay, finish_reason
+# ===========================================================================
+
+def _observe_greedy(params, prompt, gen, **ecfg_kw):
+    eng = Engine(CFG, params, EngineConfig(max_slots=2, max_seq_len=32,
+                                           **ecfg_kw))
+    req = eng.submit(prompt, gen, strict=True)
+    eng.run_until_complete()
+    out = list(req.tokens)
+    eng.close()
+    return out
+
+
+def test_stop_spanning_step_boundary_truncates(params):
+    """Decode emits one token per step, so a 2-token stop taken from the
+    observed stream necessarily spans a step boundary: its first token lands
+    in one harvest, its second in the next. The resubmitted request must cut
+    exactly at the match, with finish_reason='stop' and the stop_hits
+    counter ticking."""
+    prompt = _prompts([5])[0]
+    full = _observe_greedy(params, prompt, 10)
+    assert len(full) == 10
+    stop = tuple(full[3:5])                            # spans steps 4 and 5
+
+    eng = Engine(CFG, params, EngineConfig(max_slots=2, max_seq_len=32))
+    req = eng.submit(prompt, 10, sampling=SamplingParams(stop=[stop]),
+                     strict=True)
+    eng.run_until_complete()
+    assert list(req.tokens) == full[:5]                # truncated at the match
+    assert req.finish_reason == "stop"
+    assert eng.metrics.stop_hits == 1
+    eng.close()
+
+
+def test_stop_fires_inside_prefix_cache_hit(params):
+    """Warm-hit admissions skip prefill work but must not skip stop
+    semantics: the second request rides cached prefix blocks (prefix_hits
+    ticks) and still truncates at its stop."""
+    ecfg_kw = dict(cache_backend="paged", block_size=8, prefix_cache=True)
+    prompt = _prompts([16])[0]                         # two full cached blocks
+    full = _observe_greedy(params, prompt, 8, **ecfg_kw)
+
+    eng = Engine(CFG, params, EngineConfig(max_slots=2, max_seq_len=32,
+                                           **ecfg_kw))
+    warm = eng.submit(prompt, 8, strict=True)          # populate the radix trie
+    eng.run_until_complete()
+    assert list(warm.tokens) == full
+    stop = tuple(full[2:4])
+    req = eng.submit(prompt, 8, sampling=SamplingParams(stop=[stop]),
+                     strict=True)
+    eng.run_until_complete()
+    assert eng.metrics.prefix_hits >= 1                # the hit really happened
+    assert list(req.tokens) == full[:4]
+    assert req.finish_reason == "stop"
+    eng.close()
+
+
+def test_finish_reason_eos_and_length(params):
+    """The non-stop finish reasons are recorded too: a hit on eos_id retires
+    as 'eos', running the budget out retires as 'length'."""
+    prompt = _prompts([5])[0]
+    full = _observe_greedy(params, prompt, 6)
+    eos = int(full[2])
+    eng = Engine(CFG, params, EngineConfig(max_slots=2, max_seq_len=32,
+                                           eos_id=eos))
+    req = eng.submit(prompt, 6, strict=True)
+    eng.run_until_complete()
+    assert req.finish_reason == "eos"
+    assert list(req.tokens) == full[:full.index(eos) + 1]   # first occurrence
+    req2 = eng.submit(_prompts([4])[0], 4, strict=True)
+    eng.run_until_complete()
+    assert (req2.finish_reason == "length" if len(req2.tokens) == 4
+            else req2.finish_reason == "eos")
+    eng.close()
+
+
+# ===========================================================================
+# speculative: non-greedy is a diagnosed configuration error
+# ===========================================================================
+
+def test_speculative_rejects_non_greedy(params):
+    """Draft-verify acceptance is exact only under greedy; sampled params on
+    a speculative engine must raise at submit — loudly, not decode greedy."""
+    eng = Engine(CFG, params,
+                 EngineConfig(max_slots=2, max_seq_len=32, speculative=True,
+                              spec_k=2, draft=CFG),
+                 draft_params=params)
+    with pytest.raises(ValueError, match="greedy-only"):
+        eng.submit(_prompts([5])[0], 4, sampling=SAMPLED)
+    # greedy params (and stops) remain fine on the same engine
+    req = eng.submit(_prompts([5])[0], 4,
+                     sampling=SamplingParams(stop=[(99999,)]), strict=True)
+    eng.run_until_complete()
+    assert len(req.tokens) == 4 and req.finish_reason == "length"
+    eng.close()
