@@ -45,6 +45,16 @@ decode-path dispatches per emitted token strictly < 1.0 — recording tok/s
 vs plain and the accepted-length histogram: the regression record for
 reports/BENCH_spec.json and the CI artifact.
 
+``--transport-report PATH`` runs the transport cell instead: the raw RPC
+round-trip and per-decode-step overhead of the subprocess backend (framed
+RPC over an AF_UNIX socket, workers rebuilding bit-identical weights from
+the model spec) against the in-process backend serving the same mix —
+tokens asserted bit-identical across the process boundary — plus fleet
+throughput at 1/2/4 worker processes and the recovery timeline after a
+hard SIGKILL of one worker mid-decode (loss detection, first re-placed
+token, full drain): the regression record for reports/BENCH_transport.json
+and the CI artifact.
+
 ``--sampling-report PATH`` runs the sampling-engine cell instead: the same
 request mix served all-greedy and all-sampled (temperature/top-k/top-p,
 per-request seeds) through the ONE shared executable, recording the
@@ -792,6 +802,212 @@ def sampling_report(cfg, params, *, slots: int, prompt_len: int, gen: int,
     return report
 
 
+def transport_report(cfg, params, *, arch: str, prompt_len: int, gen: int,
+                     requests: int, hosts_swept=(1, 2, 4),
+                     out_path: str) -> dict:
+    """The transport claim, measured: (1) raw RPC round-trip — the same
+    ``load`` call timed over the in-process backend (a method call) and the
+    subprocess backend (a framed request over an AF_UNIX socket); (2) the
+    same request mix served through one in-process host and one subprocess
+    host — tokens asserted bit-identical, per-RPC and per-token overhead
+    recorded from the TransportMetrics both backends share; (3) fleet
+    throughput at 1/2/4 worker processes; (4) recovery after a hard SIGKILL
+    of one worker mid-decode — time from the kill to the router marking the
+    host LOST, to the first token of a re-placed continuation, and to the
+    full mix completing. Workers rebuild bit-identical weights from the
+    model spec, so no params cross the wire."""
+    import os
+    import signal
+    import time
+
+    from repro.serving.transport import (
+        SubprocessTransport, build_inproc_fleet, build_model_spec,
+        default_codec,
+    )
+
+    max_seq = prompt_len + gen
+    ecfg = EngineConfig(max_slots=2, max_queue=max(requests, 8),
+                        max_seq_len=max_seq)
+    spec = build_model_spec(arch, smoke=True, seed=0)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, (prompt_len,), dtype=np.int32)
+               for _ in range(requests)]
+
+    def spawn(n, cfg_override=None):
+        fleet = []
+        try:
+            for _ in range(n):
+                fleet.append(SubprocessTransport(spec, cfg_override or ecfg))
+        except Exception:
+            for t in fleet:
+                t.close()
+            raise
+        return fleet
+
+    def warm(fleet):
+        # every worker compiles its prefill/decode executables up front so
+        # the cells measure serving + transport, not XLA
+        for t in fleet:
+            eid = t.submit(prompts[0][:4], 2)
+            deadline = time.monotonic() + 300
+            while not t.poll({eid: 0}).get(eid, {}).get("done"):
+                assert time.monotonic() < deadline, "warmup never finished"
+                if t.kind == "in-process":
+                    t.pump()               # no worker process: we step
+                else:
+                    time.sleep(0.005)      # the worker free-runs
+            t.poll({}, drop=[eid])
+
+    def rpc_micro(t, n=300):
+        for _ in range(20):
+            t.load()                           # steady-state the path
+        t0 = time.perf_counter()
+        for _ in range(n):
+            t.load()
+        return 1e6 * (time.perf_counter() - t0) / n
+
+    def serve(transports):
+        router = Router(transports=transports)
+        t0 = time.perf_counter()
+        reqs = []
+        for i, p in enumerate(prompts):
+            reqs.append(router.submit(p, gen, session=str(i % len(transports)),
+                                      strict=True))
+            router.step()
+        router.run_until_complete()
+        wall_s = time.perf_counter() - t0
+        toks = [list(r.tokens) for r in reqs]
+        rows = router.stats()["router"]["transport"]
+        router.close()
+        return wall_s, toks, rows
+
+    # --- (1)+(2): one in-process host vs one subprocess host ------------
+    inproc = build_inproc_fleet(cfg, params, ecfg, n_hosts=1)
+    warm(inproc)
+    us_rpc_inproc = rpc_micro(inproc[0])
+    wall_i, toks_i, rows_i = serve(inproc)
+
+    sub = spawn(1)
+    warm(sub)
+    us_rpc_sub = rpc_micro(sub[0])
+    wall_s_, toks_s, rows_s = serve(sub)
+    assert toks_s == toks_i, (
+        "subprocess host diverged from the in-process engine")
+
+    n_toks = requests * gen
+
+    def backend_cell(wall, rows, us_rpc):
+        rpcs = sum(r["rpcs"] for r in rows)
+        return {
+            "wall_s": wall,
+            "tok_s": n_toks / wall,
+            "rpc_round_trip_us": us_rpc,
+            "rpcs": rpcs,
+            "rpcs_per_token": rpcs / n_toks,
+            "rpc_wait_s": sum(r["rpc_wait_s"] for r in rows),
+            "retries": sum(r["retries"] for r in rows),
+            "errors": sum(r["errors"] for r in rows),
+        }
+
+    overhead = {
+        "in_process": backend_cell(wall_i, rows_i, us_rpc_inproc),
+        "subprocess": backend_cell(wall_s_, rows_s, us_rpc_sub),
+        "bit_identical_tokens": True,
+        "rpc_overhead_us": us_rpc_sub - us_rpc_inproc,
+        "overhead_us_per_token": 1e6 * (wall_s_ - wall_i) / n_toks,
+    }
+
+    # --- (3): fleet throughput at 1/2/4 worker processes ----------------
+    fleet_cells = []
+    for n_hosts in hosts_swept:
+        fleet = spawn(n_hosts)
+        warm(fleet)
+        wall, _, rows = serve(fleet)
+        fleet_cells.append({
+            "hosts": n_hosts,
+            "wall_s": wall,
+            "fleet_tok_s": n_toks / wall,
+            "rpcs": sum(r["rpcs"] for r in rows),
+            "rpc_wait_s": sum(r["rpc_wait_s"] for r in rows),
+        })
+
+    # --- (4): recovery after SIGKILL of one worker mid-decode -----------
+    kill_gen = max(8 * gen, 128)
+    kill_ecfg = EngineConfig(max_slots=2, max_queue=16,
+                             max_seq_len=prompt_len + kill_gen)
+    fleet = spawn(2, kill_ecfg)
+    warm(fleet)
+    router = Router(transports=fleet,
+                    router_cfg=RouterConfig(handoff_threshold=0))
+    reqs = [router.submit(prompts[i % requests], kill_gen,
+                          session=str(i % 2), strict=True)
+            for i in range(6)]
+    victim = reqs[0].hosts[0]
+    victim_reqs = [r for r in reqs if r.hosts[0] == victim]
+    deadline = time.monotonic() + 120
+    while not any(0 < len(r.tokens) < r.max_new_tokens for r in victim_reqs):
+        router.step()
+        assert time.monotonic() < deadline, "victim never got mid-decode"
+    snap = [len(r.tokens) for r in victim_reqs]
+    t_kill = time.perf_counter()
+    os.kill(fleet[victim].pid, signal.SIGKILL)
+    t_lost = t_first = None
+    while router.has_work() and time.monotonic() < deadline:
+        router.step()
+        if t_lost is None and router.stats()["router"]["hosts_lost"]:
+            t_lost = time.perf_counter() - t_kill
+        if t_first is None and any(
+                len(r.tokens) > s for r, s in zip(victim_reqs, snap)):
+            t_first = time.perf_counter() - t_kill
+            break
+    router.run_until_complete()
+    t_all = time.perf_counter() - t_kill
+    r_stats = router.stats()["router"]
+    recovery = {
+        "kill_gen": kill_gen,
+        "requests": len(reqs),
+        "victim_streams": len(victim_reqs),
+        "tokens_harvested_at_kill": sum(snap),
+        "detect_lost_s": t_lost,
+        "first_recovered_token_s": t_first,
+        "drain_all_after_kill_s": t_all,
+        "hosts_lost": r_stats["hosts_lost"],
+        "recovered": r_stats["recovered"],
+    }
+    router.close()
+
+    report = {
+        "benchmark": "transport",
+        "arch": cfg.name,
+        "codec": default_codec(),
+        "prompt_len": prompt_len,
+        "gen": gen,
+        "requests": requests,
+        "slots_per_host": ecfg.max_slots,
+        "overhead": overhead,
+        "fleet": fleet_cells,
+        "recovery_after_sigkill": recovery,
+    }
+    emit("transport_rpc_us", us_rpc_sub,
+         f"inproc={us_rpc_inproc:.1f}us overhead="
+         f"{overhead['rpc_overhead_us']:.1f}us codec={default_codec()}")
+    for c in fleet_cells:
+        emit(f"transport_h{c['hosts']}", 1e6 / max(c["fleet_tok_s"], 1e-9),
+             f"fleet={c['fleet_tok_s']:.1f}tok/s rpcs={c['rpcs']}")
+    emit("transport_recover_ms",
+         1e3 * (t_first if t_first is not None else t_all),
+         f"lost_detect={t_lost if t_lost is None else round(t_lost, 4)}s "
+         f"drain_all={t_all:.2f}s")
+    Path(out_path).parent.mkdir(parents=True, exist_ok=True)
+    Path(out_path).write_text(json.dumps(report, indent=2) + "\n")
+    print(f"# transport: RPC {us_rpc_sub:.0f}us subprocess vs "
+          f"{us_rpc_inproc:.0f}us in-process; SIGKILL recovery "
+          f"first-token {t_first if t_first is None else round(t_first, 3)}s, "
+          f"tokens bit-identical across the process boundary")
+    print(f"# wrote {out_path}")
+    return report
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tinyllama-1.1b")
@@ -836,6 +1052,13 @@ def main(argv=None) -> int:
                          "the throughput sweep")
     ap.add_argument("--spec-k", type=int, nargs="+", default=[2, 4],
                     help="spec_k values --spec-report sweeps")
+    ap.add_argument("--transport-report", default="",
+                    help="write the transport JSON (RPC round-trip + "
+                         "per-decode-step overhead subprocess vs in-process "
+                         "with tokens asserted bit-identical, fleet "
+                         "throughput at 1/2/4 worker processes, recovery "
+                         "time after SIGKILL of one worker mid-decode) here "
+                         "and skip the throughput sweep")
     ap.add_argument("--sampling-report", default="",
                     help="write the sampling-engine JSON (per-decode-step "
                          "sampler overhead vs greedy, seeded streams "
@@ -865,6 +1088,13 @@ def main(argv=None) -> int:
                 cfg, params, prompt_len=args.prefix_prompt_len, gen=8,
                 block_size=args.block_size, requests=max(args.requests, 4),
                 out_path=args.prefix_report)
+            return 0
+
+        if args.transport_report:
+            transport_report(
+                cfg, params, arch=args.arch, prompt_len=args.prompt_len,
+                gen=args.gen, requests=args.requests,
+                out_path=args.transport_report)
             return 0
 
         if args.sampling_report:

@@ -32,11 +32,21 @@ through the chunked prefill scan (peak score memory W*S, not S^2). The
 end-of-run report prints ``memory_stats()`` for the selected backend.
 
 ``--hosts N`` serves the same traffic through the multi-host Router
-(serving/router.py): N engines, cache-affinity placement (requests cycle
+(serving/router.py): N hosts, cache-affinity placement (requests cycle
 through N sessions here, so repeat sessions pin to the host holding their
 blocks), load-aware spill, and — with ``--drain-at K`` — a drain of host 0
 after K fleet steps, handing its in-flight generations off to the other
-hosts mid-run (tokens provably unchanged; see docs/serving.md).
+hosts mid-run (tokens provably unchanged; see docs/serving.md). By default
+hosts are in-process engines; ``--host-procs`` runs each host as its own OS
+process (serving/host_main.py workers over SubprocessTransport) — real
+process parallelism, spawned and supervised here, reaped on exit. Workers
+rebuild the model deterministically from the arch/smoke/quantize/seed spec,
+so fleet tokens stay bit-identical to the in-process fleet.
+
+In ``--api-port`` server mode, SIGINT/SIGTERM trigger a graceful shutdown:
+admissions stop, live SSE streams are flushed with a terminal frame, hosts
+drain, and worker processes (with ``--host-procs``) are reaped — no
+orphans.
 
 Every flag is documented operator-style in docs/serving.md, which
 tests/test_docs.py keeps in lockstep with this parser.
@@ -45,6 +55,7 @@ tests/test_docs.py keeps in lockstep with this parser.
 from __future__ import annotations
 
 import argparse
+import signal
 import sys
 
 import jax
@@ -58,9 +69,11 @@ from repro.models import init_model
 from repro.serving.api import serve_api
 from repro.serving.engine import Engine, EngineConfig
 from repro.serving.metrics import (format_memory_stats, format_router_stats,
-                                   format_sampling_stats, format_spec_stats)
+                                   format_sampling_stats, format_spec_stats,
+                                   format_transport_stats)
 from repro.serving.router import Router, RouterConfig
 from repro.serving.sampling import SamplingParams
+from repro.serving.transport import SubprocessTransport, build_model_spec
 
 
 def _quant_predicate(path, leaf):
@@ -142,6 +155,13 @@ def build_parser() -> argparse.ArgumentParser:
                          "through the multi-host Router (one engine per "
                          "host, cache-affinity placement + load-aware "
                          "spill; serving/router.py)")
+    ap.add_argument("--host-procs", action="store_true",
+                    help="with --hosts: run each host as its own OS process "
+                         "(a serving/host_main.py worker speaking framed RPC "
+                         "over a local socket) instead of an in-process "
+                         "engine — real process parallelism; workers are "
+                         "spawned, supervised, and reaped here, and a dead "
+                         "worker's streams recover on the surviving hosts")
     ap.add_argument("--drain-at", type=int, default=0,
                     help="with --hosts > 1: drain host 0 after this many "
                          "fleet steps — queued requests re-place, long "
@@ -194,14 +214,38 @@ def _sampling_for(args, i: int):
     return None
 
 
-def _serve_fleet(cfg, params, ecfg, prompts, args, *, draft_params=None) -> int:
+def _spawn_fleet(args, ecfg):
+    """--host-procs: one worker process per host, each rebuilding the model
+    deterministically from the same spec (bit-identical weights to the
+    in-process path). A boot failure reaps the partial fleet — no orphans."""
+    spec = build_model_spec(
+        args.arch, smoke=args.smoke, quantize=args.quantize, seed=0,
+        draft_arch=args.draft_config if args.speculative else None,
+        model_parallel=args.model_parallel)
+    fleet = []
+    try:
+        for _ in range(args.hosts):
+            fleet.append(SubprocessTransport(spec, ecfg))
+    except Exception:
+        for t in fleet:
+            t.close()
+        raise
+    print(f"[serve] spawned {len(fleet)} host processes "
+          f"(pids {[t.pid for t in fleet]})", flush=True)
+    return fleet
+
+
+def _serve_fleet(cfg, params, ecfg, prompts, args, *, draft_params=None,
+                 transports=None) -> int:
     """The --hosts > 1 path: the same traffic through the multi-host Router.
     Requests cycle over ``hosts`` session keys so the second lap of arrivals
     pins to the hosts already holding those sessions' blocks (affinity
     hits); ``--drain-at K`` drains host 0 after K fleet steps, exercising
-    queued-requeue + in-flight handoff mid-run."""
+    queued-requeue + in-flight handoff mid-run. ``transports`` (the
+    --host-procs fleet) swaps the in-process engines for worker
+    processes."""
     router = Router(cfg, params, ecfg, RouterConfig(n_hosts=args.hosts),
-                    draft_params=draft_params)
+                    draft_params=draft_params, transports=transports)
     requests = []
     fleet_steps = 0
 
@@ -231,6 +275,8 @@ def _serve_fleet(cfg, params, ecfg, prompts, args, *, draft_params=None) -> int:
               f"host {trail}{handed} | {r.n_generated} tok", flush=True)
     s = router.stats()
     print(f"[serve] router: {format_router_stats(s)}", flush=True)
+    if any(t["kind"] != "in-process" for t in s["router"]["transport"]):
+        print(f"[serve] {format_transport_stats(s)}", flush=True)
     if args.temperature > 0 or args.stop:
         print(f"[serve] fleet {format_sampling_stats(s['fleet'])}",
               flush=True)
@@ -353,14 +399,18 @@ def main(argv=None) -> int:
             speculative=args.speculative, spec_k=args.spec_k,
             draft=draft_cfg)
 
+        transports = _spawn_fleet(args, ecfg) if args.host_procs else None
+
         if args.api_port >= 0:
             # server mode: no synthetic traffic — expose the engine (or the
             # fleet) over HTTP and block until interrupted
-            if args.hosts > 1:
+            if args.hosts > 1 or transports is not None:
                 target = Router(cfg, params, ecfg,
                                 RouterConfig(n_hosts=args.hosts),
-                                draft_params=draft_params)
-                front = f"router, {args.hosts} hosts"
+                                draft_params=draft_params,
+                                transports=transports)
+                front = (f"router, {args.hosts} host "
+                         f"{'processes' if transports else 'engines'}")
             else:
                 target = Engine(cfg, params, ecfg,
                                 draft_params=draft_params)
@@ -370,13 +420,26 @@ def main(argv=None) -> int:
                   f"POST /v1/completions (SSE with \"stream\": true), "
                   f"/v1/embeddings, /v1/classify; GET /v1/stats /healthz",
                   flush=True)
+
+            # graceful shutdown on SIGINT and SIGTERM: wait() turns the
+            # KeyboardInterrupt into close(), which stops admissions,
+            # flushes a terminal frame to every live SSE stream, and —
+            # through target.close() — drains the hosts and reaps worker
+            # processes. No orphans, exit 0.
+            def _graceful(signum, frame):
+                raise KeyboardInterrupt
+            signal.signal(signal.SIGTERM, _graceful)
             srv.wait()
+            print("[serve] shutdown: streams flushed, closing fleet",
+                  flush=True)
             target.close()
+            print("[serve] shutdown complete (workers reaped)", flush=True)
             return 0
 
-        if args.hosts > 1:
+        if args.hosts > 1 or transports is not None:
             return _serve_fleet(cfg, params, ecfg, prompts, args,
-                                draft_params=draft_params)
+                                draft_params=draft_params,
+                                transports=transports)
 
         engine = Engine(cfg, params, ecfg, draft_params=draft_params)
         requests = []

@@ -94,8 +94,12 @@ def make_prefill_with_cache_step(cfg: ArchConfig) -> Callable:
     ``sampling`` (optional trailing arg, stacked serving/sampling.py params)
     turns the greedy argmax into the batched batch-invariant sampler — ONE
     executable per bucket regardless of the batch's greedy/sampled mix
-    (param application is masked, not branched). Legacy/test callers that
-    pass three args trace the plain greedy program, unchanged."""
+    (param application is masked, not branched) — and extends the return to
+    (first_tokens, kv, logprob_info): the chosen token's logprob + top-K
+    alternatives from the same logits row (serving/sampling.py
+    ``logprob_info``), which is how the serve API reports logprobs without
+    a second executable. Legacy/test callers that pass three args trace the
+    plain greedy two-tuple program, unchanged."""
     from repro.serving import sampling as SMP
 
     def prefill_step(params, tokens, last_index, sampling=None):
@@ -104,7 +108,10 @@ def make_prefill_with_cache_step(cfg: ArchConfig) -> Callable:
         idx = jnp.broadcast_to(last_index[:, None, None], (B, 1, V))
         row = jnp.take_along_axis(logits, idx, axis=1)[:, 0, :]
         # the emitted token's absolute position (randomness counter)
-        return SMP.choose_tokens(row, sampling, last_index + 1), kv
+        tok = SMP.choose_tokens(row, sampling, last_index + 1)
+        if sampling is None:
+            return tok, kv
+        return tok, kv, SMP.logprob_info(row, tok, cfg.vocab)
     return prefill_step
 
 
@@ -121,7 +128,10 @@ def make_recurrent_prefill_step(cfg: ArchConfig, max_seq_len: int) -> Callable:
     def prefill_step(params, tokens, last_index, sampling=None):
         row, cache = SV.prefill_recurrent(params, cfg, tokens, last_index,
                                           max_seq_len)
-        return SMP.choose_tokens(row, sampling, last_index + 1), cache
+        tok = SMP.choose_tokens(row, sampling, last_index + 1)
+        if sampling is None:
+            return tok, cache
+        return tok, cache, SMP.logprob_info(row, tok, cfg.vocab)
     return prefill_step
 
 
@@ -138,7 +148,10 @@ def make_chunked_prefill_step(cfg: ArchConfig, chunk: int) -> Callable:
     def prefill_step(params, tokens, last_index, sampling=None):
         row, kv = SV.prefill_with_cache_chunked(params, cfg, tokens,
                                                 last_index, chunk)
-        return SMP.choose_tokens(row, sampling, last_index + 1), kv
+        tok = SMP.choose_tokens(row, sampling, last_index + 1)
+        if sampling is None:
+            return tok, kv
+        return tok, kv, SMP.logprob_info(row, tok, cfg.vocab)
     return prefill_step
 
 
@@ -159,7 +172,10 @@ def make_suffix_prefill_step(cfg: ArchConfig, chunk: int) -> Callable:
         row, kv = SV.prefill_with_cache_suffix(params, cfg, tokens,
                                                last_index, chunk, kv0,
                                                start_chunk)
-        return SMP.choose_tokens(row, sampling, last_index + 1), kv
+        tok = SMP.choose_tokens(row, sampling, last_index + 1)
+        if sampling is None:
+            return tok, kv
+        return tok, kv, SMP.logprob_info(row, tok, cfg.vocab)
     return prefill_step
 
 
@@ -175,11 +191,10 @@ def make_decode_step(cfg: ArchConfig) -> Callable:
         logits, cache = SV.decode(params, cfg, cache, batch)
         sampling = batch.get("sampling")
         if sampling is None:
-            next_tok = jnp.argmax(logits[:, -1, :], axis=-1)
-        else:
-            next_tok = SMP.choose_tokens(logits[:, -1, :], sampling,
-                                         cache["index"])
-        return next_tok, cache
+            return jnp.argmax(logits[:, -1, :], axis=-1), cache
+        row = logits[:, -1, :]
+        next_tok = SMP.choose_tokens(row, sampling, cache["index"])
+        return next_tok, cache, SMP.logprob_info(row, next_tok, cfg.vocab)
     return decode_step
 
 
@@ -195,11 +210,10 @@ def make_paged_decode_step(cfg: ArchConfig, use_kernel: bool = False) -> Callabl
                                         use_kernel=use_kernel)
         sampling = batch.get("sampling")
         if sampling is None:
-            next_tok = jnp.argmax(logits[:, -1, :], axis=-1)
-        else:
-            next_tok = SMP.choose_tokens(logits[:, -1, :], sampling,
-                                         cache["index"])
-        return next_tok, cache
+            return jnp.argmax(logits[:, -1, :], axis=-1), cache
+        row = logits[:, -1, :]
+        next_tok = SMP.choose_tokens(row, sampling, cache["index"])
+        return next_tok, cache, SMP.logprob_info(row, next_tok, cfg.vocab)
     return decode_step
 
 
@@ -207,13 +221,18 @@ def make_verify_step(cfg: ArchConfig, window: int) -> Callable:
     """Speculative-verify step (serving): ``batch["tokens"]`` is the (B, W)
     window — each slot's last emitted token + W-1 draft proposals — scored
     by the target model in ONE dispatch (models/serve.py ``verify_window``).
-    Returns (greedy (B, W) int32, cache): position j's greedy token is
-    bit-identical to what sequential decode would emit after accepting j
-    window tokens, which is what makes greedy acceptance == plain decode."""
+    Returns (greedy (B, W) int32, cache, logprob_info over every window
+    position): position j's greedy token is bit-identical to what sequential
+    decode would emit after accepting j window tokens, which is what makes
+    greedy acceptance == plain decode; the logprob payload lets the engine
+    report per-token logprobs for the accepted positions without a second
+    forward (serving/sampling.py ``logprob_info``)."""
+    from repro.serving import sampling as SMP
+
     def verify_step(params, cache, batch):
         logits, cache = SV.verify_window(params, cfg, cache, batch, window)
         greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        return greedy, cache
+        return greedy, cache, SMP.logprob_info(logits, greedy, cfg.vocab)
     return verify_step
 
 
@@ -221,11 +240,13 @@ def make_paged_verify_step(cfg: ArchConfig, window: int) -> Callable:
     """Block-native speculative-verify step: same contract as
     ``make_verify_step`` over the paged pool + block tables (models/serve.py
     ``verify_window_paged``)."""
+    from repro.serving import sampling as SMP
+
     def verify_step(params, cache, batch):
         logits, cache = SV.verify_window_paged(params, cfg, cache, batch,
                                                window)
         greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        return greedy, cache
+        return greedy, cache, SMP.logprob_info(logits, greedy, cfg.vocab)
     return verify_step
 
 

@@ -5,10 +5,12 @@ Public cache surface: the :class:`SlotStore` protocol (store.py) with
 and the ``make_store(cfg, n_slots, max_seq_len, backend=...)`` factory.
 ``KVSlotManager`` survives as a deprecated shim over ContiguousKVStore.
 
-Multi-host: :class:`Router` (router.py) fronts one Engine per simulated host
-with cache-affinity placement, load-aware spill, and drain/handoff — the OPQ
-affinity policy extended across hosts. See docs/architecture.md for the
-layer map.
+Multi-host: :class:`Router` (router.py) fronts one host per
+:class:`HostTransport` (transport.py) with cache-affinity placement,
+load-aware spill, drain/handoff, and host-loss recovery. Hosts are
+in-process engines (``build_inproc_fleet``, the default) or real OS
+processes (``SubprocessTransport`` + host_main.py workers speaking framed
+RPC over a local socket). See docs/architecture.md for the layer map.
 """
 
 from repro.serving.engine import (          # noqa: F401
@@ -16,8 +18,13 @@ from repro.serving.engine import (          # noqa: F401
 )
 from repro.serving.kv import KVSlotManager              # noqa: F401  (deprecated)
 from repro.serving.metrics import (          # noqa: F401
-    EngineMetrics, RequestMetrics, format_memory_stats, format_router_stats,
-    format_sampling_stats,
+    EngineMetrics, RequestMetrics, TransportMetrics, format_memory_stats,
+    format_router_stats, format_sampling_stats, format_transport_stats,
+)
+from repro.serving.transport import (        # noqa: F401
+    EngineHost, HostTransport, InProcessTransport, SubprocessTransport,
+    TransportError, build_inproc_fleet, build_model_spec,
+    realize_model_spec,
 )
 from repro.serving.router import (           # noqa: F401
     Router, RouterConfig, RouterRequest,

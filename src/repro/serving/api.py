@@ -10,7 +10,13 @@ multi-host :class:`~repro.serving.router.Router`, with
     delivery is asserted in CI), then a final ``data: {"done": true, ...}``
     and ``data: [DONE]``. Per-request sampling params (temperature, top_k,
     top_p, repetition_penalty, seed, stop) map straight onto
-    :class:`~repro.serving.sampling.SamplingParams`.
+    :class:`~repro.serving.sampling.SamplingParams`. ``"logprobs": true``
+    adds each emitted token's log-probability (from the very logits row the
+    token choice used — no second forward, no second executable), and
+    ``"top_logprobs": k`` (k <= sampling.TOP_LOGPROBS) its k most likely
+    alternatives; both ride token events and the non-streamed response, and
+    are strictly opt-in — responses without them are byte-identical to
+    before.
   * ``POST /v1/embeddings`` / ``POST /v1/classify`` — the non-generative
     endpoints: one fused bucketed forward (``Engine.embed``) returning the
     prompt's last-position hidden state, or a softmax over candidate token
@@ -97,14 +103,21 @@ class _Backend:
         self.target = target
         self.is_router = isinstance(target, Router)
 
-    def submit(self, prompt, max_new_tokens, sampling):
+    def submit(self, prompt, max_new_tokens, sampling, want_logprobs=None):
         return self.target.submit(prompt, max_new_tokens, sampling=sampling,
-                                  strict=True)
+                                  want_logprobs=want_logprobs, strict=True)
 
     def tokens(self, handle) -> List[int]:
         if self.is_router:
             return self.target.progress(handle)
         return list(handle.tokens)
+
+    @staticmethod
+    def logprob_rows(handle):
+        """(logprobs, top_logprobs) mirrors — Request and RouterRequest both
+        carry them, appended atomically with each token, so slicing by the
+        token cursor stays aligned."""
+        return handle.logprobs, handle.top_logprobs
 
     @staticmethod
     def done(handle) -> bool:
@@ -130,8 +143,10 @@ class _Backend:
 class _ServeLoop(threading.Thread):
     """The single thread that owns the backend. Commands arrive as
     ``(kind, payload, reply_q)``; generation streams leave through the
-    per-request queues as ``("token", id)`` / ``("done", finish_reason)`` /
-    ``("error", message)`` events."""
+    per-request queues as ``("token", (id, logprob_fields|None))`` /
+    ``("done", finish_reason)`` / ``("error", message)`` events. A server
+    shutdown flushes ``("done", "shutdown")`` to every live stream so no
+    SSE consumer is left hanging without a terminal frame."""
 
     def __init__(self, backend: _Backend, mesh=None):
         super().__init__(daemon=True, name="serve-loop")
@@ -166,9 +181,10 @@ class _ServeLoop(threading.Thread):
         kind, payload, reply = cmd
         try:
             if kind == "submit":
-                handle = self.backend.submit(*payload)
+                prompt, gen, sampling, want = payload
+                handle = self.backend.submit(prompt, gen, sampling, want)
                 q: "queue.Queue" = queue.Queue()
-                self._streams[next(self._keys)] = [handle, q, 0]
+                self._streams[next(self._keys)] = [handle, q, 0, want]
                 reply.put((True, q))
             elif kind == "embed":
                 reply.put((True, self.backend.embed(payload)))
@@ -181,10 +197,19 @@ class _ServeLoop(threading.Thread):
 
     def _harvest(self) -> None:
         for key in list(self._streams):
-            handle, q, sent = self._streams[key]
+            handle, q, sent, want = self._streams[key]
             toks = self.backend.tokens(handle)
-            for tok in toks[sent:]:
-                q.put(("token", int(tok)))
+            lps = tls = ()
+            if want is not None:
+                lps, tls = self.backend.logprob_rows(handle)
+            for j in range(sent, len(toks)):
+                extra = None
+                if want is not None and j < len(lps):
+                    extra = {"logprob": float(lps[j])}
+                    if want > 0:
+                        extra["top_logprobs"] = [
+                            [int(t), float(v)] for t, v in tls[j][:want]]
+                q.put(("token", (int(toks[j]), extra)))
             self._streams[key][2] = len(toks)
             if self.backend.done(handle):
                 q.put(("done", self.backend.finish_reason(handle)))
@@ -212,10 +237,15 @@ class _ServeLoop(threading.Thread):
                     except Exception as exc:
                         # a failed step poisons every live stream, not the
                         # server: report and keep serving new requests
-                        for _, q, _ in self._streams.values():
+                        for _, q, _, _ in self._streams.values():
                             q.put(("error", f"{type(exc).__name__}: {exc}"))
                         self._streams.clear()
                     self._harvest()
+        # graceful shutdown: every stream still live gets a terminal frame
+        # (an SSE consumer must never hang waiting on a dead server)
+        for _, q, _, _ in self._streams.values():
+            q.put(("done", "shutdown"))
+        self._streams.clear()
 
 
 def _make_handler(loop: _ServeLoop):
@@ -282,20 +312,34 @@ def _make_handler(loop: _ServeLoop):
                                                  "ids) is required"})
             gen = int(body.get("max_new_tokens", 16))
             sampling = _params_from(body)
-            stream_q = loop.call("submit", (prompt, gen, sampling))
+            # logprobs are opt-in: "logprobs": true records each token's
+            # log-probability; "top_logprobs": k adds its k alternatives
+            # (k bounded by the device-side capture width — the engine's
+            # door rejects more with a 400 here)
+            want = (int(body.get("top_logprobs", 0))
+                    if body.get("logprobs") else None)
+            stream_q = loop.call("submit", (prompt, gen, sampling, want))
             if not body.get("stream"):
-                toks, reason = [], None
+                toks, lps, tls, reason = [], [], [], None
                 while True:
                     kind, val = stream_q.get(timeout=_STREAM_TIMEOUT_S)
                     if kind == "token":
-                        toks.append(val)
+                        tok, extra = val
+                        toks.append(tok)
+                        if extra is not None:
+                            lps.append(extra["logprob"])
+                            tls.append(extra.get("top_logprobs", []))
                     elif kind == "done":
                         reason = val
                         break
                     else:
                         return self._json(500, {"error": val})
-                return self._json(200, {"tokens": toks,
-                                        "finish_reason": reason})
+                out = {"tokens": toks, "finish_reason": reason}
+                if want is not None:
+                    out["logprobs"] = lps
+                    if want > 0:
+                        out["top_logprobs"] = tls
+                return self._json(200, out)
             self.send_response(200)
             self.send_header("Content-Type", "text/event-stream")
             self.send_header("Cache-Control", "no-cache")
@@ -305,7 +349,11 @@ def _make_handler(loop: _ServeLoop):
             while True:
                 kind, val = stream_q.get(timeout=_STREAM_TIMEOUT_S)
                 if kind == "token":
-                    self._sse_event({"token": val, "index": i})
+                    tok, extra = val
+                    event = {"token": tok, "index": i}
+                    if extra is not None:
+                        event.update(extra)
+                    self._sse_event(event)
                     i += 1
                 elif kind == "done":
                     self._sse_event({"done": True, "finish_reason": val,

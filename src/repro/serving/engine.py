@@ -70,7 +70,7 @@ from repro.core.opq import OPQ, Buffer
 from repro.models import steps as ST
 from repro.serving.metrics import EngineMetrics, RequestMetrics, now
 from repro.serving.sampling import (
-    GREEDY, SamplingParams, stack_params, stop_match,
+    GREEDY, TOP_LOGPROBS, SamplingParams, stack_params, stop_match,
 )
 from repro.serving.scheduler import Scheduler, bucket_for, default_buckets
 from repro.serving.store import RECURRENT_FAMILIES, SlotStore, make_store
@@ -100,6 +100,13 @@ class Request:
     # stop_history + tokens, so a handoff never re-arms or misses a stop
     stop_history: Tuple[int, ...] = ()
     finish_reason: Optional[str] = None    # "length" | "eos" | "stop"
+    # logprob capture (serve API): None == off; an int N asks for the
+    # chosen token's logprob plus its top-N alternatives per emitted token
+    # (N == 0 records the chosen logprob only; N <= sampling.TOP_LOGPROBS)
+    want_logprobs: Optional[int] = None
+    logprobs: List[float] = dataclasses.field(default_factory=list)
+    top_logprobs: List[List[Tuple[int, float]]] = dataclasses.field(
+        default_factory=list)
 
     @property
     def last_token(self) -> int:
@@ -108,6 +115,27 @@ class Request:
     @property
     def done(self) -> bool:
         return self.state == RequestState.DONE
+
+    def to_wire(self) -> Dict:
+        """The request's transport wire form: plain JSON/msgpack-able data,
+        sufficient to re-admit the stream as a continuation elsewhere
+        (serving/transport.py). The prompt travels as a token list; sampling
+        params via their own wire form; metrics stay host-local."""
+        from repro.serving.sampling import sampling_to_wire
+        return {
+            "id": self.id,
+            "prompt": [int(t) for t in self.prompt],
+            "max_new_tokens": self.max_new_tokens,
+            "state": self.state.value,
+            "tokens": [int(t) for t in self.tokens],
+            "sampling": sampling_to_wire(self.sampling),
+            "stop_history": [int(t) for t in self.stop_history],
+            "finish_reason": self.finish_reason,
+            "want_logprobs": self.want_logprobs,
+            "logprobs": [float(v) for v in self.logprobs],
+            "top_logprobs": [[[int(t), float(v)] for t, v in row]
+                             for row in self.top_logprobs],
+        }
 
 
 @dataclasses.dataclass(frozen=True)
@@ -562,6 +590,7 @@ class Engine:
     def submit(self, prompt: Sequence[int], max_new_tokens: int,
                *, sampling: Optional[SamplingParams] = None,
                stop_history: Sequence[int] = (),
+               want_logprobs: Optional[int] = None,
                strict: bool = False) -> Optional[Request]:
         """Admission control at the door: a bounded queue and a hard per-slot
         sequence budget. Returns the Request, or None when rejected
@@ -570,10 +599,12 @@ class Engine:
         ``sampling`` (None == greedy) rides the request through its whole
         slot residency; ``stop_history`` is the generated prefix of an
         earlier segment (router drain handoff) that stop sequences must see.
-        Non-greedy params on a speculative engine are a configuration error
-        (greedy acceptance is what makes draft-verify exact; rejection
-        sampling is a ROADMAP item), diagnosed here rather than emitting a
-        silently-greedy stream."""
+        ``want_logprobs`` (None == off) records each emitted token's logprob
+        plus its top-N alternatives from the very logits row the token
+        choice used. Non-greedy params on a speculative engine are a
+        configuration error (greedy acceptance is what makes draft-verify
+        exact; rejection sampling is a ROADMAP item), diagnosed here rather
+        than emitting a silently-greedy stream."""
         if (sampling is not None and not sampling.greedy
                 and self.ecfg.speculative):
             raise ValueError(
@@ -581,6 +612,10 @@ class Engine:
                 f"{sampling.temperature} requires sampled acceptance "
                 f"(rejection sampling — a ROADMAP follow-up). Drop "
                 f"--speculative or the sampling params.")
+        if want_logprobs is not None and not 0 <= want_logprobs <= TOP_LOGPROBS:
+            raise ValueError(
+                f"want_logprobs must be in [0, {TOP_LOGPROBS}] (the device-"
+                f"side top-K capture width), got {want_logprobs}")
         prompt = np.asarray(prompt, dtype=np.int32).reshape(-1)
         if not self.would_accept(len(prompt), max_new_tokens):
             self.metrics.rejected += 1
@@ -593,6 +628,7 @@ class Engine:
         req = Request(id=next(self._req_ids), prompt=prompt,
                       max_new_tokens=max_new_tokens,
                       sampling=sampling, stop_history=tuple(stop_history),
+                      want_logprobs=want_logprobs,
                       metrics=RequestMetrics(arrival_s=now(),
                                              prompt_len=len(prompt)))
         self.scheduler.enqueue(req)
@@ -707,7 +743,7 @@ class Engine:
             pending.append((pairs, last, fut, dfut))
         for pairs, last, fut, dfut in pending:
             t0 = now()
-            first, kv = fut.result()
+            first, kv, lp = fut.result()
             first = np.asarray(first)
             self.metrics.prefill_wait_s += now() - t0
             self.metrics.prefill_batches += 1
@@ -726,6 +762,7 @@ class Engine:
                 req.state = RequestState.RUNNING
                 tok = int(first[i])
                 req.tokens.append(tok)
+                self._record_logprob(req, lp, i)
                 self._presence[slot, tok] = True
                 if req.sampling is not None and not req.sampling.greedy:
                     self.metrics.sampled_tokens += 1
@@ -735,6 +772,21 @@ class Engine:
                 if self._finished(req):       # done at the prefill token:
                     self._retire(slot)        # reset scrubs the seeded row
         return admitted
+
+    def _record_logprob(self, req: Request, lp, idx) -> None:
+        """Append one emitted token's logprob record from a step's
+        ``logprob_info`` payload (idx selects the request's row — an int for
+        prefill/decode, a (slot, window_pos) pair for verify). Free for
+        requests that didn't opt in: the payload was computed inside the
+        already-dispatched step (one executable), only the host-side copy
+        is skipped."""
+        if req.want_logprobs is None:
+            return
+        req.logprobs.append(float(np.asarray(lp["lp"])[idx]))
+        ids = np.asarray(lp["top_ids"])[idx]
+        lps = np.asarray(lp["top_lps"])[idx]
+        req.top_logprobs.append(
+            [(int(t), float(v)) for t, v in zip(ids, lps)])
 
     def _sampling_batch(self) -> Dict:
         """The decode batch's stacked per-slot sampling params + presence
@@ -754,7 +806,7 @@ class Engine:
 
     def _decode_once(self) -> None:
         toks, active = self.scheduler.decode_batch()
-        next_tok, cache = self._dispatch(
+        next_tok, cache, lp = self._dispatch(
             lambda p, c, b: self._decode(p, c, b),
             self._params_buf,
             self._resident(self.store.decode_cache(), "kv-cache"),
@@ -769,6 +821,7 @@ class Engine:
         for slot, req in list(self.scheduler.active.items()):
             tok = int(next_np[slot])
             req.tokens.append(tok)
+            self._record_logprob(req, lp, slot)
             self._presence[slot, tok] = True
             if req.sampling is not None and not req.sampling.greedy:
                 self.metrics.sampled_tokens += 1
@@ -819,7 +872,7 @@ class Engine:
                 window[:, i + 1] = nxt_np
             cur = nxt_np.reshape(n, 1)
         # ---- verify: one wide target forward for the whole batch
-        greedy, cache = self._dispatch(
+        greedy, cache, lp = self._dispatch(
             lambda p, c, b: self._verify(p, c, b),
             self._params_buf,
             self._resident(self.store.decode_cache(), "kv-cache"),
@@ -861,6 +914,8 @@ class Engine:
                         emit = j + 1
                         break
             req.tokens.extend(int(t) for t in g[:emit])
+            for j in range(emit):
+                self._record_logprob(req, lp, (slot, j))
             self._presence[slot, [int(t) for t in g[:emit]]] = True
             req.metrics.n_generated += emit
             produced += emit

@@ -187,6 +187,56 @@ class EngineMetrics:
         }
 
 
+@dataclasses.dataclass
+class TransportMetrics:
+    """Per-transport RPC telemetry (serving/transport.py): every Router->host
+    call is one RPC, whether it crosses a process boundary (SubprocessTransport
+    frames over a local socket) or not (InProcessTransport method calls — timed
+    the same way so the subprocess overhead is measured against a real
+    baseline, reports/BENCH_transport.json)."""
+
+    rpcs: int = 0
+    retries: int = 0                           # idempotent calls re-sent after
+                                               # a timeout/drop (fresh seq; the
+                                               # stale reply is discarded)
+    errors: int = 0                            # calls that raised
+                                               # TransportError (timeouts,
+                                               # EOF/connection loss)
+    rpc_wait_s: float = 0.0                    # wall time inside RPCs
+
+    def observe(self, dt: float) -> None:
+        self.rpcs += 1
+        self.rpc_wait_s += dt
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "rpcs": self.rpcs,
+            "retries": self.retries,
+            "errors": self.errors,
+            "rpc_wait_s": self.rpc_wait_s,
+            "mean_rpc_us": 1e6 * self.rpc_wait_s / max(self.rpcs, 1),
+        }
+
+
+def format_transport_stats(stats: Dict) -> str:
+    """One-line fleet-transport summary from ``Router.stats()`` — per-host
+    RPC volume/latency plus loss/recovery counters, the launch/serve.py
+    report line when hosts run as real processes."""
+    r = stats["router"]
+    per_host = r.get("transport", [])
+    kinds = {t["kind"] for t in per_host}
+    rpcs = sum(t["rpcs"] for t in per_host)
+    retries = sum(t["retries"] for t in per_host)
+    errors = sum(t["errors"] for t in per_host)
+    mean_us = (1e6 * sum(t["rpc_wait_s"] for t in per_host) / rpcs
+               if rpcs else 0.0)
+    lost = f" | lost={r['lost']}" if r.get("lost") else ""
+    return (f"transport[{'/'.join(sorted(kinds))}]: {rpcs} rpcs "
+            f"({mean_us:.0f} us mean) | {retries} retries, {errors} errors | "
+            f"{r.get('hosts_lost', 0)} hosts lost -> "
+            f"{r.get('recovered', 0)} streams recovered{lost}")
+
+
 def format_router_stats(stats: Dict) -> str:
     """One-line fleet summary from ``Router.stats()`` — placement counters in
     the same shape OPQ reports per-lane scheduling (placed/affinity_hits, the

@@ -1,43 +1,61 @@
-"""Multi-host serving router: the OPQ placement policy, one level up.
+"""Multi-host serving router: the OPQ placement policy over real transports.
 
 GPTPU's runtime places tile instructions on the accelerator already holding
 their input buffer (affinity) and falls back to the least-loaded lane
 (core/opq.py ``_pick_lane``); Jouppi et al. make the same argument at rack
 scale — serving utilization comes from scheduling work onto the accelerator
-that already holds the data. This module applies that policy across
-*simulated hosts*: a :class:`Router` fronts N :class:`~repro.serving.engine.
-Engine` instances (one per host, each with its own OPQ runtime and SlotStore),
-and places whole requests the way OPQ places instructions:
+that already holds the data. This module applies that policy across hosts:
+a :class:`Router` fronts N hosts behind the
+:class:`~repro.serving.transport.HostTransport` protocol — in-process
+engines (the default, ``build_inproc_fleet``) or one OS process per host
+(``SubprocessTransport``) — and places whole requests the way OPQ places
+instructions:
 
   * **cache-affinity placement** — requests carry an affinity key (an
     explicit ``session``, or a hash of the prompt ids); a key's requests pin
-    to the host whose SlotStore served it last — the host holding its leased
+    to the host whose slot pool served it last — the host holding its leased
     blocks — and the hit is counted exactly the way OPQ counts per-lane
-    affinity (``stats()["router"]["placed"/"affinity_hits"]`` mirrors
-    ``opq.stats["issued"/"affinity_hits"]``).
+    affinity (``stats()["router"]["placed"/"affinity_hits"]``).
   * **load-aware spill** — when the pinned host cannot take the request NOW
-    (paged block pool dry — ``Engine.lease_headroom`` — or its queue/door
-    rejects), the router places it on the least-loaded accepting host
-    instead of head-of-line blocking the fleet behind one dry pool, counts a
-    ``spill``, and re-pins the key to where the blocks actually leased.
-    First-seen keys go least-loaded, the OPQ FCFS fallback.
-  * **drain/handoff** — ``drain(host)`` stops placing traffic on an engine
-    and empties it without losing or changing a single token: queued
-    requests are pulled (``Engine.evict_queued``) and re-placed verbatim;
-    in-flight requests with more than ``handoff_threshold`` tokens left are
-    preempted (``Engine.preempt``) and re-admitted on another host as a
-    continuation — ``prompt + tokens generated so far`` through the normal
-    fused prefill-with-cache seeding path, which is bit-identical to decode
-    replay, so the stitched stream equals an undrained run bit-for-bit
-    (asserted in tests/test_router.py). Short remainders just finish in
-    place on the draining engine. Once ``is_drained``, the host can restart
-    elastically and return via ``undrain``.
+    (paged block pool dry — ``lease_headroom`` — or its queue/door rejects),
+    the router places it on the least-loaded accepting host instead of
+    head-of-line blocking the fleet behind one dry pool, counts a ``spill``,
+    and re-pins the key to where the blocks actually leased. First-seen keys
+    go least-loaded, the OPQ FCFS fallback. The door predicates are
+    advisory: admission races with other traffic (and, on subprocess hosts,
+    with the worker's own free-running loop), so a candidate whose door
+    closed between ``would_accept`` and ``submit`` is simply skipped and the
+    next candidate tried — the ledger records the host that actually took
+    the request.
+  * **drain/handoff** — ``drain(host)`` stops placing traffic on a host and
+    empties it without losing or changing a single token: queued requests
+    are pulled (``evict_queued``) and re-placed verbatim; in-flight requests
+    with more than ``handoff_threshold`` tokens left are preempted
+    (``preempt`` returns the authoritative segment state) and re-admitted on
+    another host as a continuation — ``prompt + tokens generated so far``
+    through the normal fused prefill-with-cache seeding path, which is
+    bit-identical to decode replay, so the stitched stream equals an
+    undrained run bit-for-bit (asserted in tests/test_router.py). Short
+    remainders just finish in place on the draining host. Once
+    ``is_drained``, the host can restart elastically and return via
+    ``undrain``.
+  * **loss recovery** — a transport failure (timeout, dead worker process)
+    marks the host LOST: it leaves the placement pool, its queued and
+    in-flight requests are re-admitted elsewhere as continuations from the
+    tokens already *harvested* (a token only counts as emitted once a
+    ``poll`` returned it), and requests no surviving host can take yet wait
+    as orphans retried every step. Because decode is deterministic, the
+    replacement segment regenerates exactly the tokens that died un-polled
+    in the lost process — the stream stays bit-identical and never
+    double-emits (tests/test_transport.py kills a worker with SIGKILL
+    mid-decode and asserts exactly this).
 
-Determinism: every engine is batch-invariant (staggered == sequential,
-engine.py) and greedy decode is a pure function of the token prefix, so ANY
-placement — spills, handoffs, mid-run drains included — yields bit-identical
-tokens to serving the same requests one at a time on a single engine. The
-router can therefore never trade correctness for load balance.
+Determinism: every host is batch-invariant (staggered == sequential) and
+greedy/seeded decode is a pure function of the token prefix, so ANY
+placement — spills, handoffs, mid-run drains, even crash re-admissions —
+yields bit-identical tokens to serving the same requests one at a time on a
+single host. The router can therefore never trade correctness for load
+balance or availability.
 """
 
 from __future__ import annotations
@@ -50,24 +68,26 @@ from typing import Dict, List, Optional, Sequence, Set, Tuple
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.serving.engine import (
-    Engine, EngineConfig, QueueFull, Request, RequestState,
-)
 from repro.serving.metrics import now
 from repro.serving.sampling import SamplingParams
+from repro.serving.transport import (
+    EngineConfig, HostTransport, QueueFull, TransportError,
+    build_inproc_fleet,
+)
 
 
 @dataclasses.dataclass(frozen=True)
 class RouterConfig:
-    """Fleet-level knobs (per-engine knobs stay in EngineConfig).
+    """Fleet-level knobs (per-host knobs stay in EngineConfig).
 
     n_hosts
-        Engines the router fronts — one per simulated host, each with its
-        own OPQ runtime and SlotStore.
+        Hosts the router fronts — one transport per host, each fronting an
+        engine with its own OPQ runtime and slot pool. Ignored when an
+        explicit ``transports`` fleet is handed to the Router.
     handoff_threshold
         ``drain(host)``: in-flight requests with MORE than this many tokens
         still to generate are preempted and re-admitted on another host;
-        at/below it they finish on the draining engine (a handoff costs one
+        at/below it they finish on the draining host (a handoff costs one
         continuation prefill — not worth it for a tail of a few tokens).
     """
 
@@ -77,9 +97,12 @@ class RouterConfig:
 
 @dataclasses.dataclass
 class RouterRequest:
-    """The fleet-level request: engine requests are per-segment internals
+    """The fleet-level request: per-host requests are per-segment internals
     (a handoff retires one and opens another); ``tokens`` is the stitched
-    stream and ``hosts`` the placement trail (len > 1 == handed off)."""
+    stream and ``hosts`` the placement trail (len > 1 == handed off).
+    ``tokens`` advances as the router harvests (``poll``) — it is the
+    caller-visible truth; un-harvested tokens on a host are provisional and
+    regenerated exactly if that host dies."""
 
     id: int
     prompt: np.ndarray
@@ -92,10 +115,24 @@ class RouterRequest:
     finish_s: Optional[float] = None
     sampling: Optional[SamplingParams] = None   # rides every segment
     finish_reason: Optional[str] = None         # from the final segment
+    want_logprobs: Optional[int] = None         # rides every segment
+    logprobs: List[float] = dataclasses.field(default_factory=list)
+    top_logprobs: List[List[Tuple[int, float]]] = dataclasses.field(
+        default_factory=list)
 
     @property
     def n_generated(self) -> int:
         return len(self.tokens)
+
+
+# per-host stats substitute once a host is lost: zeros for everything the
+# fleet sums, so aggregation degrades instead of crashing
+_FLEET_KEYS = ("submitted", "rejected", "admissions_deferred",
+               "evicted", "preempted", "completed", "tokens_generated",
+               "decode_steps", "prefill_batches", "prefill_tokens",
+               "spec_rounds", "draft_steps", "proposed_tokens",
+               "accepted_tokens", "sampled_tokens", "stop_hits",
+               "embed_requests")
 
 
 class Router:
@@ -107,41 +144,122 @@ class Router:
         router.drain(0)                       # elastic restart of host 0
         router.run_until_complete()
         print(req.tokens, router.stats()["router"])
+
+    or, with real host processes::
+
+        fleet = [SubprocessTransport(model_spec, engine_cfg)
+                 for _ in range(2)]
+        router = Router(transports=fleet)
     """
 
-    def __init__(self, cfg: ArchConfig, params,
+    def __init__(self, cfg: ArchConfig = None, params=None,
                  engine_cfg: EngineConfig = None,
-                 router_cfg: RouterConfig = None, *, draft_params=None):
+                 router_cfg: RouterConfig = None, *, draft_params=None,
+                 transports: Optional[Sequence[HostTransport]] = None):
         self.rcfg = router_cfg or RouterConfig()
+        if transports is not None:
+            # an explicit fleet sets its own size
+            self.rcfg = dataclasses.replace(self.rcfg,
+                                            n_hosts=len(transports))
         if self.rcfg.n_hosts < 1:
             raise ValueError(f"n_hosts must be >= 1, got {self.rcfg.n_hosts}")
         if self.rcfg.handoff_threshold < 0:
             raise ValueError("handoff_threshold must be >= 0")
-        # one engine per host; compiled steps are shared across them via the
-        # _jitted_steps cache, so N hosts costs N caches, not N XLA compiles.
-        # ``draft_params`` (speculative decode) is shared the same way: every
-        # host runs the same draft program over its own slot-synced store, so
-        # a drain handoff lands on a host whose draft re-prefills the
-        # continuation prompt like any other admission — lockstep by
-        # construction, nothing draft-specific to hand off.
-        self.engines: List[Engine] = [
-            Engine(cfg, params, engine_cfg, draft_params=draft_params)
-            for _ in range(self.rcfg.n_hosts)]
+        if transports is None:
+            transports = build_inproc_fleet(cfg, params, engine_cfg,
+                                            self.rcfg.n_hosts,
+                                            draft_params=draft_params)
+        self.transports: List[HostTransport] = list(transports)
         self._draining: Set[int] = set()
+        self._lost: Set[int] = set()
         self._affinity: Dict[str, int] = {}        # key -> host of last lease
+        # (host, per-host request id) -> fleet request, with a harvest cursor
+        # (tokens already polled off that segment) per live placement
         self._live: Dict[Tuple[int, int], RouterRequest] = {}
-        # rreq.id -> the engine Request of its CURRENT segment, so the serve
-        # API can stream mid-segment tokens live (``progress``)
-        self._segments: Dict[int, Request] = {}
-        self._harvested: List[int] = [0] * self.rcfg.n_hosts
+        self._cursor: Dict[Tuple[int, int], int] = {}
+        # finished ids each host should forget, shipped with the next poll
+        self._drop: List[List[int]] = [[] for _ in range(self.rcfg.n_hosts)]
+        # requests from a lost (or mid-drain-rejected) host awaiting a
+        # surviving host with capacity; retried every step
+        self._orphans: List[RouterRequest] = []
         self._req_ids = itertools.count()
         self.completed: List[RouterRequest] = []
         # the OPQ-shaped placement ledger: placed/affinity_hits is the
-        # cross-host analog of opq.stats issued/affinity_hits
+        # cross-host analog of opq issued/affinity_hits
         self.counters: Dict[str, int] = {
             "placed": 0, "affinity_hits": 0, "spills": 0, "rejected": 0,
             "drains": 0, "handoffs": 0, "requeued": 0,
+            "hosts_lost": 0, "recovered": 0,
         }
+
+    @property
+    def engines(self):
+        """The underlying engines of an in-process fleet — test/debug access
+        only (raises AttributeError on transports without one, e.g. a real
+        host process, where there is no same-address-space engine to hand
+        out)."""
+        return [t.engine for t in self.transports]
+
+    # ------------------------------------------------------------- transport
+
+    def _guard(self, host: int, fn, *args, default=None, **kwargs):
+        """Run one transport call; a transport-level failure marks the host
+        LOST (re-placing its work) and returns ``default`` so fleet-level
+        control flow degrades instead of unwinding."""
+        try:
+            return fn(*args, **kwargs)
+        except TransportError:
+            self._mark_lost(host)
+            return default
+
+    def _mark_lost(self, host: int) -> None:
+        """Host-loss recovery: pull the host from the placement pool, close
+        its transport (reaping a dead worker — no orphan processes), and
+        re-admit every request it owned as a continuation from the tokens
+        already harvested. Determinism regenerates the un-harvested tail
+        exactly, so the recovered stream is bit-identical and nothing
+        double-emits."""
+        if host in self._lost:
+            return
+        self._lost.add(host)
+        self.counters["hosts_lost"] += 1
+        try:
+            self.transports[host].close()
+        except Exception:
+            pass
+        self._drop[host] = []
+        for key in [k for k in self._live if k[0] == host]:
+            rreq = self._live.pop(key)
+            self._cursor.pop(key, None)
+            if rreq.max_new_tokens - len(rreq.tokens) <= 0:
+                # every token was already harvested; only the final done
+                # frame died with the host
+                self._finalize(rreq, rreq.finish_reason or "length")
+                continue
+            if not self._readmit(rreq):
+                self._orphans.append(rreq)
+
+    def _readmit(self, rreq: RouterRequest) -> bool:
+        """Re-admit a disrupted request as a continuation on any surviving
+        host; False leaves it an orphan for the next step's retry."""
+        remaining = rreq.max_new_tokens - len(rreq.tokens)
+        cont_prompt = np.concatenate(
+            [rreq.prompt, np.asarray(rreq.tokens, np.int32)]
+        ) if rreq.tokens else rreq.prompt
+        placed = self._place(self._key(rreq.prompt, rreq.session),
+                             len(cont_prompt), remaining)
+        if placed is None:
+            return False
+        if not self._submit_segment(rreq, placed[0], cont_prompt, remaining):
+            return False
+        self.counters["recovered"] += 1
+        return True
+
+    def _finalize(self, rreq: RouterRequest, reason: Optional[str]) -> None:
+        rreq.done = True
+        rreq.finish_s = now()
+        rreq.finish_reason = reason
+        self.completed.append(rreq)
 
     # ------------------------------------------------------------- placement
 
@@ -154,8 +272,12 @@ class Router:
         return f"p:{zlib.crc32(np.ascontiguousarray(prompt).tobytes()):#x}"
 
     def _load(self, host: int) -> int:
-        e = self.engines[host]
-        return e.scheduler.queue_depth + e.scheduler.n_active
+        return self._guard(host, self.transports[host].load, default=1 << 30)
+
+    def _alive(self, exclude: Set[int] = frozenset()) -> List[int]:
+        return [h for h in range(self.rcfg.n_hosts)
+                if h not in self._draining and h not in self._lost
+                and h not in exclude]
 
     def _place(self, key: str, prompt_len: int, max_new_tokens: int,
                exclude: Set[int] = frozenset()
@@ -163,31 +285,34 @@ class Router:
         """Pick a host for a request: pinned host first (affinity), else
         least-loaded accepting host (FCFS fallback; a bypassed pin counts as
         a spill). Returns (host, affinity_hit, spilled), or None when no
-        host can ever take it. Mirrors opq.OPQ._pick_lane one level up."""
-        alive = [h for h in range(self.rcfg.n_hosts)
-                 if h not in self._draining and h not in exclude]
+        host can ever take it. Mirrors opq lane-picking one level up."""
+        alive = self._alive(exclude)
         if not alive:
             return None
         pinned = self._affinity.get(key)
         spilled = False
         if pinned is not None and pinned in alive:
-            e = self.engines[pinned]
-            if (e.would_accept(prompt_len, max_new_tokens)
-                    and e.lease_headroom(prompt_len, max_new_tokens)):
+            t = self.transports[pinned]
+            if (self._guard(pinned, t.would_accept, prompt_len,
+                            max_new_tokens, default=False)
+                    and self._guard(pinned, t.lease_headroom, prompt_len,
+                                    max_new_tokens, default=False)):
                 return pinned, True, False
             # the pinned host's pool is dry (or its door rejects): shed the
             # request rather than queue the fleet behind one host
-            spilled = True
+            spilled = pinned not in self._lost
+        alive = self._alive(exclude)           # a probe may have lost a host
         accepting = [h for h in sorted(alive, key=self._load)
-                     if self.engines[h].would_accept(prompt_len,
-                                                     max_new_tokens)]
+                     if self._guard(h, self.transports[h].would_accept,
+                                    prompt_len, max_new_tokens,
+                                    default=False)]
         if not accepting:
             return None
         # prefer a host that can lease immediately; fall back to queueing on
         # the least-loaded door if every pool is dry right now
         ready = [h for h in accepting
-                 if self.engines[h].lease_headroom(prompt_len,
-                                                   max_new_tokens)]
+                 if self._guard(h, self.transports[h].lease_headroom,
+                                prompt_len, max_new_tokens, default=False)]
         pick = (ready or accepting)[0]
         if pick == pinned:
             # every pool is dry and the least-loaded door is the pin itself:
@@ -199,21 +324,40 @@ class Router:
     def submit(self, prompt: Sequence[int], max_new_tokens: int, *,
                session: Optional[str] = None,
                sampling: Optional[SamplingParams] = None,
+               want_logprobs: Optional[int] = None,
                strict: bool = False) -> Optional[RouterRequest]:
         """Place one request on the fleet. Returns the RouterRequest, or
         None when every host rejects it (QueueFull when ``strict``) — the
-        same door contract as Engine.submit. ``sampling`` rides the request
-        through every segment a drain/handoff opens, so a seeded stream
-        stitches bit-identically to an undrained run."""
+        same door contract as the engine's own submit. ``sampling`` and
+        ``want_logprobs`` ride the request through every segment a
+        drain/handoff opens, so a seeded stream stitches bit-identically to
+        an undrained run.
+
+        The door predicates in ``_place`` are a snapshot, not a lease:
+        another submit (or, on subprocess hosts, the worker's own loop) can
+        consume the capacity between ``would_accept`` and ``submit``. A
+        candidate whose door closed in that window returns None from submit
+        and the NEXT candidate is re-validated and tried — never a
+        spurious fleet-level rejection while some host still accepts."""
         prompt = np.asarray(prompt, dtype=np.int32).reshape(-1)
         key = self._key(prompt, session)
-        placed = self._place(key, len(prompt), max_new_tokens)
-        ereq = None
-        if placed is not None:
+        tried: Set[int] = set()
+        host = eid = None
+        hit = spilled = False
+        while True:
+            placed = self._place(key, len(prompt), max_new_tokens,
+                                 exclude=tried)
+            if placed is None:
+                break
             host, hit, spilled = placed
-            ereq = self.engines[host].submit(prompt, max_new_tokens,
-                                             sampling=sampling)
-        if ereq is None:
+            eid = self._guard(host, self.transports[host].submit,
+                              prompt, max_new_tokens, sampling=sampling,
+                              want_logprobs=want_logprobs)
+            if eid is not None:
+                break
+            tried.add(host)                # door closed since the probe —
+            host = None                    # re-validate the next candidate
+        if eid is None or host is None:
             self.counters["rejected"] += 1
             if strict:
                 raise QueueFull(
@@ -227,9 +371,10 @@ class Router:
         self._affinity[key] = host                 # pin to where the lease is
         rreq = RouterRequest(id=next(self._req_ids), prompt=prompt,
                              max_new_tokens=max_new_tokens, session=session,
-                             arrival_s=now(), hosts=[host], sampling=sampling)
-        self._live[(host, ereq.id)] = rreq
-        self._segments[rreq.id] = ereq
+                             arrival_s=now(), hosts=[host], sampling=sampling,
+                             want_logprobs=want_logprobs)
+        self._live[(host, eid)] = rreq
+        self._cursor[(host, eid)] = 0
         return rreq
 
     # ------------------------------------------------------------ drain/handoff
@@ -239,7 +384,7 @@ class Router:
         re-place its queued requests, hand off in-flight generations longer
         than ``handoff_threshold`` as continuations (``prompt + tokens so
         far`` re-admitted through the normal seeding path — bit-identical to
-        not draining), and let short tails finish in place. The engine keeps
+        not draining), and let short tails finish in place. The host keeps
         stepping until its slots empty (``is_drained``); ``undrain`` returns
         it to the placement pool after an elastic restart."""
         if not 0 <= host < self.rcfg.n_hosts:
@@ -248,70 +393,116 @@ class Router:
             return
         self._draining.add(host)
         self.counters["drains"] += 1
-        eng = self.engines[host]
+        if host in self._lost:
+            return                         # nothing left to empty
+        t = self.transports[host]
+        # sync the harvest mirror first so continuation prompts and the
+        # handoff-threshold decision see every token the host emitted
+        self._harvest(host)
+        if host in self._lost:
+            return
         # queued requests hold no cache state: re-place them verbatim. A
-        # request no other host can take goes back to the draining engine's
+        # request no other host can take goes back to the draining host's
         # queue — drain blocks NEW traffic, not work already accepted.
-        for ereq in eng.evict_queued():
-            rreq = self._live.pop((host, ereq.id), None)
+        # Requests the router does not own (submitted to the engine
+        # directly) re-enqueue on the host untouched — the host side of
+        # evict_queued handles them (transport.EngineHost).
+        owned = [eid for (h, eid) in self._live if h == host]
+        for eid in self._guard(host, t.evict_queued, owned, default=[]):
+            key = (host, eid)
+            rreq = self._live.pop(key, None)
             if rreq is None:
-                # submitted to the engine directly, not router-placed: put it
-                # back in the engine's own queue untouched (same Request
-                # object, so the direct caller's handle still completes)
-                ereq.state = RequestState.QUEUED
-                eng.scheduler.enqueue(ereq)
                 continue
-            self._reroute(rreq, np.asarray(ereq.prompt),
-                          ereq.max_new_tokens, fallback=eng)
+            self._cursor.pop(key, None)
+            self._reroute(rreq, fallback=host)
+        if host in self._lost:
+            return
         # in-flight: hand off the long generations, finish the short tails
-        for slot in sorted(eng.scheduler.active):
-            ereq = eng.scheduler.active[slot]
-            rreq = self._live.get((host, ereq.id))
+        for entry in self._guard(host, t.inflight, default=[]):
+            eid = int(entry["id"])
+            key = (host, eid)
+            rreq = self._live.get(key)
             if rreq is None:
-                continue                           # direct submit: finish here
-            remaining = ereq.max_new_tokens - len(ereq.tokens)
+                continue                   # not router-placed: finish here
+            remaining = rreq.max_new_tokens - len(rreq.tokens)
             if remaining <= self.rcfg.handoff_threshold:
                 continue
-            done_tokens = rreq.tokens + ereq.tokens
-            cont_prompt = np.concatenate(
-                [rreq.prompt, np.asarray(done_tokens, np.int32)])
             target = self._place(self._key(rreq.prompt, rreq.session),
-                                 len(cont_prompt), remaining,
-                                 exclude={host})
+                                 len(rreq.prompt) + len(rreq.tokens),
+                                 remaining, exclude={host})
             if target is None:
-                continue                           # nowhere to go: finish here
-            eng.preempt(ereq.id)
-            del self._live[(host, ereq.id)]
-            rreq.tokens.extend(ereq.tokens)
-            self._submit_segment(rreq, target[0], cont_prompt, remaining)
-            self.counters["handoffs"] += 1
+                continue                   # nowhere to go: finish here
+            wire = self._guard(host, t.preempt, eid)
+            if host in self._lost:
+                return                     # loss recovery took over
+            if wire is None:
+                continue                   # finished meanwhile: next poll
+            del self._live[key]
+            cur = self._cursor.pop(key, 0)
+            self._absorb_segment(rreq, wire, cur)
+            remaining = rreq.max_new_tokens - len(rreq.tokens)
+            if remaining <= 0:
+                self._finalize(rreq, wire.get("finish_reason") or "length")
+                continue
+            cont_prompt = np.concatenate(
+                [rreq.prompt, np.asarray(rreq.tokens, np.int32)])
+            if self._submit_segment(rreq, target[0], cont_prompt, remaining):
+                self.counters["handoffs"] += 1
+            else:
+                self._orphans.append(rreq)
 
-    def _reroute(self, rreq: RouterRequest, prompt: np.ndarray,
-                 max_new_tokens: int, fallback: Engine) -> None:
+    def _absorb_segment(self, rreq: RouterRequest, wire: Dict,
+                        cursor: int) -> None:
+        """Fold a preempted segment's authoritative wire state into the
+        fleet request: everything past the harvest cursor (a free-running
+        worker may be ahead of the last poll)."""
+        rreq.tokens.extend(int(t) for t in wire["tokens"][cursor:])
+        if rreq.want_logprobs is not None:
+            rreq.logprobs.extend(float(v)
+                                 for v in wire.get("logprobs", [])[cursor:])
+            rreq.top_logprobs.extend(
+                [(int(t), float(v)) for t, v in row]
+                for row in wire.get("top_logprobs", [])[cursor:])
+
+    def _reroute(self, rreq: RouterRequest, fallback: int) -> None:
+        remaining = rreq.max_new_tokens - len(rreq.tokens)
+        cont_prompt = np.concatenate(
+            [rreq.prompt, np.asarray(rreq.tokens, np.int32)]
+        ) if rreq.tokens else rreq.prompt
         placed = self._place(self._key(rreq.prompt, rreq.session),
-                             len(prompt), max_new_tokens)
-        host = (self.engines.index(fallback) if placed is None
-                else placed[0])
-        self._submit_segment(rreq, host, prompt, max_new_tokens)
+                             len(cont_prompt), remaining)
+        host = fallback if placed is None else placed[0]
+        if not self._submit_segment(rreq, host, cont_prompt, remaining):
+            self._orphans.append(rreq)
         self.counters["requeued"] += 1
 
     def _submit_segment(self, rreq: RouterRequest, host: int,
-                        prompt: np.ndarray, max_new_tokens: int) -> None:
+                        prompt: np.ndarray, max_new_tokens: int) -> bool:
         # sampling params survive the handoff, and the new segment's stop
         # matcher sees the tokens earlier segments generated (stop_history)
         # — position-counter randomness makes the stitched seeded stream
         # bit-identical to the undrained one (tests/test_sampling.py)
-        ereq = self.engines[host].submit(
-            prompt, max_new_tokens, sampling=rreq.sampling,
-            stop_history=tuple(rreq.tokens), strict=True)
-        self._live[(host, ereq.id)] = rreq
-        self._segments[rreq.id] = ereq
+        eid = self._guard(host, self.transports[host].submit,
+                          prompt, max_new_tokens, sampling=rreq.sampling,
+                          stop_history=tuple(rreq.tokens),
+                          want_logprobs=rreq.want_logprobs)
+        if eid is None:
+            return False
+        self._live[(host, eid)] = rreq
+        self._cursor[(host, eid)] = 0
         rreq.hosts.append(host)
         self._affinity[self._key(rreq.prompt, rreq.session)] = host
+        return True
 
     def is_drained(self, host: int) -> bool:
-        """Draining AND empty — safe to restart the host process."""
-        return host in self._draining and not self.engines[host].has_work()
+        """Draining AND empty — safe to restart the host process. A lost
+        host is vacuously drained (its work was re-placed)."""
+        if host not in self._draining:
+            return False
+        if host in self._lost:
+            return True
+        return not self._guard(host, self.transports[host].has_work,
+                               default=False)
 
     def undrain(self, host: int) -> None:
         """Return a (restarted) host to the placement pool."""
@@ -320,50 +511,85 @@ class Router:
     # --------------------------------------------------------------- stepping
 
     def step(self) -> None:
-        """One fleet iteration: step every engine that has work (draining
-        engines included — they must finish what they hold), then harvest
-        completions into the fleet-level requests."""
-        for host, eng in enumerate(self.engines):
-            if eng.has_work():
-                eng.step()
+        """One fleet iteration: pump every live host (one engine step for
+        in-process hosts; a no-op for subprocess hosts, whose workers
+        free-run), harvest new tokens and completions, and retry orphaned
+        requests against recovered capacity. Draining hosts are pumped too —
+        they must finish what they hold."""
+        if self._orphans:
+            pending, self._orphans = self._orphans, []
+            for rreq in pending:
+                if not self._readmit(rreq):
+                    self._orphans.append(rreq)
+        for host in range(self.rcfg.n_hosts):
+            if host in self._lost:
+                continue
+            self._guard(host, self.transports[host].pump)
+            if host in self._lost:
+                continue
             self._harvest(host)
 
     def _harvest(self, host: int) -> None:
-        eng = self.engines[host]
-        while self._harvested[host] < len(eng.completed):
-            ereq = eng.completed[self._harvested[host]]
-            self._harvested[host] += 1
-            rreq = self._live.pop((host, ereq.id), None)
+        """Poll one host for token deltas past each live request's cursor.
+        Polling is idempotent — a duplicated or retried poll re-reads, never
+        re-emits — and a request's done flag travels with its final tokens,
+        so completion is atomic with the tokens that caused it."""
+        cursors = {eid: self._cursor[(h, eid)]
+                   for (h, eid) in self._live if h == host}
+        drop, self._drop[host] = self._drop[host], []
+        if not cursors and not drop:
+            return
+        deltas = self._guard(host, self.transports[host].poll, cursors,
+                             drop, default=None)
+        if deltas is None:
+            self._drop[host] = drop        # poll failed: host marked lost
+            return
+        for eid, delta in deltas.items():
+            key = (host, int(eid))
+            rreq = self._live.get(key)
             if rreq is None:
-                continue                   # not router-placed (direct submit)
-            rreq.tokens.extend(ereq.tokens)
-            rreq.done = True
-            rreq.finish_s = now()
-            rreq.finish_reason = ereq.finish_reason
-            self._segments.pop(rreq.id, None)
-            self.completed.append(rreq)
+                continue
+            new = [int(t) for t in delta.get("t", ())]
+            rreq.tokens.extend(new)
+            self._cursor[key] += len(new)
+            if rreq.want_logprobs is not None:
+                rreq.logprobs.extend(float(v) for v in delta.get("lp", ()))
+                rreq.top_logprobs.extend(
+                    [(int(t), float(v)) for t, v in row]
+                    for row in delta.get("tl", ()))
+            if delta.get("done"):
+                del self._live[key]
+                del self._cursor[key]
+                self._drop[host].append(int(eid))
+                self._finalize(rreq, delta.get("reason"))
 
     def progress(self, rreq: RouterRequest) -> List[int]:
-        """The stitched token stream INCLUDING the live segment's tokens —
-        what an SSE streamer polls between fleet steps. ``rreq.tokens``
-        alone only advances at segment boundaries (handoff/finish)."""
-        seg = self._segments.get(rreq.id)
-        if seg is None or rreq.done:
-            return list(rreq.tokens)
-        return list(rreq.tokens) + list(seg.tokens)
+        """The stitched token stream as of the last harvest — what an SSE
+        streamer polls between fleet steps. Harvest is continuous (every
+        ``step`` polls deltas), so this is simply the mirror."""
+        return list(rreq.tokens)
 
     def embed(self, prompt: Sequence[int]) -> Dict[str, np.ndarray]:
-        """Non-generative forward on the least-loaded non-draining host —
+        """Non-generative forward on the least-loaded live host —
         embeddings/classification never lease a slot, so placement is pure
         load balancing (no affinity to honour)."""
-        alive = [h for h in range((self.rcfg.n_hosts))
-                 if h not in self._draining]
+        alive = self._alive()
         if not alive:
             raise RuntimeError("every host is draining — no embed capacity")
-        return self.engines[min(alive, key=self._load)].embed(prompt)
+        host = min(alive, key=self._load)
+        out = self._guard(host, self.transports[host].embed, prompt)
+        if out is None:
+            return self.embed(prompt)      # host died mid-call: next host
+        return out
 
     def has_work(self) -> bool:
-        return any(e.has_work() for e in self.engines)
+        # un-finalized placements count as work even when every host is idle:
+        # a free-running worker can finish (and go idle) between fleet steps,
+        # and the completion still has to be harvested by a poll
+        if self._orphans or self._live:
+            return True
+        return any(self._guard(h, self.transports[h].has_work, default=False)
+                   for h in range(self.rcfg.n_hosts) if h not in self._lost)
 
     def run_until_complete(self, max_steps: int = 100_000
                            ) -> List[RouterRequest]:
@@ -381,24 +607,25 @@ class Router:
     def stats(self) -> Dict:
         """Fleet telemetry, three levels down: ``router`` (the placement
         ledger — placed/affinity_hits/spills in the OPQ per-lane shape, plus
-        drain/handoff counts), ``fleet`` (engine counters summed across
-        hosts), and ``per_host`` (each engine's full ``stats()``, its own
-        OPQ affinity/backup counters included)."""
-        per_host = [e.stats() for e in self.engines]
-        fleet_keys = ("submitted", "rejected", "admissions_deferred",
-                      "evicted", "preempted", "completed", "tokens_generated",
-                      "decode_steps", "prefill_batches", "prefill_tokens",
-                      "spec_rounds", "draft_steps", "proposed_tokens",
-                      "accepted_tokens", "sampled_tokens", "stop_hits",
-                      "embed_requests")
-        fleet = {k: sum(h[k] for h in per_host) for k in fleet_keys}
+        drain/handoff/loss counts and per-transport RPC telemetry),
+        ``fleet`` (host counters summed across the fleet), and ``per_host``
+        (each host's full stats, its own per-lane OPQ counters included;
+        zeros for a lost host, which can no longer report)."""
+        per_host = []
+        for host in range(self.rcfg.n_hosts):
+            s = (None if host in self._lost
+                 else self._guard(host, self.transports[host].stats))
+            per_host.append(s if s is not None else dict(
+                {k: 0 for k in _FLEET_KEYS},
+                first_token_s=None, last_token_s=None, lost=True))
+        fleet = {k: sum(h[k] for h in per_host) for k in _FLEET_KEYS}
         # fleet rate over the FLEET's first->last token span — summing
         # per-host rates would overstate it whenever host spans differ
         # (e.g. a host drained early has a short span and a high rate)
-        firsts = [e.metrics.first_token_s for e in self.engines
-                  if e.metrics.first_token_s is not None]
-        lasts = [e.metrics.last_token_s for e in self.engines
-                 if e.metrics.last_token_s is not None]
+        firsts = [h["first_token_s"] for h in per_host
+                  if h.get("first_token_s") is not None]
+        lasts = [h["last_token_s"] for h in per_host
+                 if h.get("last_token_s") is not None]
         span = (max(lasts) - min(firsts)) if firsts else 0.0
         fleet["sustained_tok_s"] = (
             fleet["tokens_generated"] / span if span > 0
@@ -406,11 +633,20 @@ class Router:
         return {
             "router": dict(self.counters, hosts=self.rcfg.n_hosts,
                            draining=sorted(self._draining),
-                           completed=len(self.completed)),
+                           lost=sorted(self._lost),
+                           orphans=len(self._orphans),
+                           completed=len(self.completed),
+                           transport=[dict(t.metrics.summary(), kind=t.kind)
+                                      for t in self.transports]),
             "fleet": fleet,
             "per_host": per_host,
         }
 
     def close(self) -> None:
-        for e in self.engines:
-            e.close()
+        for host, t in enumerate(self.transports):
+            if host in self._lost:
+                continue                   # already closed at loss time
+            try:
+                t.close()
+            except TransportError:
+                pass

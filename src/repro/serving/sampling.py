@@ -31,8 +31,15 @@ import numpy as np
 
 __all__ = [
     "SamplingParams", "GREEDY", "stack_params", "sample_tokens",
-    "choose_tokens", "stop_match",
+    "choose_tokens", "stop_match", "logprob_info", "TOP_LOGPROBS",
+    "sampling_to_wire", "sampling_from_wire",
 ]
+
+# Device-side top-K width for per-token logprob capture. Fixed so the
+# decode/prefill executables stay ONE program regardless of what any
+# request asked for (the serve API trims to the requested top_logprobs
+# host-side; requests asking for more than this are rejected at the door).
+TOP_LOGPROBS = 5
 
 
 def _norm_stop(stop) -> Tuple[Tuple[int, ...], ...]:
@@ -184,6 +191,53 @@ def choose_tokens(row: jnp.ndarray, sampling: Optional[Dict[str, jnp.ndarray]],
     if positions.ndim == 0:
         positions = jnp.broadcast_to(positions, (row.shape[0],))
     return sample_tokens(row, sampling, positions)
+
+
+def logprob_info(row: jnp.ndarray, chosen: jnp.ndarray,
+                 vocab: int) -> Dict[str, jnp.ndarray]:
+    """Per-token logprob capture for the serve API: the log-softmax
+    probability of the CHOSEN token (sampled or greedy) plus the top
+    ``TOP_LOGPROBS`` alternatives, computed on the same logits row the
+    token choice used — no second forward, no second executable.
+
+    row: (..., vocab_padded) logits; chosen: (...,) int token ids.
+    Padded vocab columns are masked to -inf BEFORE the softmax so the
+    distribution is over the real vocabulary (pad logits are unspecified).
+    Returns {"lp": (...,) f32, "top_ids": (..., K) i32, "top_lps":
+    (..., K) f32}.
+    """
+    row = row.astype(jnp.float32)
+    V = row.shape[-1]
+    real = jnp.arange(V) < vocab
+    lp = jax.nn.log_softmax(jnp.where(real, row, -jnp.inf), axis=-1)
+    chosen_lp = jnp.take_along_axis(
+        lp, chosen[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    top_lps, top_ids = jax.lax.top_k(lp, TOP_LOGPROBS)
+    return {"lp": chosen_lp, "top_ids": top_ids.astype(jnp.int32),
+            "top_lps": top_lps}
+
+
+def sampling_to_wire(sp: Optional[SamplingParams]) -> Optional[Dict]:
+    """SamplingParams -> plain JSON/msgpack-able dict (transport frames)."""
+    if sp is None:
+        return None
+    return {
+        "temperature": sp.temperature, "top_k": sp.top_k, "top_p": sp.top_p,
+        "repetition_penalty": sp.repetition_penalty, "seed": sp.seed,
+        "stop": [list(seq) for seq in sp.stop],
+    }
+
+
+def sampling_from_wire(d: Optional[Dict]) -> Optional[SamplingParams]:
+    """Inverse of :func:`sampling_to_wire` (worker side of the transport)."""
+    if d is None:
+        return None
+    return SamplingParams(
+        temperature=float(d.get("temperature", 0.0)),
+        top_k=int(d.get("top_k", 0)), top_p=float(d.get("top_p", 1.0)),
+        repetition_penalty=float(d.get("repetition_penalty", 1.0)),
+        seed=int(d.get("seed", 0)),
+        stop=tuple(tuple(int(t) for t in seq) for seq in d.get("stop", ())))
 
 
 def stop_match(tokens: Sequence[int],

@@ -161,6 +161,47 @@ def test_stop_sequence_over_http(api):
     assert cut["finish_reason"] == "stop"
 
 
+def test_logprobs_over_http(api):
+    """``"logprobs": true`` adds each token's log-probability (and
+    ``"top_logprobs": k`` its k alternatives) from the very logits row the
+    token choice used — no second forward. Strictly opt-in: responses
+    without the flag carry exactly the pre-logprobs fields."""
+    srv, _ = api
+    prompt = _prompt(6)
+    base = {"prompt": prompt, "max_new_tokens": 6}
+    status, plain = _request(srv, "POST", "/v1/completions", base)
+    assert status == 200
+    assert set(plain) == {"tokens", "finish_reason"}   # nothing uninvited
+
+    status, lp = _request(srv, "POST", "/v1/completions",
+                          {**base, "logprobs": True, "top_logprobs": 2})
+    assert status == 200
+    assert lp["tokens"] == plain["tokens"]             # observation-free
+    assert len(lp["logprobs"]) == len(lp["tokens"])
+    assert all(v <= 0.0 for v in lp["logprobs"])
+    assert all(len(row) == 2 for row in lp["top_logprobs"])
+    # greedy decode: the chosen token is the argmax, so it heads every top
+    # row with its own log-probability
+    for tok, l, row in zip(lp["tokens"], lp["logprobs"], lp["top_logprobs"]):
+        assert row[0][0] == tok and abs(row[0][1] - l) < 1e-6
+
+    # "logprobs": true alone -> per-token values only, no top_logprobs key
+    status, only = _request(srv, "POST", "/v1/completions",
+                            {**base, "logprobs": True})
+    assert status == 200 and "top_logprobs" not in only
+    assert only["logprobs"] == lp["logprobs"]
+
+    # streamed events carry the same fields riding each token event...
+    events = _stream(srv, {**base, "logprobs": True, "top_logprobs": 2})
+    *toks_ev, done = events
+    assert [e["token"] for e in toks_ev] == lp["tokens"]
+    assert [e["logprob"] for e in toks_ev] == lp["logprobs"]
+    assert [e["top_logprobs"] for e in toks_ev] == lp["top_logprobs"]
+    # ...and are absent from streams that did not ask
+    events = _stream(srv, base)
+    assert all("logprob" not in e for e in events[:-1])
+
+
 def test_embeddings_match_direct_embed(params, mesh):
     prompt = _prompt(7)
     ref_eng = Engine(CFG, params, EngineConfig(max_slots=2, max_seq_len=32))
