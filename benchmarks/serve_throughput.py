@@ -55,6 +55,18 @@ hard SIGKILL of one worker mid-decode (loss detection, first re-placed
 token, full drain): the regression record for reports/BENCH_transport.json
 and the CI artifact.
 
+``--disagg-report PATH`` runs the prefill/decode disaggregation cell
+instead: a bimodal mix (short interactive prompts decoding while long
+batch prompts keep arriving) served by a two-worker-process fleet without
+roles and again split ``prefill:1,decode:1`` — streams ship their exact
+KV blocks to the decode host once past the handoff threshold — recording
+the interactive streams' p50/p99 inter-token gap in each mode, with
+tokens hard-asserted bit-identical to a single engine in both modes (and
+again in-process for int8-KV, whose dequant scales travel inside the
+shipped payloads) and ZERO prefill instructions dispatched on the decode
+host (OPQ flag audit): the regression record for
+reports/BENCH_disagg.json and the CI artifact.
+
 ``--sampling-report PATH`` runs the sampling-engine cell instead: the same
 request mix served all-greedy and all-sampled (temperature/top-k/top-p,
 per-request seeds) through the ONE shared executable, recording the
@@ -1008,6 +1020,278 @@ def transport_report(cfg, params, *, arch: str, prompt_len: int, gen: int,
     return report
 
 
+def disagg_report(cfg, params, *, arch: str, prompt_len: int, gen: int,
+                  requests: int, out_path: str, smoke: bool = True,
+                  block_size: int = 8) -> dict:
+    """The disaggregation claim, measured: a bimodal mix — short
+    "interactive" prompts decoding while long "batch" prompts keep
+    arriving — served by a two-worker-process fleet twice, without roles
+    (both hosts prefill AND decode, so every batch arrival stalls
+    whichever decode batch shares its host) and with the
+    ``prefill:1,decode:1`` role split (admissions land on the prefill
+    host; once a stream clears the handoff threshold its exact KV blocks
+    ship to the decode host and decode continues there, prefill-free).
+    Records the p50/p99 inter-token gap of the interactive streams in
+    each mode. A shipped stream's single largest gap is the handoff
+    boundary itself (the synchronous export->wire->import leg, plus the
+    decode host's one-time import-scatter compile on the first ship); it
+    is excluded from the gap series and reported separately as
+    ``handoff_stall_ms`` — the steady-state series is what the role
+    split is supposed to smooth, the one-time stall is what it costs.
+    Hard asserts: tokens bit-identical to a single in-process engine in
+    BOTH modes, at least one stream actually shipped, and zero prefill
+    instructions dispatched on the decode host after warmup (OPQ flag
+    audit). The same bit-identity + audit runs again in-process for
+    int8-KV (``quantize="serve"``) over the full mix — serving
+    quantization is batch-invariant (per-row activation calibration,
+    models/layers.pdot), so the staggered disaggregated mix must match
+    the all-at-once single engine exactly. The p99 ordering is recorded,
+    not asserted — CPU wall-clock is too noisy for a hard latency gate."""
+    import time
+
+    from repro.serving.router import parse_disaggregate
+    from repro.serving.transport import SubprocessTransport, build_model_spec
+
+    # interactive prompts stay genuinely short (a chat turn), batch prompts
+    # take the full --prompt-len (a document): the short side bounds the
+    # ship payload (import cost on the decode host), the long side sets the
+    # prefill interference the role split removes
+    short_prompt = max(block_size, min(prompt_len // 4, 32))
+    long_prompt = prompt_len
+    n_inter = max(requests // 2, 2)
+    n_batch = max(requests - n_inter, 2)
+    # the canonical bimodal shape: interactive = short prompt + LONG decode,
+    # batch = long prompt + SHORT decode (summarization-style). The handoff
+    # threshold sits exactly at the batch budget, so interactive streams
+    # (remaining >> threshold) ship to the decode host while batch streams
+    # (remaining <= threshold from their first token) finish where they
+    # prefilled — batch imports never stall the decode host's batch
+    batch_gen = max(2, min(8, gen // 4))
+    threshold = batch_gen
+    # slots >= the interactive set, so a disaggregated decode host can hold
+    # EVERY interactive stream at once — otherwise late ships sit decoding
+    # on the prefill host, stalled by the very burst the split avoids
+    ecfg = EngineConfig(max_slots=max(n_inter, 2),
+                        max_queue=n_inter + n_batch + 2,
+                        max_seq_len=long_prompt + gen,
+                        cache_backend="paged", block_size=block_size,
+                        paged_native=True)
+    roles = parse_disaggregate("prefill:1,decode:1", 2)
+
+    rng = np.random.default_rng(0)
+    mix = ([("interactive",
+             rng.integers(0, cfg.vocab, (short_prompt,), dtype=np.int32),
+             gen) for _ in range(n_inter)]
+           + [("batch",
+               rng.integers(0, cfg.vocab, (long_prompt,), dtype=np.int32),
+               batch_gen) for _ in range(n_batch)])
+
+    def reference(rcfg, rparams):
+        engine = Engine(rcfg, rparams, ecfg)
+        reqs = [engine.submit(p, g, strict=True) for _, p, g in mix]
+        engine.run_until_complete()
+        toks = [list(r.tokens) for r in reqs]
+        engine.close()
+        return toks
+
+    def prefill_issued(flags):
+        return sum(n for f, n in flags.items()
+                   if f.startswith(("prefill", "draft_prefill")))
+
+    def serve_mix(router):
+        """Interactive streams submit up front; once every one of them is
+        established mid-decode (>= 2 tokens harvested — by which point a
+        disaggregated fleet has shipped them to the decode host), the batch
+        prompts trickle in one per fleet step, so the batch prefill burst
+        lands while the interactive streams are decoding. Gaps come from
+        the tokens' ENGINE-SIDE emission timestamps (RouterRequest
+        .token_ts, stamped where the worker appends): a free-running
+        worker's tokens reach the router in bursts, so harvest-time diffs
+        would measure the router's poll cadence, not the decode host's."""
+        inter = [(p, g) for k, p, g in mix if k == "interactive"]
+        batch = [(p, g) for k, p, g in mix if k == "batch"]
+        reqs = []
+        for i, (p, g) in enumerate(inter):
+            reqs.append(router.submit(p, g, session=str(i % 2),
+                                      strict=True))
+        bi = 0
+        deadline = time.monotonic() + 600
+        t0 = time.perf_counter()
+        while router.has_work() or bi < len(batch):
+            if bi < len(batch) and all(len(r.tokens) >= 2
+                                       for r in reqs[:n_inter]):
+                bp, bg = batch[bi]
+                reqs.append(router.submit(bp, bg,
+                                          session=str(bi % 2), strict=True))
+                bi += 1
+            router.step()
+            assert time.monotonic() < deadline, "disagg mix never drained"
+        wall = time.perf_counter() - t0
+        seen = [list(r.token_ts) for r in reqs]
+        shipped = [len(r.hosts) > 1 for r in reqs]
+        return [list(r.tokens) for r in reqs], wall, seen, shipped
+
+    def gap_stats(seen, shipped):
+        """Interactive inter-token gaps, with each SHIPPED stream's single
+        largest gap pulled out as its handoff stall (see docstring)."""
+        gaps, stalls = [], []
+        for ts, sh in zip(seen[:n_inter], shipped[:n_inter]):
+            g = sorted(np.diff(ts))
+            if sh and g:
+                stalls.append(g.pop())
+            gaps.extend(g)
+        return gaps, stalls
+
+    def run_fleet(with_roles):
+        spec = build_model_spec(arch, smoke=smoke, seed=0)
+        fleet = []
+        try:
+            for _ in range(2):
+                fleet.append(SubprocessTransport(spec, ecfg))
+            for t in fleet:
+                # warm with the mix's own shapes so the cells measure
+                # steady-state serving, not XLA — and so the decode host's
+                # prefill-flag BASELINE includes exactly the warmup prefills.
+                # The batch prompts trickle in while interactive streams
+                # decode, so the width-2 fused long-prompt prefill is a
+                # MID-STREAM shape in both modes: warm it too, or its
+                # one-time compile lands as a fake inter-token gap
+                for plens in ((short_prompt,), (short_prompt, short_prompt),
+                              (long_prompt,), (long_prompt, long_prompt)):
+                    eids = [t.submit(rng.integers(0, cfg.vocab, (plen,),
+                                                  dtype=np.int32), 2)
+                            for plen in plens]
+                    warm_deadline = time.monotonic() + 300
+                    for eid in eids:
+                        while not t.poll({eid: 0}).get(eid, {}).get("done"):
+                            assert time.monotonic() < warm_deadline, \
+                                "warmup never finished"
+                            time.sleep(0.005)
+                    t.poll({}, drop=eids)
+            # warm the ship path too: the export gather and import scatter
+            # compile once per pool geometry — keep that off the clock
+            wp = rng.integers(0, cfg.vocab, (short_prompt,), dtype=np.int32)
+            eid = fleet[0].submit(wp, gen)
+            warm_deadline = time.monotonic() + 300
+            while not (fleet[0].poll({eid: 0}).get(eid) or {}).get("t"):
+                assert time.monotonic() < warm_deadline, "warm ship stalled"
+                time.sleep(0.002)
+            entry = fleet[0].ship_blocks(eid)
+            if entry is not None:           # a too-fast worker already retired
+                nid = fleet[1].recv_blocks(entry)
+                fleet[0].ack_ship(entry["payload_id"])
+                while not fleet[1].poll({nid: 0}).get(nid, {}).get("done"):
+                    assert time.monotonic() < warm_deadline, \
+                        "warm ship stalled"
+                    time.sleep(0.005)
+                fleet[1].poll({}, drop=[nid])
+            else:
+                fleet[0].poll({}, drop=[eid])
+            base = [prefill_issued(t.stats()["opq"]["flags"]) for t in fleet]
+        except Exception:
+            for t in fleet:
+                t.close()
+            raise
+        router = Router(transports=fleet,
+                        router_cfg=RouterConfig(
+                            n_hosts=2, handoff_threshold=threshold,
+                            roles=roles if with_roles else None))
+        toks, wall, seen, shipped = serve_mix(router)
+        s = router.stats()
+        after = [prefill_issued(h["opq"]["flags"]) for h in s["per_host"]]
+        router.close()                      # closes the worker transports
+        gaps, stalls = gap_stats(seen, shipped)
+        return toks, wall, gaps, stalls, s, base, after
+
+    ref_dense = reference(cfg, params)
+
+    def cell(wall, gaps, stalls, s):
+        g = 1e3 * np.asarray(gaps)
+        return {
+            "wall_s": wall,
+            "interactive_streams": n_inter,
+            "itl_p50_ms": float(np.percentile(g, 50)),
+            "itl_p99_ms": float(np.percentile(g, 99)),
+            "itl_max_ms": float(g.max()),
+            "handoff_stall_ms": (1e3 * float(max(stalls))
+                                 if stalls else None),
+            "ships": s["router"]["ships"],
+            "shipped_blocks": s["router"]["shipped_blocks"],
+            "ship_fallbacks": s["router"]["ship_fallbacks"],
+        }
+
+    toks_off, wall_off, gaps_off, stalls_off, s_off, _, _ = run_fleet(False)
+    assert toks_off == ref_dense, (
+        "role-less fleet diverged from the single engine")
+    (toks_on, wall_on, gaps_on, stalls_on, s_on,
+     base_on, after_on) = run_fleet(True)
+    assert toks_on == ref_dense, (
+        "disaggregated fleet diverged from the single engine")
+    assert s_on["router"]["ships"] >= 1, "no stream ever shipped"
+    decode_host = roles.index("decode")
+    assert after_on[decode_host] == base_on[decode_host], (
+        f"decode host dispatched "
+        f"{after_on[decode_host] - base_on[decode_host]} prefill "
+        "instructions during disaggregated serving")
+
+    off_cell = cell(wall_off, gaps_off, stalls_off, s_off)
+    on_cell = cell(wall_on, gaps_on, stalls_on, s_on)
+
+    # --- int8: same split, full mix, in-process. Serving quantization is
+    # batch-invariant (per-row activation calibration in models/layers.pdot:
+    # a row's scale depends only on that row), so the whole staggered mix
+    # must match the all-at-once single engine bit-for-bit — any divergence
+    # here is the ship itself: the quantized weights' int8 path decoding
+    # over shipped blocks that did not land bit-exact.
+    cfg_q = cfg.replace(quantize="serve")
+    params_q = tz.quantize_params(params, predicate=_quant_predicate)
+    ref_q = reference(cfg_q, params_q)
+    router = Router(cfg_q, params_q, ecfg,
+                    RouterConfig(n_hosts=2, handoff_threshold=threshold,
+                                 roles=roles))
+    toks_q, _, _, _ = serve_mix(router)
+    s_q = router.stats()
+    q_flags = dict(s_q["per_host"][decode_host]["opq"]["flags"])
+    router.close()
+    assert toks_q == ref_q, (
+        "int8-KV disagg diverged from the single engine")
+    q_ships = s_q["router"]["ships"]
+    assert q_ships >= 1, "int8-KV cell never shipped"
+    assert prefill_issued(q_flags) == 0, q_flags
+
+    report = {
+        "benchmark": "disagg",
+        "arch": cfg.name,
+        "block_size": block_size,
+        "gen": gen,
+        "handoff_threshold": threshold,
+        "mix": {"interactive": n_inter, "interactive_prompt": short_prompt,
+                "interactive_gen": gen, "batch": n_batch,
+                "batch_prompt": long_prompt, "batch_gen": batch_gen},
+        "modes": {"off": off_cell, "on": on_cell},
+        "itl_p99_improvement_ms": off_cell["itl_p99_ms"] - on_cell["itl_p99_ms"],
+        "bit_identical": {"dense": True, "int8_kv": True},
+        "decode_host_prefill_instructions": 0,
+        "int8_kv": {"streams": n_inter + n_batch, "ships": q_ships,
+                    "decode_host_flags": q_flags},
+    }
+    emit("disagg_itl_p99_off", 1e3 * off_cell["itl_p99_ms"],
+         f"p50={off_cell['itl_p50_ms']:.2f}ms "
+         f"max={off_cell['itl_max_ms']:.2f}ms ships=0")
+    emit("disagg_itl_p99_on", 1e3 * on_cell["itl_p99_ms"],
+         f"p50={on_cell['itl_p50_ms']:.2f}ms "
+         f"max={on_cell['itl_max_ms']:.2f}ms ships={on_cell['ships']} "
+         f"blocks={on_cell['shipped_blocks']}")
+    Path(out_path).parent.mkdir(parents=True, exist_ok=True)
+    Path(out_path).write_text(json.dumps(report, indent=2) + "\n")
+    print(f"# disagg: interactive p99 gap {off_cell['itl_p99_ms']:.2f}ms "
+          f"role-less vs {on_cell['itl_p99_ms']:.2f}ms disaggregated "
+          f"({on_cell['ships']} ships, {on_cell['shipped_blocks']} blocks); "
+          "tokens bit-identical (dense + int8-KV), decode host prefill-free")
+    print(f"# wrote {out_path}")
+    return report
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tinyllama-1.1b")
@@ -1059,6 +1343,16 @@ def main(argv=None) -> int:
                          "throughput at 1/2/4 worker processes, recovery "
                          "time after SIGKILL of one worker mid-decode) here "
                          "and skip the throughput sweep")
+    ap.add_argument("--disagg-report", default="",
+                    help="write the prefill/decode disaggregation JSON "
+                         "(interactive-stream p99 inter-token gap for a "
+                         "bimodal mix with and without the prefill:1,"
+                         "decode:1 role split over two worker processes, "
+                         "tokens hard-asserted bit-identical to a single "
+                         "engine for dense AND int8-KV, zero prefill "
+                         "instructions on the decode host) here and skip "
+                         "the throughput sweep; requires --quantize off "
+                         "(the cell quantizes its own int8 copy)")
     ap.add_argument("--sampling-report", default="",
                     help="write the sampling-engine JSON (per-decode-step "
                          "sampler overhead vs greedy, seeded streams "
@@ -1088,6 +1382,16 @@ def main(argv=None) -> int:
                 cfg, params, prompt_len=args.prefix_prompt_len, gen=8,
                 block_size=args.block_size, requests=max(args.requests, 4),
                 out_path=args.prefix_report)
+            return 0
+
+        if args.disagg_report:
+            if args.quantize != "off":
+                ap.error("--disagg-report runs the dense AND int8-KV cells "
+                         "itself; leave --quantize off")
+            disagg_report(
+                cfg, params, arch=args.arch, prompt_len=args.prompt_len,
+                gen=args.gen, requests=args.requests,
+                block_size=args.block_size, out_path=args.disagg_report)
             return 0
 
         if args.transport_report:

@@ -15,8 +15,15 @@ SIGKILL one worker mid-run, and assert the fleet recovers:
 The full fleet stats tree is dumped as a JSON artifact (``--out``) for CI
 upload. Exits non-zero on any failed assertion.
 
+With ``--disaggregate 1:1`` the fleet runs role-split (prefill host
+admits, decode host continues shipped streams) and the SIGKILL victim is
+the DECODE host once at least one stream has shipped to it: the router
+must recover every shipped stream by re-prefill continuation on the
+surviving prefill host — same full token counts, same replayed stream —
+proving the fallback path end to end under a real process death.
+
 Usage: ``PYTHONPATH=src python scripts/fleet_smoke.py
-[--out reports/fleet_smoke_stats.json]``.
+[--disaggregate 1:1] [--out reports/fleet_smoke_stats.json]``.
 """
 
 import argparse
@@ -35,6 +42,7 @@ from repro.configs import get_config
 from repro.launch.mesh import make_smoke_mesh
 from repro.serving import Router, RouterConfig, serve_api
 from repro.serving.engine import EngineConfig
+from repro.serving.router import parse_disaggregate
 from repro.serving.transport import SubprocessTransport, build_model_spec
 
 REQUESTS = 8
@@ -71,24 +79,38 @@ def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--out", default="reports/fleet_smoke_stats.json",
                     help="where to dump the fleet stats JSON artifact")
+    ap.add_argument("--disaggregate", default="",
+                    help="role split spec (e.g. '1:1'): run prefill/decode "
+                         "disaggregated and SIGKILL the DECODE host after "
+                         "streams have shipped to it")
     args = ap.parse_args()
+    roles = (parse_disaggregate(args.disaggregate, 2)
+             if args.disaggregate else None)
 
     cfg = get_config("tinyllama-1.1b").smoke()
     spec = build_model_spec("tinyllama-1.1b", smoke=True, seed=0)
+    # block shipping exports pool blocks, so disaggregation needs the
+    # paged-native backend (same constraint serve.py enforces for
+    # --disaggregate)
+    paged = (dict(cache_backend="paged", paged_native=True, block_size=8)
+             if roles else {})
     ecfg = EngineConfig(max_slots=2, max_queue=2 * REQUESTS,
-                        max_seq_len=PROMPT_LEN + GEN)
+                        max_seq_len=PROMPT_LEN + GEN, **paged)
     rng = np.random.default_rng(17)
     prompts = [[int(t) for t in rng.integers(0, cfg.vocab, (PROMPT_LEN,))]
                for _ in range(REQUESTS)]
 
     fleet = [SubprocessTransport(spec, ecfg) for _ in range(2)]
-    victim_pid = fleet[0].pid
-    print(f"# fleet up: worker pids {[t.pid for t in fleet]}")
+    victim = roles.index("decode") if roles else 0
+    victim_pid = fleet[victim].pid
+    print(f"# fleet up: worker pids {[t.pid for t in fleet]}"
+          + (f", roles {roles}" if roles else ""))
     _warm(fleet)
     print("# workers warm (prefill/decode compiled)")
 
     router = Router(transports=fleet,
-                    router_cfg=RouterConfig(handoff_threshold=0))
+                    router_cfg=RouterConfig(
+                        handoff_threshold=2 if roles else 0, roles=roles))
     srv = serve_api(router, port=0, mesh=make_smoke_mesh(1))
     results = [None] * REQUESTS
 
@@ -102,21 +124,25 @@ def main() -> int:
         for th in threads:
             th.start()
 
-        # kill worker 0 once the fleet is verifiably mid-run: some tokens
-        # out, nowhere near done
+        # kill the victim once the fleet is verifiably mid-run: some
+        # tokens out, nowhere near done — and, disaggregated, only after
+        # at least one stream has SHIPPED to the decode host, so the kill
+        # provably lands on adopted streams
         total = REQUESTS * GEN
         deadline = time.monotonic() + 120
         while True:
             _, stats = _request(srv.port, "GET", "/v1/stats")
             done = stats["fleet"]["tokens_generated"]
-            if 0 < done < total // 2:
+            shipped = stats["router"].get("ships", 0)
+            if 0 < done < total // 2 and (not roles or shipped >= 1):
                 break
             assert done < total, "fleet finished before the kill landed"
             assert time.monotonic() < deadline, "fleet never got mid-run"
             time.sleep(0.005)
         os.kill(victim_pid, signal.SIGKILL)
         print(f"# SIGKILLed worker {victim_pid} at "
-              f"{done}/{total} tokens generated")
+              f"{done}/{total} tokens generated"
+              + (f", {shipped} streams shipped" if roles else ""))
 
         for th in threads:
             th.join(timeout=300)
@@ -136,10 +162,18 @@ def main() -> int:
         assert status == 200, stats
         r = stats["router"]
         assert r["hosts_lost"] == 1, f"hosts_lost={r['hosts_lost']}"
-        assert r["lost"] == [0], f"lost={r['lost']}"
+        assert r["lost"] == [victim], f"lost={r['lost']}"
         assert r["recovered"] >= 1, f"recovered={r['recovered']}"
-        print(f"# PASS recovery: host 0 LOST, {r['recovered']} streams "
-              f"re-admitted as continuations")
+        if roles:
+            # the decode host died holding shipped streams: they came back
+            # by RE-PREFILL continuation on the surviving prefill host
+            assert r["ships"] >= 1, f"ships={r['ships']}"
+            print(f"# PASS disagg recovery: decode host {victim} LOST with "
+                  f"{r['ships']} shipped streams, {r['recovered']} "
+                  f"re-admitted by re-prefill on the prefill host")
+        else:
+            print(f"# PASS recovery: host {victim} LOST, {r['recovered']} "
+                  f"streams re-admitted as continuations")
 
         # determinism survives the crash: a replay on the surviving fleet
         # returns the identical stream
@@ -154,6 +188,8 @@ def main() -> int:
         _, stats = _request(srv.port, "GET", "/v1/stats")   # final ledger
         stats["smoke"] = {
             "requests": REQUESTS, "gen": GEN,
+            "disaggregate": args.disaggregate or None,
+            "killed_host": victim,
             "killed_pid": victim_pid,
             "killed_at_tokens": done,
             "completions_ok": REQUESTS,

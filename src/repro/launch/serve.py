@@ -71,7 +71,7 @@ from repro.serving.engine import Engine, EngineConfig
 from repro.serving.metrics import (format_memory_stats, format_router_stats,
                                    format_sampling_stats, format_spec_stats,
                                    format_transport_stats)
-from repro.serving.router import Router, RouterConfig
+from repro.serving.router import Router, RouterConfig, parse_disaggregate
 from repro.serving.sampling import SamplingParams
 from repro.serving.transport import SubprocessTransport, build_model_spec
 
@@ -167,6 +167,25 @@ def build_parser() -> argparse.ArgumentParser:
                          "fleet steps — queued requests re-place, long "
                          "in-flight generations hand off to other hosts "
                          "(0 = never drain)")
+    ap.add_argument("--disaggregate", default="",
+                    help="with --hosts > 1: split the fleet into prefill and "
+                         "decode roles (\"prefill:N,decode:M\", or the \"N:M\" "
+                         "shorthand; N+M must equal --hosts). Admissions go "
+                         "to prefill hosts only; once a stream's remaining "
+                         "budget clears the handoff threshold its KV blocks "
+                         "ship to the least-loaded decode host and decode "
+                         "continues there — tokens bit-identical, decode "
+                         "hosts dispatch zero prefill instructions. Requires "
+                         "--cache-backend paged --paged-native (block "
+                         "shipping exports pool blocks)")
+    ap.add_argument("--disagg-report", default="",
+                    help="write the prefill/decode disaggregation JSON here "
+                         "and exit (runs benchmarks/serve_throughput.py's "
+                         "disagg cell): decode p99 inter-token gap for a "
+                         "bimodal interactive+batch mix with and without the "
+                         "role split, tokens hard-asserted bit-identical to "
+                         "a single engine for dense AND int8-KV, zero "
+                         "prefill instructions on decode hosts")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="sampling temperature for the sampled half of the "
                          "synthetic traffic mix (0 = all-greedy). Even-"
@@ -195,6 +214,15 @@ def build_parser() -> argparse.ArgumentParser:
                          "the single engine, or the Router with --hosts > 1")
     ap.add_argument("--model-parallel", type=int, default=1)
     return ap
+
+
+def _roles_for(args):
+    """--disaggregate spec -> per-host role tuple (None when off). Validated
+    once in main() via ap.error; recomputed here so both Router construction
+    sites (synthetic fleet loop, --api-port server) share one source."""
+    if not args.disaggregate:
+        return None
+    return parse_disaggregate(args.disaggregate, args.hosts)
 
 
 def _sampling_for(args, i: int):
@@ -244,7 +272,8 @@ def _serve_fleet(cfg, params, ecfg, prompts, args, *, draft_params=None,
     queued-requeue + in-flight handoff mid-run. ``transports`` (the
     --host-procs fleet) swaps the in-process engines for worker
     processes."""
-    router = Router(cfg, params, ecfg, RouterConfig(n_hosts=args.hosts),
+    router = Router(cfg, params, ecfg,
+                    RouterConfig(n_hosts=args.hosts, roles=_roles_for(args)),
                     draft_params=draft_params, transports=transports)
     requests = []
     fleet_steps = 0
@@ -319,6 +348,25 @@ def main(argv=None) -> int:
     if args.drain_at and args.hosts < 2:
         ap.error("--drain-at needs --hosts >= 2 (handoff requires another "
                  "host to admit the drained work)")
+    if args.disaggregate:
+        if args.hosts < 2:
+            ap.error("--disaggregate needs --hosts >= 2 (at least one "
+                     "prefill host and one decode host)")
+        if args.cache_backend != "paged" or not args.paged_native:
+            ap.error("--disaggregate requires --cache-backend paged "
+                     "--paged-native (KV block shipping exports and imports "
+                     "pool blocks)")
+        if args.speculative:
+            ap.error("--disaggregate does not support --speculative (the "
+                     "draft model's KV does not ship; drop one)")
+        try:
+            parse_disaggregate(args.disaggregate, args.hosts)
+        except ValueError as e:
+            ap.error(str(e))
+    if args.disagg_report and args.quantize == "serve":
+        ap.error("--disagg-report runs the dense AND int8-KV cells itself "
+                 "(it quantizes a copy of the params for the second cell); "
+                 "leave --quantize off")
     if args.spec_k < 1:
         ap.error("--spec-k must be >= 1")
     if args.speculative and args.paged_kernel:
@@ -363,6 +411,24 @@ def main(argv=None) -> int:
                       for l in jax.tree.leaves(params, is_leaf=lambda x: isinstance(x, tz.QTensor)))
             print(f"[serve] Tensorizer W8A8: {n_q} weight tensors quantized", flush=True)
 
+        if args.disagg_report:
+            # the bench module owns the disagg measurement cell; load it by
+            # path (benchmarks/ is not a package) and hand over the already-
+            # built params so its reference engine matches the worker spec
+            import importlib.util
+            from pathlib import Path
+            bench_py = (Path(__file__).resolve().parents[3] / "benchmarks"
+                        / "serve_throughput.py")
+            bspec = importlib.util.spec_from_file_location(
+                "serve_throughput_bench", bench_py)
+            bench = importlib.util.module_from_spec(bspec)
+            bspec.loader.exec_module(bench)
+            bench.disagg_report(
+                cfg, params, arch=args.arch, smoke=args.smoke,
+                prompt_len=args.prompt_len, gen=args.gen,
+                requests=args.requests, out_path=args.disagg_report)
+            return 0
+
         rng = np.random.default_rng(0)
         prompts = rng.integers(0, cfg.vocab, (args.requests, args.prompt_len),
                                dtype=np.int32)
@@ -406,7 +472,8 @@ def main(argv=None) -> int:
             # fleet) over HTTP and block until interrupted
             if args.hosts > 1 or transports is not None:
                 target = Router(cfg, params, ecfg,
-                                RouterConfig(n_hosts=args.hosts),
+                                RouterConfig(n_hosts=args.hosts,
+                                             roles=_roles_for(args)),
                                 draft_params=draft_params,
                                 transports=transports)
                 front = (f"router, {args.hosts} host "

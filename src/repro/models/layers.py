@@ -39,9 +39,19 @@ def pdot(x: jax.Array, w, cfg: ArchConfig) -> jax.Array:
     by ``tensorizer.quantize_params`` (serving, quantize="serve") — in which
     case the contraction runs int8 x int8 with wide accumulation and fused
     dequant (the paper's technique as the serving fast path).
+
+    Activations are calibrated per-ROW (amax over the contraction dim only),
+    not per-tensor: a row's quantization scale must depend only on that row,
+    or one slot's numerics shift with whatever else shares the decode batch —
+    an idle slot's stale cache row changing another stream's sampled token.
+    Per-row scales make serving batch-invariant (same stream, same tokens,
+    regardless of co-residents or admission order), which is what lets a
+    disaggregated continuation on another host stay bit-identical. The
+    paper-faithful per-tensor calibration lives in ``tensorizer.qdot`` /
+    ``qdot_paper`` for the accuracy benchmarks.
     """
     if isinstance(w, tz.QTensor):
-        qx = tz.quantize(x.astype(jnp.float32))
+        qx = tz.quantize(x.astype(jnp.float32), axis=(x.ndim - 1,))
         acc = jax.lax.dot_general(
             qx.q, w.q,
             dimension_numbers=(((x.ndim - 1,), (0,)), ((), ())),

@@ -93,6 +93,10 @@ class Request:
     max_new_tokens: int
     state: RequestState = RequestState.QUEUED
     tokens: List[int] = dataclasses.field(default_factory=list)
+    # emission time (metrics.now epoch) of each entry in ``tokens``, stamped
+    # where the engine appends — the only honest inter-token-latency source
+    # for a free-running worker, whose poll deltas arrive in bursts
+    token_ts: List[float] = dataclasses.field(default_factory=list)
     metrics: RequestMetrics = None         # set at submit
     sampling: Optional[SamplingParams] = None   # None == greedy
     # tokens generated in earlier segments of this logical stream (router
@@ -528,6 +532,13 @@ class Engine:
         self._presence = np.zeros((self.ecfg.max_slots, cfg.vocab_padded),
                                   bool)
         self.metrics = EngineMetrics()
+        # fleet counter reconciliation: which queued request ids this engine
+        # has already counted as deferred, and each slot's prefix-cache hit
+        # contribution — evict_queued/preempt unwind exactly what admission
+        # counted, so a request drained and re-admitted on another host shows
+        # up once (not once per host) in fleet-summed stats()
+        self._deferred_ids: set = set()
+        self._prefix_contrib: Dict[int, Tuple[int, int, int]] = {}
         self.completed: List[Request] = []
 
     @property
@@ -648,13 +659,24 @@ class Engine:
             slot, len(req.prompt), req.max_new_tokens,
             tokens=req.prompt if self.ecfg.prefix_cache else None)
         if not ok:
-            self.metrics.admissions_deferred += 1
-        elif self.ecfg.prefix_cache:
+            # counted once per request, not per attempt: the deferred queue
+            # head is re-tried every step, and a fleet drain + re-admission
+            # elsewhere reconciles this host's count back out (evict_queued)
+            # — so admissions_deferred means "requests that experienced
+            # deferral", summable across hosts without double-counting
+            if req.id not in self._deferred_ids:
+                self._deferred_ids.add(req.id)
+                self.metrics.admissions_deferred += 1
+            return ok
+        self._deferred_ids.discard(req.id)
+        if self.ecfg.prefix_cache:
             info = self.store.prefix_lease_info(slot)
             if info["hit"]:
                 self.metrics.prefix_hits += 1
                 self.metrics.prefix_blocks_reused += info["shared_blocks"]
                 self.metrics.prefix_tokens_reused += info["prefill_start"]
+                self._prefix_contrib[slot] = (
+                    1, info["shared_blocks"], info["prefill_start"])
         return ok
 
     def _prefix_group_key(self, slot: int, req: Request) -> int:
@@ -762,6 +784,7 @@ class Engine:
                 req.state = RequestState.RUNNING
                 tok = int(first[i])
                 req.tokens.append(tok)
+                req.token_ts.append(now())
                 self._record_logprob(req, lp, i)
                 self._presence[slot, tok] = True
                 if req.sampling is not None and not req.sampling.greedy:
@@ -818,9 +841,11 @@ class Engine:
         self.metrics.decode_steps += 1
         next_np = np.asarray(next_tok)
         produced = 0
+        t_emit = now()
         for slot, req in list(self.scheduler.active.items()):
             tok = int(next_np[slot])
             req.tokens.append(tok)
+            req.token_ts.append(t_emit)
             self._record_logprob(req, lp, slot)
             self._presence[slot, tok] = True
             if req.sampling is not None and not req.sampling.greedy:
@@ -914,6 +939,7 @@ class Engine:
                         emit = j + 1
                         break
             req.tokens.extend(int(t) for t in g[:emit])
+            req.token_ts.extend([now()] * emit)
             for j in range(emit):
                 self._record_logprob(req, lp, (slot, j))
             self._presence[slot, [int(t) for t in g[:emit]]] = True
@@ -964,8 +990,24 @@ class Engine:
             return True
         return False
 
+    def _unwind_prefix(self, slot: int) -> None:
+        """Take back a departing slot's prefix-cache hit counters: a
+        preempted/exported request is re-admitted elsewhere, where its prefix
+        walk is counted afresh — keeping this host's contribution would make
+        the fleet-summed hit/reuse totals count one logical admission twice
+        (the ISSUE-10 counter-reconciliation fix; regression in
+        tests/test_disagg.py). Requests that COMPLETE here keep their counts
+        (_retire drops the record without decrementing)."""
+        contrib = self._prefix_contrib.pop(slot, None)
+        if contrib is not None:
+            hits, blocks, toks = contrib
+            self.metrics.prefix_hits -= hits
+            self.metrics.prefix_blocks_reused -= blocks
+            self.metrics.prefix_tokens_reused -= toks
+
     def _retire(self, slot: int) -> None:
         req = self.scheduler.retire(slot)
+        self._prefix_contrib.pop(slot, None)
         self.store.reset(slot)
         self._presence[slot, :] = False
         if self.draft_store is not None:
@@ -991,6 +1033,13 @@ class Engine:
         self.scheduler.waiting.clear()
         for req in out:
             req.state = RequestState.PREEMPTED
+            if req.id in self._deferred_ids:
+                # the deferral leaves with the request: whichever host
+                # re-admits it counts (or not) on its own, so the fleet sum
+                # sees one deferral per logical request, not one per host it
+                # ever waited on
+                self._deferred_ids.discard(req.id)
+                self.metrics.admissions_deferred -= 1
         self.metrics.evicted += len(out)
         return out
 
@@ -1010,10 +1059,141 @@ class Engine:
                 self._presence[slot, :] = False
                 if self.draft_store is not None:
                     self.draft_store.reset(slot)
+                self._unwind_prefix(slot)
                 req.state = RequestState.PREEMPTED
                 self.metrics.preempted += 1
                 return req
         raise KeyError(f"request {req_id} is not in flight on this engine")
+
+    # -------------------------------------------------- disaggregated handoff
+    # Prefill/decode disaggregation (serving/router.py --disaggregate): a
+    # prefill host admits and prefills a request, then its finished cache
+    # blocks are SHIPPED to a decode host instead of recomputed there.
+    # extract_seeded is the export side (a preempt whose KV leaves as a wire
+    # payload); submit_seeded the import side (admission from a payload —
+    # zero prefill dispatches, which is what keeps decode hosts' OPQ flag
+    # audit free of prefill instructions). Shipped blocks carry exact cache
+    # bits, so the continued stream is bit-identical to never having moved —
+    # unlike re-prefill continuation, which remains the fallback oracle.
+
+    def extract_seeded(self, req_id: int) -> Tuple[Request, Dict]:
+        """Preempt an in-flight request AND export its slot's cache blocks
+        as a serialized payload (store.export_blocks): the request's wire
+        state plus exactly the bits a decode host needs to continue it
+        without re-prefill. The payload id is cursor-named
+        (``r<id>c<n_tokens>``) so a retried ship of the same cut is
+        recognisable and never double-imports. The exported blocks stay on
+        this host's export ledger — still counted as referenced — until
+        ``release_exported`` acks the ship, so a failed ship falls back to
+        re-prefill without having freed blocks a retry might still frame."""
+        if self.ecfg.speculative:
+            raise ValueError(
+                "extract_seeded does not support speculative engines (the "
+                "draft store's state cannot ship with the target's blocks)")
+        if not hasattr(self.store, "export_blocks"):
+            raise ValueError(
+                f"extract_seeded requires the paged cache backend "
+                f"(cross-host block shipping), got {self.store.kind!r} — "
+                f"use preempt + re-prefill continuation instead")
+        for slot, req in self.scheduler.active.items():
+            if req.id == req_id:
+                payload = self.store.export_blocks(
+                    slot, payload_id=f"r{req.id}c{len(req.tokens)}")
+                self.scheduler.retire(slot)
+                self._presence[slot, :] = False
+                self._unwind_prefix(slot)
+                req.state = RequestState.PREEMPTED
+                self.metrics.exported_slots += 1
+                self.metrics.exported_blocks += payload["n_blocks"]
+                return req, payload
+        raise KeyError(f"request {req_id} is not in flight on this engine")
+
+    def release_exported(self, payload_id: str) -> bool:
+        """Ack a shipped payload: release the export ledger's hold on its
+        blocks (refcount-correct — trie-cached blocks stay cached, private
+        ones scrub free). Idempotent; False when the id is unknown or
+        already acked."""
+        return self.store.release_exported(payload_id)
+
+    def submit_seeded(self, prompt: Sequence[int], max_new_tokens: int,
+                      tokens: Sequence[int], payload: Dict,
+                      *, sampling: Optional[SamplingParams] = None,
+                      stop_history: Sequence[int] = (),
+                      want_logprobs: Optional[int] = None,
+                      logprobs: Sequence[float] = (),
+                      top_logprobs: Sequence = ()) -> Optional[Request]:
+        """Admit a mid-flight stream straight into the in-flight batch from
+        a shipped block payload: lease a slot, import the payload's cache
+        bits into it (validated in full BEFORE any device write — a corrupt
+        payload raises ValueError with the slot left clean), and join the
+        next decode step. No prefill is dispatched at all.
+
+        ``tokens`` is the stream's generated-so-far suffix (>= 1 — the last
+        token is what the next decode step feeds); ``max_new_tokens`` the
+        ORIGINAL budget, which ``len(tokens)`` already counts against.
+        Returns None when no slot is free or the lease is refused — the
+        router's cue to fall back to re-prefill continuation."""
+        if self.ecfg.speculative:
+            raise ValueError(
+                "submit_seeded does not support speculative engines (no "
+                "draft-store payload ships with the target's blocks)")
+        if not hasattr(self.store, "import_blocks"):
+            raise ValueError(
+                f"submit_seeded requires the paged cache backend "
+                f"(cross-host block shipping), got {self.store.kind!r}")
+        prompt = np.asarray(prompt, dtype=np.int32).reshape(-1)
+        tokens = [int(t) for t in tokens]
+        if not tokens:
+            raise ValueError(
+                "submit_seeded needs >= 1 generated token (the decode step "
+                "feeds the stream's last emitted token)")
+        if len(tokens) >= max_new_tokens:
+            raise ValueError(
+                f"stream already finished: {len(tokens)} generated tokens "
+                f">= max_new_tokens {max_new_tokens} — nothing to decode")
+        if len(prompt) + max_new_tokens > self.ecfg.max_seq_len:
+            raise ValueError(
+                f"prompt={len(prompt)} + gen={max_new_tokens} exceeds "
+                f"max_seq_len {self.ecfg.max_seq_len}")
+        if not self.scheduler.free:
+            return None
+        slot = self.scheduler.free[-1]
+        # a plain lease (no prompt-token trie walk): imported blocks stay
+        # PRIVATE to this slot — they never register in the radix trie,
+        # because their content hash belongs to the shipping host's cache
+        if not self.store.lease(slot, len(prompt), max_new_tokens):
+            return None
+        try:
+            self.store.import_blocks(slot, payload)
+        except Exception:
+            self.store.reset(slot)
+            raise
+        req = Request(id=next(self._req_ids), prompt=prompt,
+                      max_new_tokens=max_new_tokens,
+                      state=RequestState.RUNNING, tokens=tokens,
+                      sampling=sampling, stop_history=tuple(stop_history),
+                      want_logprobs=want_logprobs,
+                      metrics=RequestMetrics(arrival_s=now(),
+                                             prompt_len=len(prompt)))
+        req.logprobs = [float(v) for v in logprobs]
+        req.top_logprobs = [[(int(t), float(v)) for t, v in row]
+                            for row in top_logprobs]
+        # keep token_ts index-aligned with tokens: the seeded prefix was
+        # emitted (and harvested) on the shipping host, so its entries are
+        # placeholders behind every caller's cursor
+        req.token_ts = [now()] * len(tokens)
+        self.scheduler.admit_seeded(req)
+        t = now()
+        req.metrics.admitted_s = t
+        req.metrics.first_token_s = t
+        req.metrics.n_generated = len(tokens)
+        self._presence[slot, :] = False
+        self._presence[slot, prompt] = True
+        self._presence[slot, tokens] = True
+        self.metrics.submitted += 1
+        self.metrics.imported_slots += 1
+        self.metrics.imported_blocks += payload["n_blocks"]
+        return req
 
     def step(self) -> None:
         """One engine iteration: join waiting requests into free slots, then

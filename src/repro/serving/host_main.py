@@ -130,6 +130,12 @@ def _dispatch(host, op: str, args: dict):
         return host.inflight()
     if op == "preempt":
         return host.preempt(int(args["id"]))
+    if op == "ship_blocks":
+        return host.ship_blocks(int(args["id"]))
+    if op == "recv_blocks":
+        return host.recv_blocks(args["entry"])
+    if op == "ack_ship":
+        return host.ack_ship(args["payload_id"])
     if op == "embed":
         return host.embed(args["prompt"])
     if op == "stats":

@@ -124,6 +124,14 @@ class EngineMetrics:
                                                # refcount instead of prefilled
     prefix_tokens_reused: int = 0              # prompt positions whose prefill
                                                # was skipped outright
+    exported_slots: int = 0                    # in-flight requests extracted
+                                               # WITH their cache blocks for
+                                               # cross-host shipping (disagg)
+    exported_blocks: int = 0                   # pool blocks serialized out
+    imported_slots: int = 0                    # requests admitted from a
+                                               # shipped block payload — zero
+                                               # prefill dispatches each
+    imported_blocks: int = 0                   # pool blocks adopted verbatim
     prefill_wait_s: float = 0.0                # wall time blocked on prefill forwards
     seed_write_s: float = 0.0                  # wall time in batched slot writes
     steps: int = 0                             # engine iterations observed
@@ -179,6 +187,10 @@ class EngineMetrics:
             "prefix_hits": self.prefix_hits,
             "prefix_blocks_reused": self.prefix_blocks_reused,
             "prefix_tokens_reused": self.prefix_tokens_reused,
+            "exported_slots": self.exported_slots,
+            "exported_blocks": self.exported_blocks,
+            "imported_slots": self.imported_slots,
+            "imported_blocks": self.imported_blocks,
             "prefill_wait_s": self.prefill_wait_s,
             "seed_write_s": self.seed_write_s,
             "sustained_tok_s": self.sustained_tok_s(),
@@ -245,10 +257,15 @@ def format_router_stats(stats: Dict) -> str:
     r = stats["router"]
     f = stats["fleet"]
     drained = f" | draining={r['draining']}" if r.get("draining") else ""
+    ships = ""
+    if r.get("roles"):
+        ships = (f" | disagg: {r.get('ships', 0)} ships "
+                 f"({r.get('shipped_blocks', 0)} blocks, "
+                 f"{r.get('ship_fallbacks', 0)} fallbacks)")
     return (f"{r['hosts']} hosts | {r['placed']} placed "
             f"({r['affinity_hits']} affinity hits, {r['spills']} spills) | "
             f"{r['drains']} drains -> {r['handoffs']} handoffs + "
-            f"{r['requeued']} requeued | fleet: {f['completed']} done, "
+            f"{r['requeued']} requeued{ships} | fleet: {f['completed']} done, "
             f"{f['tokens_generated']} tok, {f['sustained_tok_s']:.1f} tok/s"
             f"{drained}")
 

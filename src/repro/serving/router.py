@@ -50,6 +50,18 @@ instructions:
     double-emits (tests/test_transport.py kills a worker with SIGKILL
     mid-decode and asserts exactly this).
 
+  * **prefill/decode disaggregation** — ``RouterConfig.roles`` (built by
+    :func:`parse_disaggregate` from a ``prefill:N,decode:M`` spec) splits
+    the fleet: admissions (and every re-prefill fallback) place only on
+    prefill-role hosts, and once a stream's prefill has finished its exact
+    cache blocks are SHIPPED to a decode-role host over the transport
+    (``ship_blocks``/``recv_blocks``/``ack_ship``) — decode hosts never
+    dispatch a prefill instruction, so long-prompt admission work stops
+    head-of-line-blocking the decode batch (the GPTPU role-matching thesis
+    at fleet scale). Shipped blocks carry exact cache bits, so the handed-
+    off stream is bit-identical to never having moved; a failed ship falls
+    back to the re-prefill continuation path, which stays the oracle.
+
 Determinism: every host is batch-invariant (staggered == sequential) and
 greedy/seeded decode is a pure function of the token prefix, so ANY
 placement — spills, handoffs, mid-run drains, even crash re-admissions —
@@ -89,10 +101,73 @@ class RouterConfig:
         still to generate are preempted and re-admitted on another host;
         at/below it they finish on the draining host (a handoff costs one
         continuation prefill — not worth it for a tail of a few tokens).
+        Under disaggregation the same threshold gates block shipping: a
+        remainder at/below it finishes on its prefill host.
+    roles
+        Prefill/decode disaggregation (``parse_disaggregate`` builds this
+        from a ``--disaggregate prefill:N,decode:M`` spec): one role per
+        host. ``prefill`` hosts take every admission (fused/chunked prefill
+        AND the re-prefill fallback); ``decode`` hosts ONLY ever receive
+        shipped cache blocks and run the decode step — their OPQ flag audit
+        stays free of prefill instructions by construction. None (default)
+        disables role splitting: every host does both, exactly the pre-10
+        fleet.
+    ships_per_step
+        Ship pacing: at most this many block-ship import attempts per fleet
+        step. A ship is a synchronous export->wire->import leg inside the
+        step loop, so an unpaced burst (every stream of a fresh mix turning
+        eligible at once) would stall harvesting — and therefore every
+        OTHER stream's observed inter-token latency — for the whole burst.
+        Streams past the budget simply keep decoding on their prefill host
+        until a later step ships them.
     """
 
     n_hosts: int = 2
     handoff_threshold: int = 4
+    roles: Optional[Tuple[str, ...]] = None
+    ships_per_step: int = 1
+
+
+# refused imports (decode-side slot/lease backpressure) tolerated before a
+# parked ship gives up and falls back to re-prefill. Refusals are capacity
+# signals, not errors — a decode host refusing now admits once its streams
+# drain (tens of steps for a full slot set), so this is a wedged-host
+# safety valve, sized far above any healthy drain, not a fast-fail knob:
+# the fallback recomputes the prefill, which costs the bit-identity the
+# ship existed to preserve.
+_MAX_SHIP_TRIES = 256
+
+
+def parse_disaggregate(spec: str, n_hosts: int) -> Tuple[str, ...]:
+    """``--disaggregate`` spec -> per-host role tuple, prefill hosts first.
+    Accepts ``prefill:N,decode:M`` or the shorthand ``N:M``; N + M must
+    equal the fleet size and each role needs at least one host."""
+    counts = {"prefill": 0, "decode": 0}
+    parts = [p.strip() for p in spec.split(",") if p.strip()]
+    try:
+        if (len(parts) == 1 and ":" in parts[0]
+                and parts[0].split(":")[0].strip().isdigit()):
+            n, m = parts[0].split(":")
+            counts["prefill"], counts["decode"] = int(n), int(m)
+        else:
+            for part in parts:
+                role, n = part.split(":")
+                counts[role.strip()] += int(n)
+    except (KeyError, ValueError) as e:
+        raise ValueError(
+            f"--disaggregate expects 'prefill:N,decode:M' (or 'N:M'), "
+            f"got {spec!r}") from e
+    if counts["prefill"] < 1 or counts["decode"] < 1:
+        raise ValueError(
+            f"--disaggregate needs at least one host per role, got "
+            f"prefill:{counts['prefill']},decode:{counts['decode']}")
+    total = counts["prefill"] + counts["decode"]
+    if total != n_hosts:
+        raise ValueError(
+            f"--disaggregate assigns {total} hosts but the fleet has "
+            f"{n_hosts}")
+    return (("prefill",) * counts["prefill"]
+            + ("decode",) * counts["decode"])
 
 
 @dataclasses.dataclass
@@ -110,6 +185,10 @@ class RouterRequest:
     session: Optional[str]
     arrival_s: float
     tokens: List[int] = dataclasses.field(default_factory=list)
+    # worker-side emission time of each token (engine-stamped, monotonic
+    # epoch — see transport poll's "ts"): honest inter-token gaps even when
+    # a free-running worker's tokens reach the router in one burst
+    token_ts: List[float] = dataclasses.field(default_factory=list)
     hosts: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
     finish_s: Optional[float] = None
@@ -165,6 +244,23 @@ class Router:
             raise ValueError(f"n_hosts must be >= 1, got {self.rcfg.n_hosts}")
         if self.rcfg.handoff_threshold < 0:
             raise ValueError("handoff_threshold must be >= 0")
+        if self.rcfg.ships_per_step < 1:
+            raise ValueError("ships_per_step must be >= 1")
+        if self.rcfg.roles is not None:
+            roles = tuple(self.rcfg.roles)
+            if len(roles) != self.rcfg.n_hosts:
+                raise ValueError(
+                    f"roles assigns {len(roles)} hosts but the fleet has "
+                    f"{self.rcfg.n_hosts}")
+            bad = [r for r in roles if r not in ("prefill", "decode")]
+            if bad:
+                raise ValueError(f"unknown host roles {bad!r} (want "
+                                 f"'prefill' or 'decode')")
+            if "prefill" not in roles or "decode" not in roles:
+                raise ValueError(
+                    "disaggregation needs at least one prefill host and "
+                    "one decode host")
+            self.rcfg = dataclasses.replace(self.rcfg, roles=roles)
         if transports is None:
             transports = build_inproc_fleet(cfg, params, engine_cfg,
                                             self.rcfg.n_hosts,
@@ -182,6 +278,10 @@ class Router:
         # requests from a lost (or mid-drain-rejected) host awaiting a
         # surviving host with capacity; retried every step
         self._orphans: List[RouterRequest] = []
+        # shipped-but-unimported block payloads awaiting decode-host
+        # capacity; retried every step (the recv is idempotent, the source's
+        # export-ledger hold stays open until the outcome settles)
+        self._ship_parked: List[Dict] = []
         self._req_ids = itertools.count()
         self.completed: List[RouterRequest] = []
         # the OPQ-shaped placement ledger: placed/affinity_hits is the
@@ -190,6 +290,7 @@ class Router:
             "placed": 0, "affinity_hits": 0, "spills": 0, "rejected": 0,
             "drains": 0, "handoffs": 0, "requeued": 0,
             "hosts_lost": 0, "recovered": 0,
+            "ships": 0, "shipped_blocks": 0, "ship_fallbacks": 0,
         }
 
     @property
@@ -279,6 +380,18 @@ class Router:
                 if h not in self._draining and h not in self._lost
                 and h not in exclude]
 
+    def _admitting(self, exclude: Set[int] = frozenset()) -> List[int]:
+        """Hosts eligible for ADMISSION placement: alive, and under
+        disaggregation never a decode-role host. Admission dispatches
+        prefill — and so does every fallback (re-prefill continuation,
+        orphan re-admission), so routing them all through this filter is
+        what keeps a decode host's OPQ flag audit prefill-free no matter
+        which failure path ran."""
+        alive = self._alive(exclude)
+        if self.rcfg.roles is None:
+            return alive
+        return [h for h in alive if self.rcfg.roles[h] == "prefill"]
+
     def _place(self, key: str, prompt_len: int, max_new_tokens: int,
                exclude: Set[int] = frozenset()
                ) -> Optional[Tuple[int, bool, bool]]:
@@ -286,7 +399,7 @@ class Router:
         least-loaded accepting host (FCFS fallback; a bypassed pin counts as
         a spill). Returns (host, affinity_hit, spilled), or None when no
         host can ever take it. Mirrors opq lane-picking one level up."""
-        alive = self._alive(exclude)
+        alive = self._admitting(exclude)
         if not alive:
             return None
         pinned = self._affinity.get(key)
@@ -301,7 +414,7 @@ class Router:
             # the pinned host's pool is dry (or its door rejects): shed the
             # request rather than queue the fleet behind one host
             spilled = pinned not in self._lost
-        alive = self._alive(exclude)           # a probe may have lost a host
+        alive = self._admitting(exclude)       # a probe may have lost a host
         accepting = [h for h in sorted(alive, key=self._load)
                      if self._guard(h, self.transports[h].would_accept,
                                     prompt_len, max_new_tokens,
@@ -456,7 +569,11 @@ class Router:
         """Fold a preempted segment's authoritative wire state into the
         fleet request: everything past the harvest cursor (a free-running
         worker may be ahead of the last poll)."""
-        rreq.tokens.extend(int(t) for t in wire["tokens"][cursor:])
+        absorbed = wire["tokens"][cursor:]
+        rreq.tokens.extend(int(t) for t in absorbed)
+        # the wire form carries no emission times; absorb time is the best
+        # stand-in (preemption already interrupts the stream's cadence)
+        rreq.token_ts.extend([now()] * len(absorbed))
         if rreq.want_logprobs is not None:
             rreq.logprobs.extend(float(v)
                                  for v in wire.get("logprobs", [])[cursor:])
@@ -528,6 +645,144 @@ class Router:
             if host in self._lost:
                 continue
             self._harvest(host)
+        if self.rcfg.roles is not None:
+            self._disagg_handoff()
+
+    def _disagg_handoff(self) -> None:
+        """Move prefilled streams from prefill-role hosts onto decode-role
+        hosts by SHIPPING their exact cache blocks over the transport — no
+        recompute, so the continued stream is bit-identical to never having
+        moved. A stream becomes eligible once its first token was harvested
+        (its prefill is finished) and its remainder is worth the move
+        (handoff_threshold); with no decode host holding lease headroom it
+        simply keeps decoding where it is and is retried next step. A
+        REFUSED import (a free-running decode worker won the slot/lease
+        race between the headroom probe and the recv) is transient: the
+        extracted payload parks and the recv retries next step — it is
+        idempotent, so a retry never double-imports. Only a corrupt frame
+        or ``_MAX_SHIP_TRIES`` consecutive refusals fall back to the PR 5
+        re-prefill continuation path on a PREFILL host — the degenerate
+        oracle — so decode hosts stay prefill-free no matter which leg
+        fails; the source's export-ledger hold is released (``ack_ship``)
+        once the outcome settles, on every path."""
+        budget = self.rcfg.ships_per_step
+        if self._ship_parked:
+            parked, self._ship_parked = self._ship_parked, []
+            for item in parked:
+                if budget <= 0:
+                    self._ship_parked.append(item)
+                    continue
+                status = self._recv_install(item["entry"], item["rreq"],
+                                            item["src"])
+                if status == "shipped":
+                    budget -= 1
+                    continue
+                if status == "refused":
+                    budget -= 1            # a recv attempt was spent;
+                    item["tries"] += 1     # no-dst waits without burning
+                                           # retries: capacity WILL free
+                if (status in ("corrupt", "dead")
+                        or item["tries"] > _MAX_SHIP_TRIES):
+                    self._ship_fallback(item["rreq"], item["src"],
+                                        item["entry"]["payload_id"])
+                else:
+                    self._ship_parked.append(item)
+        src_keys = [k for k in self._live
+                    if self.rcfg.roles[k[0]] == "prefill"]
+        for key in src_keys:
+            if budget <= 0:
+                break                      # paced: the rest ship next steps
+            host, eid = key
+            rreq = self._live.get(key)
+            if rreq is None or host in self._lost:
+                continue
+            if not rreq.tokens:
+                continue                   # prefill not harvested yet
+            remaining = rreq.max_new_tokens - len(rreq.tokens)
+            if remaining <= self.rcfg.handoff_threshold:
+                continue                   # short tail: finish in place
+            if not self._ship_dsts(rreq):
+                continue                   # no decode capacity right now
+            t_src = self.transports[host]
+            entry = self._guard(host, t_src.ship_blocks, eid)
+            if host in self._lost:
+                continue                   # loss recovery re-placed it
+            if entry is None:
+                continue                   # finished meanwhile: next poll
+            # the stream is off the source engine now: fold its
+            # authoritative segment state in before deciding where it lands
+            del self._live[key]
+            cur = self._cursor.pop(key, 0)
+            wire = entry["wire"]
+            pid = entry["payload_id"]
+            self._absorb_segment(rreq, wire, cur)
+            if rreq.max_new_tokens - len(rreq.tokens) <= 0:
+                self._guard(host, t_src.ack_ship, pid)
+                self._finalize(rreq, wire.get("finish_reason") or "length")
+                continue
+            status = self._recv_install(entry, rreq, host)
+            budget -= 1
+            if status == "corrupt":
+                self._ship_fallback(rreq, host, pid)
+            elif status != "shipped":
+                self._ship_parked.append(
+                    {"entry": entry, "rreq": rreq, "src": host, "tries": 1})
+
+    def _ship_dsts(self, rreq: RouterRequest) -> List[int]:
+        """Alive decode-role hosts with lease headroom for this stream."""
+        return [h for h in self._alive()
+                if self.rcfg.roles[h] == "decode"
+                and self._guard(h, self.transports[h].lease_headroom,
+                                len(rreq.prompt), rreq.max_new_tokens,
+                                default=False)]
+
+    def _recv_install(self, entry: Dict, rreq: RouterRequest,
+                      src: int) -> str:
+        """Offer a shipped payload to the least-loaded eligible decode host.
+        Returns ``"shipped"`` (imported + installed, source hold acked),
+        ``"refused"``/``"no-dst"`` (transient: park and retry), ``"dead"``
+        (no decode host left alive: fall back now), or ``"corrupt"`` (the
+        importer rejected the frame: fall back)."""
+        alive = [h for h in self._alive()
+                 if self.rcfg.roles[h] == "decode"]
+        if not alive:
+            return "dead"
+        dsts = self._ship_dsts(rreq)
+        if not dsts:
+            return "no-dst"
+        dst = min(dsts, key=self._load)
+        try:
+            new_id = self._guard(dst, self.transports[dst].recv_blocks,
+                                 entry)
+        except ValueError:
+            return "corrupt"               # importer refused: bad frame
+        if new_id is None:
+            return "refused"               # slot/lease race: retry
+        self._guard(src, self.transports[src].ack_ship,
+                    entry["payload_id"])
+        wire = entry["wire"]
+        self._live[(dst, new_id)] = rreq
+        self._cursor[(dst, new_id)] = len(wire["tokens"])
+        rreq.hosts.append(dst)
+        self.counters["ships"] += 1
+        self.counters["shipped_blocks"] += int(entry["payload"]["n_blocks"])
+        return "shipped"
+
+    def _ship_fallback(self, rreq: RouterRequest, src: int,
+                       payload_id: str) -> None:
+        """A ship that cannot complete: release the source's export-ledger
+        hold and continue by re-prefill on a PREFILL host (decode hosts
+        never prefill, even on the failure path)."""
+        self._guard(src, self.transports[src].ack_ship, payload_id)
+        self.counters["ship_fallbacks"] += 1
+        cont = np.concatenate(
+            [rreq.prompt, np.asarray(rreq.tokens, np.int32)])
+        rem = rreq.max_new_tokens - len(rreq.tokens)
+        placed = self._place(self._key(rreq.prompt, rreq.session),
+                             len(cont), rem)
+        if placed is None or not self._submit_segment(
+                rreq, placed[0], cont, rem):
+            self._orphans.append(rreq)
 
     def _harvest(self, host: int) -> None:
         """Poll one host for token deltas past each live request's cursor.
@@ -551,6 +806,11 @@ class Router:
                 continue
             new = [int(t) for t in delta.get("t", ())]
             rreq.tokens.extend(new)
+            ts = [float(v) for v in delta.get("ts", ())]
+            # tolerate older workers without timestamps: harvest time is
+            # the (burst-quantized) fallback
+            rreq.token_ts.extend(ts if len(ts) == len(new)
+                                 else [now()] * len(new))
             self._cursor[key] += len(new)
             if rreq.want_logprobs is not None:
                 rreq.logprobs.extend(float(v) for v in delta.get("lp", ()))
@@ -586,7 +846,7 @@ class Router:
         # un-finalized placements count as work even when every host is idle:
         # a free-running worker can finish (and go idle) between fleet steps,
         # and the completion still has to be harvested by a poll
-        if self._orphans or self._live:
+        if self._orphans or self._live or self._ship_parked:
             return True
         return any(self._guard(h, self.transports[h].has_work, default=False)
                    for h in range(self.rcfg.n_hosts) if h not in self._lost)
@@ -632,6 +892,8 @@ class Router:
             else float("inf") if fleet["tokens_generated"] else 0.0)
         return {
             "router": dict(self.counters, hosts=self.rcfg.n_hosts,
+                           roles=(list(self.rcfg.roles)
+                                  if self.rcfg.roles else None),
                            draining=sorted(self._draining),
                            lost=sorted(self._lost),
                            orphans=len(self._orphans),

@@ -100,6 +100,20 @@ class Scheduler:
             groups.setdefault(key, []).append((slot, req))
         return [(b, pairs) for (b, _), pairs in sorted(groups.items())]
 
+    def admit_seeded(self, request) -> "int | None":
+        """Place an externally-seeded request straight into the in-flight
+        batch, bypassing the waiting queue and prefill planning entirely.
+        The caller has already materialised the slot's KV (e.g. from an
+        imported cross-host block payload), so there is nothing to prefill —
+        the request joins the next decode step as-is. Returns the slot, or
+        None when no slot is free (the caller keeps the payload and retries
+        or falls back to re-prefill)."""
+        if not self.free:
+            return None
+        slot = self.free.pop()
+        self.active[slot] = request
+        return slot
+
     def decode_batch(self) -> Tuple[np.ndarray, np.ndarray]:
         """The in-flight batch as fixed-shape host arrays: ``tokens``
         (n_slots, 1) int32 — each active slot's last emitted token, the

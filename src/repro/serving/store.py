@@ -284,6 +284,29 @@ def _copy_block(cache, src, dst):
     return out
 
 
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _import_blocks_write(cache, blocks, slot, n_valid, payload):
+    """Cross-host block import: write whole shipped pool blocks
+    (``payload`` leaves (L, nb, bs, ...)) into the destination pool cells
+    ``blocks`` and set the slot's index to the shipped valid length. The
+    slot's table row was already populated by its lease; the shipped bits
+    land verbatim, so the imported cache is bit-equal to the exporter's —
+    which is what lets a disaggregated decode host skip prefill entirely.
+    ``blocks`` is padded with 0 (the null block) and ``payload`` with
+    pristine fill to a fixed width, so every import shares one compiled
+    shape per pool geometry."""
+    out = {}
+    for name, leaf in cache.items():
+        if name == "index":
+            out[name] = leaf.at[slot].set(n_valid)
+        elif name == "tables":
+            out[name] = leaf
+        else:
+            out[name] = leaf.at[:, blocks].set(
+                payload[name].astype(leaf.dtype))
+    return out
+
+
 @jax.jit
 def _gather_prefix_rows(cache, tables):
     """Gather a (B, nb) block-table excerpt into contiguous K/V rows
@@ -618,6 +641,14 @@ class PagedKVStore(SlotStore):
     prefixes under pool pressure. ``lease`` then takes the prompt ``tokens``
     and leases matched blocks by refcount instead of drawing fresh ones —
     ``prefix_lease_info`` tells the engine how much prefill to skip.
+
+    Cross-host shipping (prefill/decode disaggregation):
+    ``export_blocks`` serializes a slot's written blocks into a
+    layout-tagged, checksummed payload and parks the lease in an export
+    ledger (blocks stay referenced until ``release_exported`` — no re-lease
+    of an unacked block); ``import_blocks`` validates and adopts such a
+    payload into a freshly leased slot on another host's pool, bit-exactly,
+    with zero prefill dispatches on the importing engine.
     """
 
     kind = "paged"
@@ -668,6 +699,14 @@ class PagedKVStore(SlotStore):
         # per-slot prefix-lease metadata (prefix mode only): what matched,
         # where suffix prefill starts, whether a COW fork happened
         self._slot_meta: Dict[int, Dict] = {}
+        # cross-host export ledger: payload_id -> the blocks an exported
+        # slot's lease transferred to (rtp-llm RequestBlockBuffer shape).
+        # The ledger HOLDS the lease refcount until release_exported(), so
+        # an exported-but-unacked block can never be re-leased as fresh —
+        # it stays "referenced" in the census until the importer acks.
+        self._exported: Dict[str, List[int]] = {}
+        self.blocks_exported = 0
+        self.blocks_imported = 0
         self.prefix_hits = 0
         self.prefix_blocks_reused = 0
         self.prefix_tokens_reused = 0
@@ -1010,6 +1049,171 @@ class PagedKVStore(SlotStore):
         self.cache = _paged_reset(self.cache, jnp.asarray(padded, jnp.int32),
                                   jnp.int32(slot))
 
+    # ------------------------------------------------- cross-host shipping
+
+    def _payload_crc(self, header: str, leaves: Dict[str, np.ndarray]) -> int:
+        """Checksum over the payload header + every leaf's raw bytes (name
+        order fixed). Import recomputes and refuses on mismatch — a frame
+        corrupted in flight must surface as an error, never as silently
+        wrong cache bits."""
+        crc = zlib.crc32(header.encode())
+        for name in sorted(leaves):
+            crc = zlib.crc32(np.ascontiguousarray(leaves[name]).tobytes(),
+                             crc)
+        return crc
+
+    def export_blocks(self, slot: int, *, payload_id: str) -> Dict:
+        """Serialize ``slot``'s written cache blocks for shipping to another
+        host's pool and move the slot's lease into the export ledger. The
+        payload carries a layout tag (block size + per-leaf dtype/shape, so
+        int8-KV scales travel with their blocks), the valid length, the raw
+        block contents for every position written so far, and a checksum.
+
+        Refcount correctness: the slot's reference on each leased block
+        TRANSFERS to the ledger entry — nothing is decremented, scrubbed, or
+        freed here, so shared prefix blocks stay intact and no exported
+        block can be re-leased while the ship is in flight. The slot itself
+        is cleared (table row zeroed, index parked) and is immediately
+        reusable. ``release_exported`` settles the ledger once the importer
+        acked (or the router gave up and fell back to re-prefill)."""
+        if payload_id in self._exported:
+            raise ValueError(f"payload id {payload_id!r} already exported")
+        blocks = self._leased.pop(slot, None)
+        if blocks is None:
+            raise KeyError(f"slot {slot} holds no lease to export")
+        self._slot_meta.pop(slot, None)
+        n_valid = int(np.asarray(self.cache["index"])[slot])
+        nb = math.ceil(n_valid / self.block_size)
+        # gather at a FIXED index width (null-block pad), then slice on the
+        # host: every export shares one compiled gather per pool geometry
+        # instead of compiling per block count — ships stay O(copy), not
+        # O(XLA compile)
+        idx = np.zeros((self.blocks_per_slot,), np.int32)
+        idx[:nb] = blocks[:nb]
+        idx_dev = jnp.asarray(idx)
+        leaves = {
+            name: np.asarray(leaf[:, idx_dev])[:, :nb] for name, leaf in
+            self.cache.items() if name not in ("index", "tables")}
+        header = f"{payload_id}:{n_valid}:{nb}:{self.block_size}"
+        payload = {
+            "payload_id": payload_id,
+            "n_valid": n_valid,
+            "n_blocks": nb,
+            "layout": {
+                "block_size": self.block_size,
+                "leaves": {name: {"dtype": str(arr.dtype),
+                                  "shape": [int(s) for s in arr.shape]}
+                           for name, arr in leaves.items()},
+            },
+            "leaves": leaves,
+            "crc": self._payload_crc(header, leaves),
+        }
+        self._exported[payload_id] = blocks
+        self.blocks_exported += nb
+        # clear the slot WITHOUT scrubbing its blocks (the ledger owns them
+        # now): the all-null pad means _paged_reset scrubs only block 0
+        self._tables[slot, :] = 0
+        self.cache = _paged_reset(
+            self.cache, jnp.zeros((self.blocks_per_slot,), jnp.int32),
+            jnp.int32(slot))
+        return payload
+
+    def release_exported(self, payload_id: str) -> bool:
+        """Settle one export-ledger entry: drop the ledger's reference on
+        every block it held, scrubbing + freeing the ones that hit zero —
+        exactly ``reset``'s decision per block, so trie-cached and
+        still-shared blocks survive. Idempotent: releasing an unknown (or
+        already-released) payload id is a no-op returning False, which is
+        what makes a retried ack safe."""
+        blocks = self._exported.pop(payload_id, None)
+        if blocks is None:
+            return False
+        scrub: List[int] = []
+        for b in blocks:
+            assert self._ref[b] > 0, f"double-free of exported block {b}"
+            self._ref[b] -= 1
+            if self._ref[b] == 0:
+                if b in self._block_node:
+                    self._nodes[self._block_node[b]]["tick"] = self._tick()
+                else:
+                    scrub.append(b)
+        if scrub:
+            self._scrub_free(scrub)
+        return True
+
+    def import_blocks(self, slot: int, payload: Dict) -> None:
+        """Adopt a shipped block payload into ``slot``'s freshly leased
+        blocks: validate the layout tag and checksum against this pool,
+        then write the shipped bits verbatim and set the slot's index to
+        the shipped valid length — the imported cache is bit-equal to the
+        exporter's, so decode continues with zero prefill dispatches.
+        Raises ValueError on any mismatch (geometry, dtype, truncation,
+        checksum) BEFORE touching device state; the caller unwinds the
+        lease with ``reset``. Imported blocks are private to the slot and
+        are never registered in the prefix trie (their token identity is
+        the exporter's concern, not this pool's)."""
+        blocks = self._leased.get(slot)
+        if blocks is None:
+            raise KeyError(f"slot {slot} holds no lease to import into")
+        layout = payload.get("layout") or {}
+        if int(layout.get("block_size", -1)) != self.block_size:
+            raise ValueError(
+                f"shipped block_size {layout.get('block_size')} != pool "
+                f"block_size {self.block_size}")
+        n_valid = int(payload["n_valid"])
+        nb = int(payload["n_blocks"])
+        if nb != math.ceil(n_valid / self.block_size):
+            raise ValueError(
+                f"shipped payload claims {nb} blocks for n_valid {n_valid} "
+                f"(block_size {self.block_size})")
+        if nb > len(blocks):
+            raise ValueError(
+                f"shipped payload needs {nb} blocks but the lease holds "
+                f"{len(blocks)}")
+        leaves = payload.get("leaves") or {}
+        names = {n for n in self.cache if n not in ("index", "tables")}
+        if set(leaves) != names or set(layout.get("leaves") or {}) != names:
+            raise ValueError(
+                f"shipped leaves {sorted(leaves)} != pool leaves "
+                f"{sorted(names)} (kv dtype/scale layout mismatch)")
+        for name in sorted(names):
+            arr = np.asarray(leaves[name])
+            pool_leaf = self.cache[name]
+            want = ((pool_leaf.shape[0], nb) + tuple(pool_leaf.shape[2:]))
+            tag = layout["leaves"][name]
+            if (str(arr.dtype) != str(tag["dtype"])
+                    or list(arr.shape) != [int(s) for s in tag["shape"]]):
+                raise ValueError(
+                    f"shipped leaf {name!r} does not match its layout tag "
+                    f"(payload truncated or corrupted)")
+            if (tuple(arr.shape) != want
+                    or str(arr.dtype) != str(pool_leaf.dtype)):
+                raise ValueError(
+                    f"shipped leaf {name!r} {arr.dtype}{list(arr.shape)} "
+                    f"does not fit pool leaf {pool_leaf.dtype}"
+                    f"{[want[0], nb] + list(want[2:])}")
+            leaves[name] = arr
+        header = (f"{payload['payload_id']}:{n_valid}:{nb}:"
+                  f"{self.block_size}")
+        if self._payload_crc(header, leaves) != int(payload["crc"]):
+            raise ValueError(
+                f"shipped payload {payload['payload_id']!r} failed its "
+                f"checksum — refusing to import corrupt blocks")
+        dst = blocks[:nb] + [0] * (self.blocks_per_slot - nb)
+        padded = {}
+        for name in names:
+            pool_leaf = self.cache[name]
+            full = np.full(
+                (pool_leaf.shape[0], self.blocks_per_slot)
+                + tuple(pool_leaf.shape[2:]),
+                pristine_value(name), np.asarray(leaves[name]).dtype)
+            full[:, :nb] = leaves[name]
+            padded[name] = jnp.asarray(full)
+        self.cache = _import_blocks_write(
+            self.cache, jnp.asarray(dst, jnp.int32), jnp.int32(slot),
+            jnp.int32(n_valid), padded)
+        self.blocks_imported += nb
+
     # ---------------------------------------------------------- decode bridge
 
     def decode_cache(self) -> Dict:
@@ -1081,10 +1285,12 @@ class PagedKVStore(SlotStore):
     def debug_block_census(self) -> Dict[str, List[int]]:
         """The block-lifecycle partition, for invariant tests: every non-null
         block must be in EXACTLY ONE of ``free`` (on the free list, pristine),
-        ``referenced`` (refcount > 0: leased, possibly by several slots), or
-        ``cached_unreferenced`` (held only by the prefix trie, evictable).
-        Conservation — the three sets disjoint and their union == all blocks —
-        is the no-leak/no-double-own invariant the property test drives."""
+        ``referenced`` (refcount > 0: leased, possibly by several slots —
+        export-ledger holds count here, so an exported-but-unacked block is
+        referenced, never free), or ``cached_unreferenced`` (held only by
+        the prefix trie, evictable). Conservation — the three sets disjoint
+        and their union == all blocks — is the no-leak/no-double-own
+        invariant the property test drives, on both ends of a ship."""
         return {
             "free": sorted(self._free),
             "referenced": [b for b in range(1, self.n_blocks)
@@ -1126,6 +1332,10 @@ class PagedKVStore(SlotStore):
             "blocks_used": used,
             "table_uploads": self.table_uploads,
             "slots": self.n_slots,
+            "blocks_exported": self.blocks_exported,
+            "blocks_imported": self.blocks_imported,
+            "blocks_export_pending": sum(
+                len(bs) for bs in self._exported.values()),
         }
         if self.prefix_cache:
             out["prefix_cached_blocks"] = self._n_evictable()

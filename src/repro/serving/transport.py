@@ -292,6 +292,9 @@ class HostTransport(Protocol):
     def evict_queued(self, ids: Sequence[int]) -> List[int]: ...
     def inflight(self) -> List[Dict]: ...
     def preempt(self, req_id: int) -> Optional[Dict]: ...
+    def ship_blocks(self, req_id: int) -> Optional[Dict]: ...
+    def recv_blocks(self, entry: Dict) -> Optional[int]: ...
+    def ack_ship(self, payload_id: str) -> bool: ...
     def embed(self, prompt: Sequence[int]) -> Dict: ...
     def stats(self) -> Dict: ...
     def probe(self) -> bool: ...
@@ -307,6 +310,14 @@ class EngineHost:
     def __init__(self, engine: Engine):
         self.engine = engine
         self._by_id: Dict[int, Request] = {}
+        # cross-host block shipping state (prefill/decode disaggregation):
+        # outbound entries keyed by payload id (and by request id, so a
+        # retried ship_blocks returns the SAME cursor-named entry), plus the
+        # inbound dedup map a retried recv_blocks resolves against — a
+        # duplicated frame can therefore never double-import a payload
+        self._shipped: Dict[str, Dict] = {}
+        self._ship_pid: Dict[int, str] = {}
+        self._imported: Dict[str, int] = {}
 
     def would_accept(self, prompt_len: int, max_new_tokens: int) -> bool:
         return bool(self.engine.would_accept(prompt_len, max_new_tokens))
@@ -349,7 +360,12 @@ class EngineHost:
             if req is None:
                 continue
             n = int(n)
-            d: Dict = {"t": [int(t) for t in req.tokens[n:]]}
+            d: Dict = {"t": [int(t) for t in req.tokens[n:]],
+                       # emission timestamps (monotonic epoch, shared across
+                       # processes on Linux): a free-running worker's tokens
+                       # arrive in bursts, so harvest times measure the
+                       # caller's poll cadence — these measure the engine's
+                       "ts": [float(v) for v in req.token_ts[n:]]}
             if req.want_logprobs is not None:
                 d["lp"] = [float(v) for v in req.logprobs[n:]]
                 d["tl"] = [[[int(t), float(v)] for t, v in row]
@@ -395,6 +411,66 @@ class EngineHost:
             return None
         self._by_id.pop(int(req_id), None)
         return req.to_wire()
+
+    def ship_blocks(self, req_id: int) -> Optional[Dict]:
+        """Export one in-flight request's stream state AND its exact cache
+        blocks as a ship entry (``{"payload_id", "wire", "payload"}``) for a
+        decode host to adopt. Idempotent by construction: the entry is cached
+        under the request id, so a retried ship returns the same cursor-named
+        payload — combined with ``recv_blocks``'s dedup, a duplicated frame
+        can never double-import. The blocks stay on the engine's export
+        ledger (unreusable, unfreed) until ``ack_ship``. None when the
+        request already finished here (the next poll reports it)."""
+        pid = self._ship_pid.get(int(req_id))
+        if pid is not None:
+            return self._shipped[pid]
+        try:
+            req, payload = self.engine.extract_seeded(int(req_id))
+        except KeyError:
+            return None
+        self._by_id.pop(int(req_id), None)
+        entry = {"payload_id": payload["payload_id"],
+                 "wire": req.to_wire(), "payload": payload}
+        self._shipped[entry["payload_id"]] = entry
+        self._ship_pid[int(req_id)] = entry["payload_id"]
+        return entry
+
+    def recv_blocks(self, entry: Dict) -> Optional[int]:
+        """Adopt a shipped entry: lease a slot, import the payload's cache
+        bits (validated before any device write), and continue the stream
+        with zero prefill dispatches. Dedup on the cursor-named payload id —
+        a retried recv of an already-imported payload returns the SAME local
+        request id instead of importing twice. Returns None when refused
+        (no free slot / lease backpressure: the shipper falls back to
+        re-prefill continuation); raises ValueError on a corrupt payload."""
+        pid = str(entry["payload_id"])
+        if pid in self._imported:
+            return self._imported[pid]
+        wire = entry["wire"]
+        req = self.engine.submit_seeded(
+            wire["prompt"], int(wire["max_new_tokens"]), wire["tokens"],
+            entry["payload"],
+            sampling=sampling_from_wire(wire.get("sampling")),
+            stop_history=tuple(int(t) for t in wire.get("stop_history") or ()),
+            want_logprobs=wire.get("want_logprobs"),
+            logprobs=wire.get("logprobs") or (),
+            top_logprobs=wire.get("top_logprobs") or ())
+        if req is None:
+            return None
+        self._imported[pid] = req.id
+        self._by_id[req.id] = req
+        return req.id
+
+    def ack_ship(self, payload_id: str) -> bool:
+        """Settle one outbound ship: release the export ledger's block hold
+        and drop the cached entry. Called on BOTH outcomes — successful
+        import (the blocks live on the decode host now) and fallback (the
+        re-prefill continuation owns the stream). Idempotent."""
+        pid = str(payload_id)
+        entry = self._shipped.pop(pid, None)
+        if entry is not None:
+            self._ship_pid.pop(int(entry["wire"]["id"]), None)
+        return bool(self.engine.release_exported(pid))
 
     def embed(self, prompt) -> Dict:
         return self.engine.embed(np.asarray(prompt, np.int32))
@@ -475,6 +551,15 @@ class InProcessTransport:
     def preempt(self, req_id):
         return self._timed(self.host.preempt, req_id)
 
+    def ship_blocks(self, req_id):
+        return self._timed(self.host.ship_blocks, req_id)
+
+    def recv_blocks(self, entry):
+        return self._timed(self.host.recv_blocks, entry)
+
+    def ack_ship(self, payload_id):
+        return self._timed(self.host.ack_ship, payload_id)
+
     def embed(self, prompt):
         return self._timed(self.host.embed, prompt)
 
@@ -506,9 +591,14 @@ def build_inproc_fleet(cfg, params, engine_cfg: Optional[EngineConfig] = None,
 # reads. submit/evict/preempt mutate — a lost reply leaves the mutation's
 # fate unknown, so they surface TransportError instead of retrying (the
 # Router treats that as a lost host and re-places from harvested state).
+# The block-shipping trio mutates but is retry-safe by protocol design:
+# ship_blocks caches its cursor-named entry per request, recv_blocks dedups
+# on the payload id, and ack_ship releases idempotently — a retried frame
+# replays to the same state it left.
 _IDEMPOTENT_OPS = frozenset({
     "would_accept", "lease_headroom", "load", "has_work", "poll",
     "inflight", "stats", "probe", "embed",
+    "ship_blocks", "recv_blocks", "ack_ship",
 })
 
 
@@ -676,6 +766,16 @@ class SubprocessTransport:
 
     def preempt(self, req_id):
         return self._call("preempt", {"id": int(req_id)})
+
+    def ship_blocks(self, req_id):
+        return self._call("ship_blocks", {"id": int(req_id)})
+
+    def recv_blocks(self, entry):
+        val = self._call("recv_blocks", {"entry": entry})
+        return None if val is None else int(val)
+
+    def ack_ship(self, payload_id):
+        return bool(self._call("ack_ship", {"payload_id": str(payload_id)}))
 
     def embed(self, prompt):
         val = self._call("embed", {"prompt": [int(t) for t in prompt]})
